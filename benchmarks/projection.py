@@ -1,0 +1,51 @@
+"""Thesis §5.7.3 / Table 5-8 analog: next-generation device projection.
+
+The thesis projects Stratix V / Arria 10 results onto the then-upcoming
+Stratix 10 using its validated performance model. We project every
+stencil's v5e-modeled numbers onto a v5p-class part with the same
+three-term model, reporting the speedup and whether the bottleneck
+migrates (the thesis's key observation: more compute without
+proportional bandwidth shifts designs toward memory-bound).
+"""
+from __future__ import annotations
+
+from repro.core import perf_model as pm
+from repro.core.stencil import diffusion
+
+GRIDS = {2: (8192, 8192), 3: (512, 512, 512)}
+N_STEPS = 64
+
+
+def run() -> list[dict]:
+    rows = []
+    for dims in (2, 3):
+        for radius in (1, 2, 3, 4):
+            spec = diffusion(dims, radius)
+            grid = GRIDS[dims]
+            plan_now = pm.select_config(spec, grid, N_STEPS,
+                                        tpu=pm.V5E, top_k=1)[0]
+            now = pm.stencil_roofline(plan_now, N_STEPS, tpu=pm.V5E)
+            g_now = pm.predict_gflops(plan_now, N_STEPS, tpu=pm.V5E)
+            # re-tune for the projected part (bigger VMEM -> new optimum)
+            plan_nxt = pm.select_config(spec, grid, N_STEPS,
+                                        tpu=pm.V5P_PROJECTION, top_k=1)[0]
+            nxt = pm.stencil_roofline(plan_nxt, N_STEPS,
+                                      tpu=pm.V5P_PROJECTION)
+            g_nxt = pm.predict_gflops(plan_nxt, N_STEPS,
+                                      tpu=pm.V5P_PROJECTION)
+            rows.append({
+                "name": f"projection_{dims}d_r{radius}",
+                "us": nxt.t_predicted * 1e6,
+                "derived": (f"v5e={g_now:.0f}GF/s({now.dominant},"
+                            f"bx={plan_now.bx},bt={plan_now.bt}) -> "
+                            f"proj={g_nxt:.0f}GF/s({nxt.dominant},"
+                            f"bx={plan_nxt.bx},bt={plan_nxt.bt}) "
+                            f"speedup={now.t_predicted/nxt.t_predicted:.2f}x"
+                            " (Table 5-8)"),
+            })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r['name']},{r['us']:.1f},{r['derived']}")

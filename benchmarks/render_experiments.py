@@ -1,0 +1,81 @@
+"""Render the §Dry-run and §Roofline tables into EXPERIMENTS.md from the
+cached dry-run cells.
+
+  PYTHONPATH=src python -m benchmarks.render_experiments
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+
+from repro.launch import roofline
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+EXP = os.path.join(ROOT, "EXPERIMENTS.md")
+
+
+def dryrun_table() -> str:
+    cells = roofline.load_cells()
+    hdr = ("| arch | shape | mesh | status | compile (s) | HBM GiB/dev "
+           "| collectives (per scan body) |\n|---|---|---|---|---|---|---|")
+    rows = [hdr]
+    order = {"single": 0, "multi": 1}
+    cells.sort(key=lambda c: (c["arch"], c["shape"],
+                              order.get(c.get("mesh"), 2)))
+    n_ok = n_skip = 0
+    for c in cells:
+        if c["status"] == "ok":
+            n_ok += 1
+            counts = ", ".join(f"{k}:{v}" for k, v in
+                               sorted(c["collective_counts"].items()))
+            hbm = c["memory"]["total_hbm_bytes"] / 2 ** 30
+            fits = "" if hbm <= 16 else " ⚠ exceeds 16 GiB"
+            rows.append(f"| {c['arch']} | {c['shape']} | {c['mesh']} | ok "
+                        f"| {c.get('compile_s', 0):.0f} "
+                        f"| {hbm:.2f}{fits} | {counts} |")
+        elif c["status"] == "skipped":
+            n_skip += 1
+            rows.append(f"| {c['arch']} | {c['shape']} | {c['mesh']} "
+                        f"| skipped | — | — | {c['reason']} |")
+        else:
+            rows.append(f"| {c['arch']} | {c['shape']} | {c['mesh']} "
+                        f"| **{c['status']}** | — | — "
+                        f"| {c.get('error', '')[:90]} |")
+    rows.append(f"\n**{n_ok} compiled cells, {n_skip} assignment-mandated "
+                f"skips, {len(cells) - n_ok - n_skip} failures.**")
+    return "\n".join(rows)
+
+
+def roofline_table() -> str:
+    rows = [a for c in roofline.load_cells("single")
+            if (a := roofline.analyze(c))]
+    md = roofline.markdown_table(rows)
+    probed = sum(r["probed"] for r in rows)
+    md += (f"\n\n{probed}/{len(rows)} cells probe-corrected. "
+           "Per-cell levers:\n")
+    for r in rows:
+        md += (f"\n* **{r['arch']} × {r['shape']}** ({r['dominant']}-bound,"
+               f" MFU@roof {r['mfu_at_roofline']:.3f}): {r['lever']}")
+    return md
+
+
+def main():
+    with open(EXP) as f:
+        text = f.read()
+    text = re.sub(r"<!-- DRYRUN_TABLE -->.*?(?=\n## )",
+                  "<!-- DRYRUN_TABLE -->\n" + dryrun_table() + "\n\n",
+                  text, flags=re.S) if "<!-- DRYRUN_TABLE -->" in text \
+        else text
+    text = re.sub(r"<!-- ROOFLINE_TABLE -->.*?(?=\n## )",
+                  "<!-- ROOFLINE_TABLE -->\n" + roofline_table() + "\n\n",
+                  text, flags=re.S) if "<!-- ROOFLINE_TABLE -->" in text \
+        else text
+    with open(EXP, "w") as f:
+        f.write(text)
+    print("EXPERIMENTS.md tables rendered "
+          f"({len(roofline.load_cells())} cells).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,123 @@
+"""Thesis ch.4 analog: Rodinia ports, optimization ladder speed-ups
+(Tables 4-3 .. 4-9).
+
+For each benchmark we time the *direct port* tier against the *advanced*
+tier on this host (wall clock; the thesis's speed-up-over-baseline
+column) and, for the stencil-family apps, also report the v5e-modeled
+roofline numbers that the dry-run methodology produces for the TPU
+target. Inputs are scaled to keep total runtime tractable on 1 CPU
+core; the *ratios* are the reproduced quantity.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.apps import hotspot, hotspot3d, lud, nw, pathfinder, srad
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _time(fn, repeats=3):
+    fn()  # warmup / compile
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        r = fn()
+        jax.block_until_ready(r)
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def run() -> list[dict]:
+    rows = []
+
+    # --- NW (Table 4-3): sequential DP vs wavefront ---
+    # Host note: XLA:CPU runs the scalar cell loop at ~10ns/cell, so the
+    # CPU prefers the sequential form — exactly the thesis's CPU-vs-
+    # accelerator point. On the v5e target the sequential form is N^2
+    # dependent steps while the wavefront is 2N vector steps (ch.3
+    # pipeline model): modeled speedup ~ N/2.
+    n = 256
+    ref_mat = nw.random_problem(KEY, n)
+    t_base = _time(lambda: nw.nw_reference(ref_mat))
+    t_opt = _time(lambda: nw.nw_wavefront(ref_mat))
+    rows.append({"name": "nw_baseline", "us": t_base * 1e6,
+                 "derived": "cell-sequential DP (None tier)"})
+    rows.append({"name": "nw_wavefront", "us": t_opt * 1e6,
+                 "derived": (f"host_speedup={t_base / t_opt:.2f}x; "
+                             f"v5e-modeled={n // 2}x (N^2 dependent steps"
+                             f" -> 2N vector steps; Table 4-3)")})
+
+    # --- Hotspot (Table 4-4): per-step sweeps vs temporal blocking ---
+    t, p = hotspot.random_problem(KEY, 256, 1024)
+    steps = 12
+    t_base = _time(lambda: hotspot.hotspot_reference(t, p, steps), 2)
+    t_opt = _time(lambda: hotspot.hotspot_blocked(
+        t, p, steps, bt=4, bx=512, backend="reference"), 2)
+    rows.append({"name": "hotspot_baseline", "us": t_base * 1e6,
+                 "derived": "1 sweep/step"})
+    rows.append({"name": "hotspot_blocked", "us": t_opt * 1e6,
+                 "derived": f"speedup={t_base / t_opt:.1f}x bt=4 "
+                            "(Table 4-4)"})
+
+    # --- Hotspot3D (Table 4-5) ---
+    t3, p3 = hotspot3d.random_problem(KEY, 32, 64, 512)
+    t_base = _time(lambda: hotspot3d.hotspot3d_reference(t3, p3, 8), 2)
+    t_opt = _time(lambda: hotspot3d.hotspot3d_blocked(
+        t3, p3, 8, bt=2, bx=256, backend="reference"), 2)
+    rows.append({"name": "hotspot3d_baseline", "us": t_base * 1e6,
+                 "derived": "1 sweep/step"})
+    rows.append({"name": "hotspot3d_blocked", "us": t_opt * 1e6,
+                 "derived": f"speedup={t_base / t_opt:.1f}x bt=2 "
+                            "(Table 4-5)"})
+
+    # --- Pathfinder (Table 4-6): per-row dispatch vs fused scan ---
+    w = pathfinder.random_problem(KEY, 512, 4096)
+    t_base = _time(lambda: pathfinder.pathfinder_reference(w), 2)
+    t_opt = _time(lambda: pathfinder.pathfinder_fused(w))
+    rows.append({"name": "pathfinder_baseline", "us": t_base * 1e6,
+                 "derived": "1 kernel/row"})
+    rows.append({"name": "pathfinder_fused", "us": t_opt * 1e6,
+                 "derived": f"speedup={t_base / t_opt:.1f}x (Table 4-6)"})
+
+    # --- SRAD (Table 4-7): multikernel vs fused ---
+    # The thesis's SRAD rewrite removes >10x global traffic by fusing
+    # the reduce + two stencil passes. Off-chip-traffic ratio (the
+    # TPU-relevant quantity): multikernel moves ~14 grids/iteration
+    # (1 read reduce; 1 read + 5 writes pass1; 6 reads + 1 write
+    # pass2) vs ~3 for the fused kernel. Host wall-clock is also
+    # reported (XLA:CPU's while-loop handling favors separate kernels
+    # at cache-resident sizes — an artifact the thesis's FPGA/GPU
+    # targets don't share).
+    img = srad.random_problem(KEY, 256, 256)
+    t_base = _time(lambda: srad.srad_multikernel(img, 10), 2)
+    t_opt = _time(lambda: srad.srad_fused(img, 10), 2)
+    rows.append({"name": "srad_multikernel", "us": t_base * 1e6,
+                 "derived": "6-kernel Rodinia structure, ~14 grids/iter "
+                            "traffic"})
+    rows.append({"name": "srad_fused", "us": t_opt * 1e6,
+                 "derived": (f"host_speedup={t_base / t_opt:.2f}x; "
+                             "traffic_ratio=4.7x fewer grid moves "
+                             "(Table 4-7)")})
+
+    # --- LUD (Table 4-8): unblocked vs blocked (MXU matmuls) ---
+    a = lud.random_problem(KEY, 512)
+    t_base = _time(lambda: lud.lud_unblocked(a), 2)
+    t_opt = _time(lambda: lud.lud_blocked(a, bsize=64), 2)
+    err = float(jnp.abs(lud.lud_blocked(a, bsize=64)
+                        - lud.lud_unblocked(a)).max())
+    rows.append({"name": "lud_unblocked", "us": t_base * 1e6,
+                 "derived": "rank-1 updates"})
+    rows.append({"name": "lud_blocked", "us": t_opt * 1e6,
+                 "derived": f"speedup={t_base / t_opt:.1f}x "
+                            f"maxdiff={err:.1e} (Table 4-8)"})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r['name']},{r['us']:.1f},{r['derived']}")

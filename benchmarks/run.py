@@ -1,0 +1,65 @@
+"""Benchmark driver: one module per thesis table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only rodinia,stencil,...]
+
+Prints ``name,us_per_call,derived`` CSV per benchmark, plus (when the
+dry-run cache exists) the LM roofline summary that EXPERIMENTS.md
+§Roofline reads.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+SUITES = ("rodinia", "stencil", "model_accuracy", "projection")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(SUITES))
+    args = ap.parse_args(argv)
+    picked = args.only.split(",") if args.only else list(SUITES)
+
+    failures = []
+    print("name,us_per_call,derived")
+    for suite in picked:
+        try:
+            if suite == "rodinia":
+                from benchmarks import rodinia as mod
+            elif suite == "stencil":
+                from benchmarks import stencil_tables as mod
+            elif suite == "model_accuracy":
+                from benchmarks import model_accuracy as mod
+            elif suite == "projection":
+                from benchmarks import projection as mod
+            else:
+                raise ValueError(f"unknown suite {suite}")
+            for r in mod.run():
+                print(f"{r['name']},{r['us']:.1f},{r['derived']}")
+        except Exception:  # noqa: BLE001
+            traceback.print_exc()
+            failures.append(suite)
+
+    # LM roofline table (from cached dry-run cells, if present)
+    try:
+        from repro.launch import roofline
+        rows = [a for c in roofline.load_cells("single")
+                if (a := roofline.analyze(c))]
+        for r in rows:
+            print(f"roofline_{r['arch']}_{r['shape']},"
+                  f"{r['t_predicted']*1e6:.1f},"
+                  f"dominant={r['dominant']} useful/HLO="
+                  f"{r['useful_ratio']:.2f} MFU@roof="
+                  f"{r['mfu_at_roofline']:.3f}")
+    except Exception:  # noqa: BLE001
+        print("roofline_cells,0,no dry-run cache yet", file=sys.stderr)
+
+    if failures:
+        print(f"FAILED suites: {failures}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Thesis Tables 5-6 / 5-7 analog: configuration + performance of first-
+to fourth-order 2D/3D star stencils on the TPU target.
+
+For each stencil the §5.4-style model selects (bx, bt) under the VMEM
+budget (the thesis's pruning step), correctness of the chosen config is
+validated against the oracle on a reduced grid (interpret-mode Pallas),
+and modeled v5e GCell/s + GFLOP/s + the roofline bottleneck are
+reported. The thesis's Table 5-6/5-7 columns map as:
+  par/bsize -> (bx, bt);  f_max -> fixed v5e clock (folded into peaks);
+  GCell/s, GFLOP/s -> modeled from the same three-term model;
+  'bottleneck' -> dominant roofline term.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import perf_model as pm
+from repro.core.stencil import diffusion
+from repro.kernels import ops, ref
+
+GRID_2D = (8192, 8192)         # thesis uses 8000^2-class 2D grids
+GRID_3D = (512, 512, 512)      # and 512^3-class 3D grids
+N_STEPS = 64
+
+
+def _validate(spec, plan) -> float:
+    """Max |pallas - oracle| on a reduced grid with the chosen bt."""
+    rng = np.random.default_rng(0)
+    shape = (24, 4 * plan.bx) if spec.dims == 2 else (8, 16, 2 * plan.bx)
+    x = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+    got = ops.stencil_sweep(x, spec, bx=plan.bx, bt=plan.bt,
+                            backend="interpret")
+    want = ref.stencil_multistep(x, spec, plan.bt)
+    return float(jnp.max(jnp.abs(got - want)))
+
+
+def run(validate: bool = True) -> list[dict]:
+    rows = []
+    for dims, grid in ((2, GRID_2D), (3, GRID_3D)):
+        for radius in (1, 2, 3, 4):
+            spec = diffusion(dims, radius)
+            plan = pm.select_config(spec, grid, N_STEPS, top_k=1)[0]
+            terms = pm.stencil_roofline(plan, N_STEPS)
+            gcell = pm.predict_gcells_per_s(plan, N_STEPS)
+            gflop = pm.predict_gflops(plan, N_STEPS)
+            err = _validate(spec, plan) if validate else float("nan")
+            table = "5-6" if radius == 1 else "5-7"
+            rows.append({
+                "name": f"stencil{dims}d_r{radius}",
+                "us": terms.t_predicted * 1e6,
+                "derived": (f"bx={plan.bx} bt={plan.bt} "
+                            f"GCell/s={gcell:.1f} GFLOP/s={gflop:.1f} "
+                            f"bound={terms.dominant} "
+                            f"redun={plan.redundancy:.3f} "
+                            f"maxerr={err:.1e} (Table {table})"),
+                "gflops": gflop, "gcells": gcell,
+                "plan": (plan.bx, plan.bt),
+                "dominant": terms.dominant,
+            })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r['name']},{r['us']:.1f},{r['derived']}")

@@ -1,0 +1,16 @@
+"""Serving example: continuous batching over a mixed request workload.
+
+  PYTHONPATH=src python examples/serve_lm.py --arch gemma3-12b
+"""
+import argparse
+
+from repro.launch import serve
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="gemma3-12b")
+args = ap.parse_args()
+
+done = serve.main(["--arch", args.arch, "--requests", "10",
+                   "--slots", "4", "--max-new", "12"])
+assert len(done) == 10
+print("OK")

@@ -1,0 +1,5 @@
+"""repro: multi-pod JAX framework reproducing Zohouri 2018 (FPGA+OpenCL HPC).
+
+See DESIGN.md for the system inventory and the FPGA->TPU adaptation map.
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,6 @@
+"""Rodinia benchmark ports (thesis ch.4), each with the thesis's
+optimization ladder: a direct/reference port and the advanced rewrite.
+"""
+from repro.apps import hotspot, hotspot3d, lud, nw, pathfinder, srad
+
+__all__ = ["hotspot", "hotspot3d", "lud", "nw", "pathfinder", "srad"]

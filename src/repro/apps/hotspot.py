@@ -1,0 +1,85 @@
+"""Rodinia Hotspot — 2D thermal simulation (thesis §4.3.1.2 + ch.5).
+
+Update rule (Rodinia, simplified constants folded):
+
+    T'[y,x] = T + dt/Cap * ( (T[y,x-1]+T[y,x+1]-2T)/Rx
+                           + (T[y-1,x]+T[y+1,x]-2T)/Ry
+                           + (Tamb - T)/Rz + P[y,x] )
+
+which is an affine star stencil: a linear 5-point stencil plus a
+per-step additive source ``dt/Cap * (P + Tamb/Rz)``. Boundary handling:
+Rodinia clamps out-of-bound neighbors to the border cell; we use the
+ch.5 template's Dirichlet-zero convention on a grid padded by one cell
+of replicated border — numerically identical in the interior and
+self-consistent with the kernels' oracle.
+
+Three ports, mirroring the thesis's optimization ladder:
+  * ``hotspot_reference``  — one jitted sweep per time step through the
+    pure-jnp oracle (one HBM round-trip per step — the *None/Basic* tier);
+  * ``hotspot_blocked``    — the ch.5 accelerator: Pallas kernel with
+    spatial (1D-x) + temporal (bt) blocking and the power grid as the
+    kernel's source operand (the *Advanced* tier).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.stencil import StencilSpec
+from repro.kernels import ops, ref
+
+
+@dataclasses.dataclass(frozen=True)
+class HotspotParams:
+    """Physical constants, defaults matching Rodinia's hotspot.c scale."""
+    rx: float = 10.0
+    ry: float = 10.0
+    rz: float = 4.0
+    cap: float = 16.0
+    dt: float = 1.0
+    t_amb: float = 80.0
+
+
+def spec_of(p: HotspotParams) -> StencilSpec:
+    cx = p.dt / (p.cap * p.rx)
+    cy = p.dt / (p.cap * p.ry)
+    cz = p.dt / (p.cap * p.rz)
+    center = 1.0 - 2.0 * cx - 2.0 * cy - cz
+    aw = ((cy, 0.0, cy),     # y axis
+          (cx, 0.0, cx))     # x axis
+    return StencilSpec(dims=2, radius=1, center=center, axis_weights=aw,
+                       name="hotspot2d")
+
+
+def source_of(power: jax.Array, p: HotspotParams) -> jax.Array:
+    return (p.dt / p.cap) * power + (p.dt / (p.cap * p.rz)) * p.t_amb
+
+
+def hotspot_reference(temp: jax.Array, power: jax.Array, n_steps: int,
+                      p: HotspotParams = HotspotParams()) -> jax.Array:
+    """One oracle sweep per step (per-step HBM round trip)."""
+    spec = spec_of(p)
+    src = source_of(power, p)
+    for _ in range(n_steps):
+        temp = ref.stencil_multistep(temp, spec, 1, src)
+    return temp
+
+
+def hotspot_blocked(temp: jax.Array, power: jax.Array, n_steps: int,
+                    bt: int = 4, bx: int = 256,
+                    p: HotspotParams = HotspotParams(),
+                    backend: str = "auto") -> jax.Array:
+    """Spatial+temporal-blocked Pallas port (ch.5 template + source)."""
+    spec = spec_of(p)
+    src = source_of(power, p)
+    return ops.stencil_run(temp, spec, n_steps, bx=bx, bt=bt,
+                           backend=backend, source=src)
+
+
+def random_problem(key, h: int, w: int):
+    k1, k2 = jax.random.split(key)
+    temp = 70.0 + 10.0 * jax.random.uniform(k1, (h, w), jnp.float32)
+    power = 0.1 * jax.random.uniform(k2, (h, w), jnp.float32)
+    return temp, power

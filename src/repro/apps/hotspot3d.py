@@ -1,0 +1,69 @@
+"""Rodinia Hotspot3D — 3D thermal simulation (thesis §4.3.1.3).
+
+First-order 7-point affine stencil + per-step power source; same
+structure as apps/hotspot.py lifted to 3D. The blocked port exercises
+the ch.5 3D accelerator: 2.5D spatial blocking (block x, resident y,
+streamed z) with plane-pipelined temporal blocking and the rolling
+source-plane buffer.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.stencil import StencilSpec
+from repro.kernels import ops, ref
+
+
+@dataclasses.dataclass(frozen=True)
+class Hotspot3DParams:
+    rx: float = 10.0
+    ry: float = 10.0
+    rz: float = 8.0
+    cap: float = 16.0
+    dt: float = 1.0
+    t_amb: float = 80.0
+
+
+def spec_of(p: Hotspot3DParams) -> StencilSpec:
+    cx = p.dt / (p.cap * p.rx)
+    cy = p.dt / (p.cap * p.ry)
+    cz = p.dt / (p.cap * p.rz)
+    center = 1.0 - 2.0 * (cx + cy + cz)
+    aw = ((cz, 0.0, cz),     # z axis
+          (cy, 0.0, cy),     # y axis
+          (cx, 0.0, cx))     # x axis
+    return StencilSpec(dims=3, radius=1, center=center, axis_weights=aw,
+                       name="hotspot3d")
+
+
+def source_of(power: jax.Array, p: Hotspot3DParams) -> jax.Array:
+    return (p.dt / p.cap) * power
+
+
+def hotspot3d_reference(temp: jax.Array, power: jax.Array, n_steps: int,
+                        p: Hotspot3DParams = Hotspot3DParams()) -> jax.Array:
+    spec = spec_of(p)
+    src = source_of(power, p)
+    for _ in range(n_steps):
+        temp = ref.stencil_multistep(temp, spec, 1, src)
+    return temp
+
+
+def hotspot3d_blocked(temp: jax.Array, power: jax.Array, n_steps: int,
+                      bt: int = 2, bx: int = 128,
+                      p: Hotspot3DParams = Hotspot3DParams(),
+                      backend: str = "auto") -> jax.Array:
+    spec = spec_of(p)
+    src = source_of(power, p)
+    return ops.stencil_run(temp, spec, n_steps, bx=bx, bt=bt,
+                           backend=backend, source=src)
+
+
+def random_problem(key, d: int, h: int, w: int):
+    k1, k2 = jax.random.split(key)
+    temp = 70.0 + 10.0 * jax.random.uniform(k1, (d, h, w), jnp.float32)
+    power = 0.1 * jax.random.uniform(k2, (d, h, w), jnp.float32)
+    return temp, power

@@ -1,0 +1,106 @@
+"""Rodinia LUD — blocked LU decomposition, no pivoting (§4.3.1.6).
+
+The thesis's NDRange design splits each block step into *diameter*
+(diagonal block), *perimeter* (block row/col) and *internal* (trailing
+matmul) kernels. TPU mapping: the internal update is an MXU matmul —
+exactly the unit the thesis spends 96% of its DSPs on — and the
+diameter/perimeter steps are triangular solves.
+
+  * ``lud_unblocked`` — Doolittle elimination, one rank-1 update per
+    step (``lax.scan`` over columns; the *unoptimized* tier: no data
+    reuse, O(N) kernel steps);
+  * ``lud_blocked``   — right-looking blocked LU (the *advanced* tier):
+    per block step a small in-block factorization, two triangular
+    solves, and one big ``A22 -= L21 @ U12`` matmul.
+
+Returns packed LU (unit-lower L below the diagonal, U on/above).
+Inputs are made diagonally dominant by callers to keep no-pivoting
+stable (Rodinia generates its inputs the same way).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def lud_unblocked(a: jax.Array) -> jax.Array:
+    n = a.shape[0]
+
+    def step(mat, k):
+        col = mat[:, k]
+        pivot = mat[k, k]
+        rows = jnp.arange(n)
+        l = jnp.where(rows > k, col / pivot, 0.0)          # multipliers
+        row = jnp.where(rows > k, mat[k, :], 0.0)          # U row k, j>k
+        mat = mat - jnp.outer(l, row)
+        mat = mat.at[:, k].set(jnp.where(rows > k, l, col))
+        return mat, None
+
+    out, _ = jax.lax.scan(step, a, jnp.arange(n))
+    return out
+
+
+def _factor_block(blk: jax.Array) -> jax.Array:
+    """Unblocked LU of a small [B, B] block (packed)."""
+    return lud_unblocked(blk)
+
+
+@functools.partial(jax.jit, static_argnames=("bsize",))
+def lud_blocked(a: jax.Array, bsize: int = 32) -> jax.Array:
+    n = a.shape[0]
+    assert n % bsize == 0, (n, bsize)
+    nb = n // bsize
+
+    def block_step(mat, kb):
+        k0 = kb * bsize
+        # --- diameter: factor the diagonal block ---
+        dia = jax.lax.dynamic_slice(mat, (k0, k0), (bsize, bsize))
+        dia_lu = _factor_block(dia)
+        l11 = jnp.tril(dia_lu, -1) + jnp.eye(bsize, dtype=mat.dtype)
+        u11 = jnp.triu(dia_lu)
+        mat = jax.lax.dynamic_update_slice(mat, dia_lu, (k0, k0))
+
+        # --- perimeter: solve the block row and block column ---
+        rows = jnp.arange(n)
+        below = (rows >= k0 + bsize)[:, None]             # [n,1] mask
+        right = (rows >= k0 + bsize)[None, :]             # [1,n]
+        a_col = jax.lax.dynamic_slice(mat, (0, k0), (n, bsize))
+        a_row = jax.lax.dynamic_slice(mat, (k0, 0), (bsize, n))
+        # L21 = A21 U11^{-1}  (solve x U11 = A21)
+        l21 = jax.scipy.linalg.solve_triangular(
+            u11.T, a_col.T, lower=True).T
+        # U12 = L11^{-1} A12
+        u12 = jax.scipy.linalg.solve_triangular(l11, a_row, lower=True,
+                                                unit_diagonal=True)
+        l21 = jnp.where(below, l21, 0.0)
+        u12 = jnp.where(right, u12, 0.0)
+        mat = jax.lax.dynamic_update_slice(
+            mat, jnp.where(below, l21,
+                           jax.lax.dynamic_slice(mat, (0, k0), (n, bsize))),
+            (0, k0))
+        mat = jax.lax.dynamic_update_slice(
+            mat, jnp.where(right, u12,
+                           jax.lax.dynamic_slice(mat, (k0, 0), (bsize, n))),
+            (k0, 0))
+
+        # --- internal: trailing update A22 -= L21 @ U12 (MXU matmul) ---
+        mat = mat - l21 @ u12
+        return mat, None
+
+    out, _ = jax.lax.scan(block_step, a, jnp.arange(nb))
+    return out
+
+
+def unpack(lu: jax.Array):
+    l = jnp.tril(lu, -1) + jnp.eye(lu.shape[0], dtype=lu.dtype)
+    u = jnp.triu(lu)
+    return l, u
+
+
+def random_problem(key, n: int):
+    """Diagonally dominant SPD-ish matrix (no-pivoting safe)."""
+    a = jax.random.uniform(key, (n, n), jnp.float32)
+    return a + n * jnp.eye(n, dtype=jnp.float32)

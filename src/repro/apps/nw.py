@@ -1,0 +1,122 @@
+"""Needleman-Wunsch sequence alignment (thesis §4.3.1.1).
+
+Dynamic-programming dwarf: score M[i,j] depends on the left, top and
+top-left neighbors — the thesis's hardest dependency pattern. Port:
+
+  * ``nw_reference`` — row-major double loop (the thesis's *unoptimized
+    single work-item* port; on TPU/JAX a nested ``lax.scan``, fully
+    sequential in both dims — the II=328 disaster case);
+  * ``nw_wavefront`` — anti-diagonal wavefront (the thesis's *advanced*
+    design, fig. 4-1): every cell on an anti-diagonal is independent, so
+    one ``lax.scan`` over 2N-1 diagonals computes N cells per step in
+    vector lanes. The two carried diagonals are the direct analog of the
+    thesis's pair of shift registers resolving the top/top-left
+    dependencies.
+
+Both operate on an [N, N] substitution-score matrix (``ref_mat``) and a
+linear gap ``penalty``, with first row/col initialized to -i*penalty.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def _init_scores(n: int, penalty: int, dtype=jnp.int32):
+    """Boundary scores: M[i,0] = -i*p, M[0,j] = -j*p."""
+    return (-jnp.arange(n + 1, dtype=dtype) * penalty,
+            -jnp.arange(n + 1, dtype=dtype) * penalty)
+
+
+@functools.partial(jax.jit, static_argnames=("penalty",))
+def nw_reference(ref_mat: jax.Array, penalty: int = 10) -> jax.Array:
+    """Row-by-row, cell-by-cell DP (sequential oracle). Returns [N+1,N+1]."""
+    n = ref_mat.shape[0]
+    top, _ = _init_scores(n, penalty)
+
+    def row_step(prev_row, i):
+        # prev_row: [N+1] scores of row i-1 (full); compute row i.
+        refs = ref_mat[i - 1]                     # [N]
+
+        def cell(left, j):
+            diag = prev_row[j - 1]
+            up = prev_row[j]
+            score = jnp.maximum(diag + refs[j - 1],
+                                jnp.maximum(up - penalty, left - penalty))
+            return score, score
+
+        left0 = -i * penalty
+        _, row = jax.lax.scan(cell, left0, jnp.arange(1, n + 1))
+        row = jnp.concatenate([jnp.asarray([left0], row.dtype), row])
+        return row, row
+
+    _, rows = jax.lax.scan(row_step, top, jnp.arange(1, n + 1))
+    return jnp.concatenate([top[None], rows], axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("penalty",))
+def nw_wavefront(ref_mat: jax.Array, penalty: int = 10) -> jax.Array:
+    """Anti-diagonal wavefront DP (the thesis's advanced design).
+
+    Diagonal d holds cells (i, j) with i+j = d (1-based in the padded
+    score matrix). Carried state: the previous two diagonals, indexed by
+    i, plus the running output scatter.
+    """
+    n = ref_mat.shape[0]
+    m = n + 1
+    dtype = jnp.int32
+    # diag_prev2 = diagonal d-2, diag_prev = d-1, both length m indexed by i.
+    # d = 0: only cell (0,0) = 0. d = 1: cells (0,1), (1,0).
+    idx = jnp.arange(m)
+
+    def diag_of(d, diag_prev2, diag_prev):
+        i = idx                                   # candidate row index
+        j = d - i
+        valid = (i >= 1) & (j >= 1) & (j <= n) & (i <= n)
+        # neighbors: top = (i-1, j) on diag d-1 at index i-1;
+        #            left = (i, j-1) on diag d-1 at index i;
+        #            topleft = (i-1, j-1) on diag d-2 at index i-1.
+        top = jnp.roll(diag_prev, 1)
+        left = diag_prev
+        topleft = jnp.roll(diag_prev2, 1)
+        jc = jnp.clip(j - 1, 0, n - 1)
+        ic = jnp.clip(i - 1, 0, n - 1)
+        refs = ref_mat[ic, jc].astype(dtype)
+        score = jnp.maximum(topleft + refs,
+                            jnp.maximum(top, left) - penalty)
+        # boundary cells on this diagonal: i==0 -> -j*p ; j==0 -> -i*p
+        score = jnp.where(i == 0, -d * penalty, score)
+        score = jnp.where(j == 0, -d * penalty, score)
+        score = jnp.where(valid | (i == 0) | ((j == 0) & (i <= n)),
+                          score, 0)
+        return score
+
+    d0 = jnp.zeros((m,), dtype).at[0].set(0)                     # diag 0
+    d1 = jnp.where((idx == 0) | (idx == 1), -penalty, 0).astype(dtype)
+
+    def step(carry, d):
+        p2, p1 = carry
+        cur = diag_of(d, p2, p1)
+        return (p1, cur), cur
+
+    (_, _), diags = jax.lax.scan(step, (d0, d1), jnp.arange(2, 2 * m - 1))
+    # scatter diagonals back to the [m, m] score matrix
+    out = jnp.zeros((m, m), dtype)
+    d_idx = jnp.arange(2, 2 * m - 1)
+    ii = jnp.broadcast_to(idx[None, :], (d_idx.size, m))
+    jj = d_idx[:, None] - ii
+    ok = (jj >= 0) & (jj <= n)
+    # invalid lanes get an out-of-bounds column so mode="drop" skips them
+    out = out.at[ii, jnp.where(ok, jj, m)].set(diags, mode="drop")
+    # fixed boundaries (diagonals 0/1 and the first row/col)
+    bound = -jnp.arange(m, dtype=dtype) * penalty
+    out = out.at[:, 0].set(bound)
+    out = out.at[0, :].set(bound)
+    return out
+
+
+def random_problem(key, n: int):
+    """Random substitution matrix like Rodinia's (ints in [-10, 10])."""
+    return jax.random.randint(key, (n, n), -10, 11, jnp.int32)

@@ -1,0 +1,169 @@
+"""Architecture configuration schema.
+
+Every assigned architecture gets one ``ArchConfig`` (exact public
+numbers) plus a ``smoke()`` reduction of the same family for CPU tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                 # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None
+
+    # --- MoE ---
+    moe: bool = False
+    n_experts: int = 0
+    top_k: int = 0
+    shared_expert: bool = False      # llama4-style shared expert
+    capacity_factor: float = 1.25
+
+    # --- attention pattern ---
+    sliding_window: int = 0          # >0: local-attention window size
+    local_global_period: int = 0     # gemma3: 5 local + 1 global => 6
+    rope_theta: float = 500_000.0
+
+    # --- SSM / hybrid ---
+    ssm: str = ""                    # "" | "rwkv6" | "mamba2"
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2              # mamba2 inner expansion factor
+    hybrid_attn_period: int = 0      # zamba2: shared attn every N layers
+
+    # --- encoder-decoder (whisper) ---
+    enc_dec: bool = False
+    n_enc_layers: int = 0
+
+    # --- modality stubs (assignment: frontend is a stub) ---
+    modality_stub: str = ""          # "" | "vision" | "audio"
+    n_stub_tokens: int = 0           # prepended precomputed embeddings
+
+    # --- numerics / implementation ---
+    mlp_type: str = "swiglu"         # swiglu | gelu
+    norm_eps: float = 1e-5
+    dtype: str = "bfloat16"
+    attn_chunk: int = 512            # streaming-attention block size
+    ssm_chunk: int = 64              # chunked-scan block (temporal blocking)
+    remat: bool = True
+    sub_quadratic: bool = False      # eligible for long_500k
+    notes: str = ""
+
+    def __post_init__(self):
+        if self.head_dim is None:
+            object.__setattr__(self, "head_dim",
+                               self.d_model // max(self.n_heads, 1))
+
+    # ------------------------------------------------------------------
+    @property
+    def layer_period(self) -> int:
+        """Length of the repeating layer pattern (see models.transformer)."""
+        if self.local_global_period:
+            return self.local_global_period
+        if self.hybrid_attn_period:
+            return self.hybrid_attn_period
+        return 1
+
+    def layer_kinds(self) -> Tuple[str, ...]:
+        """The repeating pattern of layer kinds."""
+        if self.enc_dec:
+            return ("attn+cross",)
+        if self.ssm == "rwkv6":
+            return ("rwkv6",)
+        if self.ssm == "mamba2":
+            p = self.hybrid_attn_period
+            if p:
+                # zamba2: mamba blocks, with the *shared* attention block
+                # applied after every p-th mamba layer.
+                return ("mamba2",) * (p - 1) + ("mamba2+shared_attn",)
+            return ("mamba2",)
+        if self.local_global_period:
+            p = self.local_global_period
+            return ("local_attn",) * (p - 1) + ("global_attn",)
+        return ("attn",)
+
+    # ------------------------------------------------------------------
+    def param_count(self) -> float:
+        """Analytic parameter count (used for MODEL_FLOPS and reporting)."""
+        d, ff, v = self.d_model, self.d_ff, self.vocab
+        hd = self.head_dim
+        per_layer = 0.0
+        kinds = self.layer_kinds()
+        n_full = self.n_layers // len(kinds)
+        rem = self.n_layers % len(kinds)
+        seq = kinds * n_full + kinds[:rem]
+        attn_p = d * hd * (self.n_heads + 2 * self.n_kv_heads) \
+            + self.n_heads * hd * d
+        mlp_mult = 3 if self.mlp_type == "swiglu" else 2
+        mlp_p = mlp_mult * d * ff
+        for kind in seq:
+            if kind in ("attn", "local_attn", "global_attn"):
+                per_layer += attn_p + mlp_p + 2 * d
+            elif kind == "rwkv6":
+                # r,k,v,g,o projections + decay/mix params + channel mix
+                per_layer += 5 * d * d + 4 * d + (2 * d * ff) + 2 * d
+            elif kind.startswith("mamba2"):
+                n = self.ssm_state
+                di = self.ssm_expand * d
+                nh = di // self.ssm_head_dim
+                per_layer += d * (2 * di + 2 * n + nh) + di * d + 2 * d
+                if kind.endswith("shared_attn"):
+                    pass  # shared params counted once below
+            per_layer += 0
+        total = per_layer + 2 * v * d + d  # embed + head + final norm
+        if self.hybrid_attn_period:
+            total += attn_p + mlp_p + 2 * d  # the single shared block
+        if self.enc_dec:
+            enc_attn = attn_p + mlp_p + 2 * d
+            cross = attn_p + d
+            total += self.n_enc_layers * enc_attn + self.n_layers * cross
+        if self.moe:
+            # replace the dense mlp with experts (+ optional shared) + router
+            total += self.n_layers * (
+                self.n_experts * mlp_mult * d * ff - mlp_p + d * self.n_experts
+                + (mlp_mult * d * ff if self.shared_expert else 0))
+        return total
+
+    def active_param_count(self) -> float:
+        """Params touched per token (MoE: only routed experts active)."""
+        if not self.moe:
+            return self.param_count()
+        mlp_mult = 3 if self.mlp_type == "swiglu" else 2
+        inactive = self.n_layers * (self.n_experts - self.top_k) \
+            * mlp_mult * self.d_model * self.d_ff
+        return self.param_count() - inactive
+
+    # ------------------------------------------------------------------
+    def smoke(self) -> "ArchConfig":
+        """Reduced same-family config for CPU smoke tests."""
+        kinds = len(self.layer_kinds())
+        return dataclasses.replace(
+            self,
+            name=self.name + "-smoke",
+            n_layers=max(kinds, 2) if kinds > 1 else 2,
+            d_model=64,
+            n_heads=4,
+            n_kv_heads=2 if self.n_kv_heads < self.n_heads else 4,
+            head_dim=16,
+            d_ff=128,
+            vocab=256,
+            n_experts=min(self.n_experts, 4) if self.moe else 0,
+            top_k=min(self.top_k, 2) if self.moe else 0,
+            ssm_state=min(self.ssm_state, 16) if self.ssm_state else 0,
+            ssm_head_dim=16 if self.ssm else 64,
+            n_enc_layers=2 if self.enc_dec else 0,
+            n_stub_tokens=8 if self.modality_stub else 0,
+            sliding_window=32 if self.sliding_window else 0,
+            attn_chunk=16,
+            ssm_chunk=8,
+            dtype="float32",
+        )

@@ -1,0 +1,11 @@
+"""Exact public config for gemma3-12b (source noted in `notes`)."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="gemma3-12b", family="dense",
+    n_layers=48, d_model=3840, n_heads=16, n_kv_heads=8, head_dim=256,
+    d_ff=15360, vocab=262144,
+    sliding_window=1024, local_global_period=6, sub_quadratic=True,
+    rope_theta=1_000_000.0,
+    notes="[hf:google/gemma-3] 5:1 local:global, 128k context; "
+          "long_500k runs (5/6 of layers are O(window))")

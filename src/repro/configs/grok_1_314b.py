@@ -1,0 +1,9 @@
+"""Exact public config for grok-1-314b (source noted in `notes`)."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="grok-1-314b", family="moe",
+    n_layers=64, d_model=6144, n_heads=48, n_kv_heads=8, head_dim=128,
+    d_ff=32768, vocab=131072,
+    moe=True, n_experts=8, top_k=2,
+    notes="[hf:xai-org/grok-1] 8 experts top-2")

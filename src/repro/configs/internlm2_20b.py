@@ -1,0 +1,8 @@
+"""Exact public config for internlm2-20b (source noted in `notes`)."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="internlm2-20b", family="dense",
+    n_layers=48, d_model=6144, n_heads=48, n_kv_heads=8, head_dim=128,
+    d_ff=16384, vocab=92544,
+    notes="[arXiv:2403.17297] GQA")

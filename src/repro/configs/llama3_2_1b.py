@@ -1,0 +1,8 @@
+"""Exact public config for llama3-2-1b (source noted in `notes`)."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama3.2-1b", family="dense",
+    n_layers=16, d_model=2048, n_heads=32, n_kv_heads=8, head_dim=64,
+    d_ff=8192, vocab=128256,
+    notes="[hf:meta-llama/Llama-3.2-1B]")

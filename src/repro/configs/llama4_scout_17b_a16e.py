@@ -1,0 +1,10 @@
+"""Exact public config for llama4-scout-17b-a16e (source noted in `notes`)."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama4-scout-17b-a16e", family="moe",
+    n_layers=48, d_model=5120, n_heads=40, n_kv_heads=8, head_dim=128,
+    d_ff=8192, vocab=202048,
+    moe=True, n_experts=16, top_k=1, shared_expert=True,
+    notes="[hf:meta-llama/Llama-4-Scout-17B-16E] MoE 16e top-1 + shared "
+          "expert, early fusion (text backbone only here)")

@@ -1,0 +1,10 @@
+"""Exact public config for phi3-vision-4-2b (source noted in `notes`)."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="phi-3-vision-4.2b", family="vlm",
+    n_layers=32, d_model=3072, n_heads=32, n_kv_heads=32, head_dim=96,
+    d_ff=8192, vocab=32064,
+    modality_stub="vision", n_stub_tokens=256,
+    notes="[hf:microsoft/Phi-3-vision-128k-instruct] phi3-mini backbone; "
+          "CLIP frontend is a stub (input_specs provides patch embeddings)")

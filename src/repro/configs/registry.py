@@ -1,0 +1,31 @@
+"""Registry over the 10 assigned architecture configs.
+
+One module per architecture (``src/repro/configs/<id>.py``, exact public
+numbers; source noted in each config's ``notes``); ``smoke()`` on any
+config gives the reduced same-family version used by CPU tests.
+"""
+from __future__ import annotations
+
+from repro.configs.base import ArchConfig
+from repro.configs.llama4_scout_17b_a16e import CONFIG as llama4_scout_17b_a16e
+from repro.configs.grok_1_314b import CONFIG as grok_1_314b
+from repro.configs.gemma3_12b import CONFIG as gemma3_12b
+from repro.configs.llama3_2_1b import CONFIG as llama3_2_1b
+from repro.configs.phi4_mini_3_8b import CONFIG as phi4_mini_3_8b
+from repro.configs.internlm2_20b import CONFIG as internlm2_20b
+from repro.configs.rwkv6_7b import CONFIG as rwkv6_7b
+from repro.configs.zamba2_1_2b import CONFIG as zamba2_1_2b
+from repro.configs.phi3_vision_4_2b import CONFIG as phi3_vision_4_2b
+from repro.configs.whisper_tiny import CONFIG as whisper_tiny
+
+ARCHS = {c.name: c for c in [
+    llama4_scout_17b_a16e, grok_1_314b, gemma3_12b, llama3_2_1b,
+    phi4_mini_3_8b, internlm2_20b, rwkv6_7b, zamba2_1_2b,
+    phi3_vision_4_2b, whisper_tiny,
+]}
+
+
+def get(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(ARCHS)}")
+    return ARCHS[name]

@@ -1,0 +1,9 @@
+"""Exact public config for rwkv6-7b (source noted in `notes`)."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="rwkv6-7b", family="ssm",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=32,
+    d_ff=14336, vocab=65536,
+    ssm="rwkv6", ssm_head_dim=64, sub_quadratic=True,
+    notes="[arXiv:2404.05892] Finch — attention-free, data-dependent decay")

@@ -1,0 +1,76 @@
+"""Assigned input shapes and ShapeDtypeStruct stand-ins (dry-run inputs).
+
+Per assignment: train_4k / prefill_32k lower ``train_step``/``prefill``;
+decode_32k / long_500k lower ``serve_step`` (one new token against a
+seq_len KV cache). ``long_500k`` applies only to sub-quadratic archs;
+whisper (enc-dec audio) also skips it (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq: int
+    batch: int
+    kind: str         # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def skip_reason(cfg: ArchConfig, shape: ShapeSpec) -> Optional[str]:
+    if shape.name == "long_500k":
+        if cfg.family == "audio":
+            return "enc-dec audio arch: 500k-token decode out of family"
+        if not cfg.sub_quadratic:
+            return "pure full-attention arch needs sub-quadratic attention"
+    return None
+
+
+def scaled_batch(shape: ShapeSpec, scale: float = 1.0) -> int:
+    return max(1, int(shape.batch * scale))
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec, batch: int | None = None):
+    """ShapeDtypeStruct stand-ins for the *data* inputs of the step.
+
+    Returns a dict matching the batch argument of train/prefill, or the
+    (token, pos) arguments of serve_step. Cache/state specs come from
+    ``jax.eval_shape`` over the init functions (launch.dryrun).
+    """
+    b = batch if batch is not None else shape.batch
+    s = shape.seq
+    dt = jnp.dtype(cfg.dtype)
+    i32 = jnp.int32
+
+    if shape.kind in ("train", "prefill"):
+        n_stub = cfg.n_stub_tokens if cfg.modality_stub == "vision" else 0
+        t_text = s - n_stub
+        specs = {"tokens": jax.ShapeDtypeStruct((b, t_text), i32)}
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+        if cfg.modality_stub == "vision":
+            specs["stub_embeds"] = jax.ShapeDtypeStruct(
+                (b, n_stub, cfg.d_model), dt)
+        if cfg.modality_stub == "audio":
+            specs["frame_embeds"] = jax.ShapeDtypeStruct(
+                (b, s, cfg.d_model), dt)
+        return specs
+
+    # decode: one new token against a cache of length s.
+    return {"token": jax.ShapeDtypeStruct((b, 1), i32),
+            "pos": jax.ShapeDtypeStruct((), i32)}

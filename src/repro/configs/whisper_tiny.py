@@ -1,0 +1,11 @@
+"""Exact public config for whisper-tiny (source noted in `notes`)."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-tiny", family="audio",
+    n_layers=4, d_model=384, n_heads=6, n_kv_heads=6, head_dim=64,
+    d_ff=1536, vocab=51865,
+    enc_dec=True, n_enc_layers=4, mlp_type="gelu",
+    modality_stub="audio",
+    notes="[arXiv:2212.04356] enc-dec; conv frontend is a stub "
+          "(input_specs provides frame embeddings)")

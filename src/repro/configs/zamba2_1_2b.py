@@ -1,0 +1,11 @@
+"""Exact public config for zamba2-1-2b (source noted in `notes`)."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="zamba2-1.2b", family="hybrid",
+    n_layers=38, d_model=2048, n_heads=32, n_kv_heads=32, head_dim=64,
+    d_ff=8192, vocab=32000,
+    ssm="mamba2", ssm_state=64, ssm_head_dim=64, hybrid_attn_period=6,
+    sub_quadratic=True,
+    notes="[arXiv:2411.15242] Mamba2 backbone + one shared attention block "
+          "applied every 6 layers")

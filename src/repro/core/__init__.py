@@ -1,0 +1,16 @@
+"""Core: the paper's contribution — blocked stencil acceleration + models."""
+from repro.core.stencil import StencilSpec, diffusion, hotspot2d, hotspot3d
+from repro.core.blocking import BlockPlan, candidate_plans
+from repro.core.perf_model import (TpuSpec, V5E, V5P_PROJECTION,
+                                   RooflineTerms, stencil_roofline,
+                                   select_config, predict_gflops,
+                                   predict_gcells_per_s, lm_roofline,
+                                   model_flops_train, model_flops_decode)
+
+__all__ = [
+    "StencilSpec", "diffusion", "hotspot2d", "hotspot3d", "BlockPlan",
+    "candidate_plans", "TpuSpec", "V5E", "V5P_PROJECTION", "RooflineTerms",
+    "stencil_roofline", "select_config", "predict_gflops",
+    "predict_gcells_per_s", "lm_roofline", "model_flops_train",
+    "model_flops_decode",
+]

@@ -1,0 +1,166 @@
+"""Spatial + temporal blocking planner (thesis §5.3.1 / §5.3.2, TPU form).
+
+The thesis combines:
+  * spatial blocking — 1D blocking in x for 2D stencils, 2.5D (block x,
+    stream z... here: block x, stream z, keep full y) for 3D — with blocks
+    *overlapped* by the halo so no input-size restriction exists, and
+  * temporal blocking — ``bt`` fused time steps per pass, growing the halo
+    to ``bt * radius`` and cutting HBM sweeps by ``bt``.
+
+This module does the (pure, hardware-independent) bookkeeping: tile
+counts, halo widths, redundancy ratios, VMEM footprints and HBM traffic.
+``core.perf_model`` turns these numbers into time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Tuple
+
+from repro.core.stencil import StencilSpec
+
+_LANE = 128     # TPU lane width
+_SUBLANE = {4: 8, 2: 16}   # sublane count by itemsize
+
+
+def round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockPlan:
+    """A fully-resolved blocking configuration for one stencil sweep."""
+
+    spec: StencilSpec
+    grid_shape: Tuple[int, ...]   # (H, W) for 2D; (D, H, W) for 3D
+    bx: int                       # x-tile width (last axis), lane-aligned
+    bt: int                       # fused time steps
+    itemsize: int = 4
+
+    def __post_init__(self):
+        if len(self.grid_shape) != self.spec.dims:
+            raise ValueError("grid_shape rank must equal spec.dims")
+        if self.bx % _LANE != 0:
+            raise ValueError(f"bx must be a multiple of {_LANE}")
+        if self.bt < 1:
+            raise ValueError("bt >= 1")
+        if self.halo > self.bx:
+            # window assembly uses the two neighbor tiles only (thesis's
+            # shift register holds one block row per side).
+            raise ValueError(f"halo {self.halo} exceeds tile width {self.bx}")
+
+    # ---- geometry -----------------------------------------------------
+
+    @property
+    def halo(self) -> int:
+        return self.spec.halo(self.bt)
+
+    @property
+    def width(self) -> int:
+        return self.grid_shape[-1]
+
+    @property
+    def rows(self) -> int:
+        """y extent (kept fully resident in VMEM, thesis fig. 5-4)."""
+        return self.grid_shape[-2]
+
+    @property
+    def depth(self) -> int:
+        if self.spec.dims != 3:
+            raise ValueError("depth only defined for 3D plans")
+        return self.grid_shape[0]
+
+    @property
+    def n_tiles(self) -> int:
+        return math.ceil(self.width / self.bx)
+
+    @property
+    def padded_width(self) -> int:
+        return self.n_tiles * self.bx
+
+    @property
+    def padded_rows(self) -> int:
+        return round_up(self.rows, _SUBLANE[self.itemsize])
+
+    @property
+    def window_width(self) -> int:
+        """Columns held live per tile: bx + 2*halo (thesis fig. 5-5)."""
+        return self.bx + 2 * self.halo
+
+    # ---- cost bookkeeping ---------------------------------------------
+
+    @property
+    def redundancy(self) -> float:
+        """Redundant-compute ratio from overlapped halos (thesis §5.4).
+
+        Average cells computed per useful cell. Each fused step computes
+        the full window; validity shrinks by r per step, so the average
+        overcompute per step is (bx + 2*(bt - t)*r)/bx summed over steps.
+        """
+        r, bx, bt = self.spec.radius, self.bx, self.bt
+        total = sum(bx + 2 * (bt - t) * r for t in range(1, bt + 1))
+        return total / (bx * bt)
+
+    @property
+    def cells(self) -> int:
+        n = 1
+        for s in self.grid_shape:
+            n *= s
+        return n
+
+    def flops_per_sweep(self, include_redundancy: bool = True) -> float:
+        """FLOPs for one pass of ``bt`` time steps over the grid."""
+        base = self.cells * self.spec.flops_per_cell * self.bt
+        return base * (self.redundancy if include_redundancy else 1.0)
+
+    def useful_flops_per_sweep(self) -> float:
+        return self.flops_per_sweep(include_redundancy=False)
+
+    def hbm_bytes_per_sweep(self, read_amplification: float = 1.0) -> float:
+        """HBM traffic for one pass: one read + one write of the grid.
+
+        ``read_amplification`` models kernel variants: the simple
+        3-neighbor-operand kernel reads each tile 3x (amp=3); the
+        revolving-buffer kernel (the thesis's shift register analog)
+        reads each tile once (amp=1).
+        """
+        return self.cells * self.itemsize * (read_amplification + 1.0)
+
+    def vmem_bytes(self) -> int:
+        """Per-core VMEM working set of the Pallas kernel."""
+        if self.spec.dims == 2:
+            # 3 input tiles + window + output tile (all full-height).
+            cols = 3 * self.bx + self.window_width + self.bx
+            return self.padded_rows * cols * self.itemsize
+        # 3D: bt stage windows of (2r+1) planes + 3 input planes + output.
+        planes = self.bt * (2 * self.spec.radius + 1) + 4
+        return planes * self.padded_rows * self.window_width * self.itemsize
+
+    def sweeps(self, n_steps: int) -> int:
+        """Grid passes needed for ``n_steps`` total time steps."""
+        return math.ceil(n_steps / self.bt)
+
+
+def candidate_plans(spec: StencilSpec, grid_shape: Tuple[int, ...],
+                    vmem_budget: int = 96 * 2 ** 20,
+                    itemsize: int = 4) -> list[BlockPlan]:
+    """Enumerate legal (bx, bt) configurations under the VMEM budget.
+
+    This is the search space the thesis's §5.4 model prunes so only a
+    handful of configurations ever reach the (hours-long) place-and-route
+    step; here the expensive step it saves is XLA compilation + dry-run.
+    """
+    out = []
+    width = grid_shape[-1]
+    bx = _LANE
+    while bx <= max(_LANE, round_up(width, _LANE)):
+        for bt in (1, 2, 3, 4, 6, 8, 12, 16):
+            try:
+                plan = BlockPlan(spec, grid_shape, bx=bx, bt=bt,
+                                 itemsize=itemsize)
+            except ValueError:
+                continue
+            if plan.vmem_bytes() <= vmem_budget:
+                out.append(plan)
+        bx *= 2
+    return out

@@ -1,0 +1,168 @@
+"""TPU roofline performance model (thesis §5.4, adapted per DESIGN.md §2).
+
+The thesis's model predicts run time of a blocked stencil pipeline from
+(block size, vectorization, temporal degree, f_max) and is used to prune
+the parameter space before place-and-route. Our adaptation predicts run
+time from three roofline terms and prunes the (bx, bt) space before
+compilation — and the *same three terms* are what EXPERIMENTS.md reports
+for every (architecture x mesh) dry-run cell:
+
+    t_compute    = FLOPs / (chips * peak_flops)
+    t_memory     = HBM bytes / (chips * hbm_bw)
+    t_collective = collective bytes / (chips * link_bw)
+
+    t_predicted  = max(...)   (bulk-synchronous; overlap modeled by max)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence
+
+from repro.core.blocking import BlockPlan, candidate_plans
+from repro.core.stencil import StencilSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class TpuSpec:
+    """Hardware constants (defaults: TPU v5e-class, per assignment)."""
+
+    name: str = "tpu-v5e"
+    peak_flops_bf16: float = 197e12      # MXU, bf16
+    peak_flops_f32: float = 98.5e12      # MXU, f32 (half-rate)
+    vpu_flops_f32: float = 3.9e12        # VPU estimate: 8x128 lanes, FMA, ~950MHz, 2 issue
+    hbm_bw: float = 819e9                # bytes/s
+    ici_bw: float = 50e9                 # bytes/s per link
+    ici_links: int = 4                   # 2D torus: 4 links/chip
+    vmem_bytes: int = 96 * 2 ** 20
+    hbm_bytes: int = 16 * 2 ** 30
+    tdp_watts: float = 170.0             # modeled only (DESIGN.md §8)
+
+
+V5E = TpuSpec()
+# A "next generation" part for the thesis's Stratix 10 projection analog
+# (§5.7.3): ~2.3x compute, ~3.3x HBM of v5e — v5p-class constants.
+V5P_PROJECTION = TpuSpec(name="tpu-v5p-projection",
+                         peak_flops_bf16=459e12, peak_flops_f32=229.5e12,
+                         vpu_flops_f32=9.2e12, hbm_bw=2765e9, ici_bw=100e9,
+                         vmem_bytes=128 * 2 ** 20, hbm_bytes=95 * 2 ** 30,
+                         tdp_watts=350.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineTerms:
+    """The three times (seconds) + provenance. `dominant` names the max."""
+
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+
+    @property
+    def t_predicted(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the dominant roofline actually achieved if the
+        program runs exactly at t_predicted (1.0 = on the roof)."""
+        t = self.t_predicted
+        return 0.0 if t == 0 else max(self.t_compute, self.t_memory) / t if (
+            self.t_collective == t) else 1.0
+
+
+def stencil_roofline(plan: BlockPlan, n_steps: int, tpu: TpuSpec = V5E,
+                     chips: int = 1, read_amplification: float = 1.0,
+                     halo_exchange: bool = False) -> RooflineTerms:
+    """Roofline terms for running ``n_steps`` of a stencil under ``plan``.
+
+    ``halo_exchange``: when the grid is sharded over ``chips`` along y,
+    each sweep exchanges 2 * halo * width * itemsize bytes per chip
+    boundary — the collective term the thesis (single-FPGA) didn't need.
+    Stencils are VPU work on TPU, so the compute roof is vpu_flops_f32.
+    """
+    sweeps = plan.sweeps(n_steps)
+    flops = plan.flops_per_sweep() * sweeps
+    hbm = plan.hbm_bytes_per_sweep(read_amplification) * sweeps
+    coll = 0.0
+    if halo_exchange and chips > 1:
+        per_sweep = 2 * plan.halo * (plan.cells // plan.rows) * plan.itemsize
+        coll = per_sweep * sweeps  # per chip; both directions
+    return RooflineTerms(
+        t_compute=flops / (chips * tpu.vpu_flops_f32),
+        t_memory=hbm / (chips * tpu.hbm_bw),
+        t_collective=coll / tpu.ici_bw if coll else 0.0,
+        flops=flops, hbm_bytes=hbm, collective_bytes=coll)
+
+
+def predict_gcells_per_s(plan: BlockPlan, n_steps: int, tpu: TpuSpec = V5E,
+                         chips: int = 1,
+                         read_amplification: float = 1.0) -> float:
+    terms = stencil_roofline(plan, n_steps, tpu, chips, read_amplification)
+    cell_updates = plan.cells * n_steps
+    return cell_updates / terms.t_predicted / 1e9
+
+
+def predict_gflops(plan: BlockPlan, n_steps: int, tpu: TpuSpec = V5E,
+                   chips: int = 1, read_amplification: float = 1.0) -> float:
+    """Useful GFLOP/s (thesis reports useful FLOPs, not redundant ones)."""
+    terms = stencil_roofline(plan, n_steps, tpu, chips, read_amplification)
+    return plan.useful_flops_per_sweep() * plan.sweeps(n_steps) \
+        / terms.t_predicted / 1e9
+
+
+def select_config(spec: StencilSpec, grid_shape, n_steps: int,
+                  tpu: TpuSpec = V5E, top_k: int = 3,
+                  read_amplification: float = 1.0,
+                  vmem_budget: int | None = None) -> list[BlockPlan]:
+    """The §5.4 pruning step: rank all legal (bx, bt) by predicted time.
+
+    Returns the ``top_k`` fastest plans; only these need be compiled and
+    measured (the thesis: 'minimize the number of configurations that
+    need to be placed and routed').
+    """
+    budget = vmem_budget if vmem_budget is not None else tpu.vmem_bytes
+    plans = candidate_plans(spec, grid_shape, vmem_budget=budget)
+    if not plans:
+        raise ValueError("no legal plan fits VMEM")
+    plans.sort(key=lambda p: stencil_roofline(
+        p, n_steps, tpu, read_amplification=read_amplification).t_predicted)
+    return plans[:top_k]
+
+
+def modeled_power_efficiency(gflops: float, tpu: TpuSpec = V5E) -> float:
+    """GFLOP/s per Watt, *modeled* from TDP-class constants (DESIGN.md §8)."""
+    return gflops / tpu.tdp_watts
+
+
+# ---------------------------------------------------------------------------
+# Generic (non-stencil) roofline used by launch/roofline.py for the LM cells.
+# ---------------------------------------------------------------------------
+
+def lm_roofline(hlo_flops: float, hlo_bytes: float, collective_bytes: float,
+                chips: int, tpu: TpuSpec = V5E,
+                compute_dtype: str = "bf16") -> RooflineTerms:
+    peak = tpu.peak_flops_bf16 if compute_dtype == "bf16" else tpu.peak_flops_f32
+    return RooflineTerms(
+        t_compute=hlo_flops / (chips * peak),
+        t_memory=hlo_bytes / (chips * tpu.hbm_bw),
+        t_collective=collective_bytes / (chips * tpu.ici_bw * tpu.ici_links),
+        flops=hlo_flops, hbm_bytes=hlo_bytes,
+        collective_bytes=collective_bytes)
+
+
+def model_flops_train(n_params_active: float, tokens: float) -> float:
+    """MODEL_FLOPS = 6 * N_active * D (per assignment §Roofline)."""
+    return 6.0 * n_params_active * tokens
+
+
+def model_flops_decode(n_params_active: float, tokens: float) -> float:
+    """Decode is forward-only: 2 * N_active * D."""
+    return 2.0 * n_params_active * tokens

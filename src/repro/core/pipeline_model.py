@@ -1,0 +1,75 @@
+"""The thesis's general performance model (ch.3), kept in its original form.
+
+These closed forms (Eq. 3-1 .. 3-8) model a deep pipeline with depth P,
+initiation interval II and trip count L. They are retained verbatim both as
+documentation of the reproduced paper and because the *structure* — a
+max() over a dependency-limited term and a bandwidth-limited term — is the
+same structure our TPU roofline (core.perf_model) uses. Tests assert the
+algebraic properties the thesis derives from them.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineParams:
+    P: int        # pipeline depth (cycles to fill)
+    L: int        # loop trip count (number of inputs)
+    f_max: float  # operating frequency, Hz
+
+
+def t_cycle(p: PipelineParams, ii: float) -> float:
+    """Eq. 3-1: T_cycle = P + II * (L - 1)."""
+    return p.P + ii * (p.L - 1)
+
+
+def t_seconds(p: PipelineParams, ii: float) -> float:
+    """Eq. 3-2."""
+    return t_cycle(p, ii) / p.f_max
+
+
+def ii_single_work_item(n_d: int) -> float:
+    """Single work-item compile-time II (Eq. 3-3): N_d stall cycles + 1."""
+    return n_d + 1
+
+
+def ii_ndrange(n_b: int) -> float:
+    """NDRange effective II (Eq. 3-4): barriers act like stalls, II = N_b+1."""
+    return n_b + 1
+
+
+def ii_runtime(n_m: float, bw_bytes_per_cycle: float) -> float:
+    """Eq. 3-5: II_r > N_m / BW (bytes moved per logical iteration)."""
+    return n_m / bw_bytes_per_cycle
+
+
+def ii_effective(ii_c: float, ii_r: float) -> float:
+    """Eq. 3-6: II > max(II_c, II_r)."""
+    return max(ii_c, ii_r)
+
+
+def t_cycle_data_parallel(p: PipelineParams, ii: float, n_p: int,
+                          p_prime: int | None = None) -> float:
+    """Eq. 3-7: T = P' + II * (L - N_p) / N_p  (degree of parallelism N_p)."""
+    p_eff = p.P if p_prime is None else p_prime
+    return p_eff + ii * (p.L - n_p) / n_p
+
+
+def ii_runtime_data_parallel(n_m: float, n_p: int,
+                             bw_bytes_per_cycle: float) -> float:
+    """Eq. 3-8 memory branch: II_r > N_m * N_p / BW."""
+    return n_m * n_p / bw_bytes_per_cycle
+
+
+def speedup_from_parallelism(p: PipelineParams, ii: float, n_p: int,
+                             n_m: float, bw: float) -> float:
+    """Thesis §3.1.2 conclusion: speedup ≈ N_p while bandwidth allows.
+
+    Returns the modeled speedup of the N_p-parallel pipeline over the
+    serial one, including the bandwidth ceiling.
+    """
+    base = t_cycle(p, ii_effective(ii, ii_runtime(n_m, bw)))
+    par = t_cycle_data_parallel(
+        p, ii_effective(ii, ii_runtime_data_parallel(n_m, n_p, bw)), n_p)
+    return base / par

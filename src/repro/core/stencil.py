@@ -1,0 +1,131 @@
+"""Star-shaped stencil specifications (thesis ch.5).
+
+A ``StencilSpec`` describes a 2D or 3D *star-shaped* stencil of radius
+``r`` (thesis: "first to fourth-order"): the output at cell ``x`` is
+
+    out[x] = c_center * in[x]
+           + sum_axis sum_{o in [-r..r], o != 0} w[axis, r+o] * in[x + o*e_axis]
+
+Boundary semantics are Dirichlet-zero: reads outside the grid return 0.
+This matches the fixed-halo convention the thesis uses for its Diffusion
+2D/3D benchmark kernels (Table 5-2) and makes temporal blocking exactly
+reproducible: the tiled/temporally-blocked kernels and the naive
+reference agree bitwise up to float association.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class StencilSpec:
+    """A star-shaped stencil of radius ``radius`` in ``dims`` dimensions.
+
+    axis_weights[a, radius + o] is the coefficient of the neighbor at
+    offset ``o`` along axis ``a``. The center column (o == 0) of
+    ``axis_weights`` must be zero — the center coefficient is held once
+    in ``center`` so it is not multiply counted across axes.
+    """
+
+    dims: int
+    radius: int
+    center: float
+    axis_weights: Tuple[Tuple[float, ...], ...]
+    name: str = "stencil"
+
+    def __post_init__(self):
+        if self.dims not in (2, 3):
+            raise ValueError(f"dims must be 2 or 3, got {self.dims}")
+        if not 1 <= self.radius <= 4:
+            raise ValueError(f"radius must be in 1..4, got {self.radius}")
+        aw = np.asarray(self.axis_weights, dtype=np.float64)
+        if aw.shape != (self.dims, 2 * self.radius + 1):
+            raise ValueError(
+                f"axis_weights must have shape {(self.dims, 2*self.radius+1)}, "
+                f"got {aw.shape}")
+        if np.any(aw[:, self.radius] != 0.0):
+            raise ValueError("center column of axis_weights must be 0 "
+                             "(use `center` instead)")
+
+    # ---- derived quantities used by the performance model & benchmarks ----
+
+    @property
+    def points(self) -> int:
+        """Number of taps (thesis: '2*dims*r + 1'-point star)."""
+        return 2 * self.dims * self.radius + 1
+
+    @property
+    def flops_per_cell(self) -> int:
+        """FLOPs per cell update: one multiply per tap + (taps-1) adds.
+
+        Matches the thesis's counting (first-order 2D 5-point = 9 FLOPs,
+        first-order 3D 7-point = 13 FLOPs).
+        """
+        return 2 * self.points - 1
+
+    @property
+    def weights(self) -> np.ndarray:
+        return np.asarray(self.axis_weights, dtype=np.float32)
+
+    def halo(self, bt: int) -> int:
+        """Halo width consumed by ``bt`` fused time steps (thesis §5.3.2)."""
+        return bt * self.radius
+
+
+# ---------------------------------------------------------------------------
+# Factories for the stencils evaluated in the thesis (Tables 5-2, 5-6, 5-7).
+# ---------------------------------------------------------------------------
+
+def diffusion(dims: int, radius: int = 1) -> StencilSpec:
+    """High-order diffusion stencil (thesis Table 5-7, 'Diffusion 2D/3D').
+
+    Symmetric star: every tap at distance d along any axis has weight
+    1/(points-1) * (1/d) normalized so all weights (incl. center) sum to 1
+    — a stable diffusion operator for any radius.
+    """
+    n_neighbors = 2 * dims * radius
+    raw = np.zeros((dims, 2 * radius + 1), dtype=np.float64)
+    for a in range(dims):
+        for o in range(1, radius + 1):
+            raw[a, radius + o] = 1.0 / o
+            raw[a, radius - o] = 1.0 / o
+    total = raw.sum()
+    center = 0.4
+    raw *= (1.0 - center) / total
+    return StencilSpec(dims=dims, radius=radius, center=center,
+                       axis_weights=tuple(map(tuple, raw)),
+                       name=f"diffusion{dims}d_r{radius}")
+
+
+def hotspot2d(sdc: float = 0.1, r_amb: float = 0.05) -> StencilSpec:
+    """Hotspot-like 5-point stencil (thesis §4.3.1.2) without the power term.
+
+    The full Rodinia Hotspot (with the power grid) lives in
+    ``repro.apps.hotspot``; this spec captures its temperature stencil.
+    """
+    w = sdc
+    aw = np.zeros((2, 3), dtype=np.float64)
+    aw[:, 0] = w
+    aw[:, 2] = w
+    center = 1.0 - 4.0 * w - r_amb
+    return StencilSpec(dims=2, radius=1, center=center,
+                       axis_weights=tuple(map(tuple, aw)), name="hotspot2d")
+
+
+def hotspot3d() -> StencilSpec:
+    """7-point stencil analogous to Rodinia Hotspot3D's temperature update."""
+    aw = np.zeros((3, 3), dtype=np.float64)
+    aw[:, 0] = 0.12
+    aw[:, 2] = 0.12
+    return StencilSpec(dims=3, radius=1, center=1.0 - 6 * 0.12 - 0.02,
+                       axis_weights=tuple(map(tuple, aw)), name="hotspot3d")
+
+
+ALL_BENCH_SPECS = tuple(
+    [diffusion(2, r) for r in (1, 2, 3, 4)]
+    + [diffusion(3, r) for r in (1, 2, 3, 4)]
+    + [hotspot2d(), hotspot3d()]
+)

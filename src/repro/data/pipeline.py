@@ -1,0 +1,96 @@
+"""Deterministic synthetic data pipeline (sharded, restartable).
+
+Tokens are generated from a counter-based hash (no stored state beyond
+the step number), so:
+  * any host can generate exactly its shard of the global batch,
+  * restart-after-failure is bitwise reproducible (the trainer just
+    re-seeds from the restored step),
+  * the stream has learnable structure (an affine token recurrence with
+    hash noise) so smoke-training shows a decreasing loss.
+
+For the vlm/audio archs the modality frontend is a stub per the
+assignment: the pipeline emits the precomputed patch/frame embeddings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+
+@dataclasses.dataclass
+class DataConfig:
+    seq_len: int = 128
+    global_batch: int = 8
+    seed: int = 1234
+    noise: float = 0.05       # fraction of hash-random tokens
+
+
+def _hash_u32(x: np.ndarray) -> np.ndarray:
+    x = x.astype(np.uint64)
+    x = (x ^ (x >> 16)) * np.uint64(0x45d9f3b)
+    x = (x ^ (x >> 16)) * np.uint64(0x45d9f3b)
+    x = x ^ (x >> 16)
+    return (x & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+
+
+class SyntheticLM:
+    """Yields {tokens, labels, (stub_embeds|frame_embeds)} numpy batches."""
+
+    def __init__(self, cfg: ArchConfig, data: DataConfig,
+                 host_index: int = 0, host_count: int = 1):
+        assert data.global_batch % host_count == 0
+        self.cfg = cfg
+        self.data = data
+        self.host_index = host_index
+        self.host_count = host_count
+        self.local_batch = data.global_batch // host_count
+        self.step = 0
+
+    def set_step(self, step: int):
+        self.step = step
+
+    def _tokens(self, step: int) -> np.ndarray:
+        d = self.data
+        v = self.cfg.vocab
+        b_ids = (np.arange(self.local_batch)
+                 + self.host_index * self.local_batch)
+        base = _hash_u32(np.uint64(d.seed)
+                         + np.uint64(step) * np.uint64(1_000_003)
+                         + b_ids.astype(np.uint64) * np.uint64(7919))
+        t = np.arange(d.seq_len + 1, dtype=np.uint64)
+        # affine recurrence: tok_{i} = (a*i + b0) % v, with hash noise
+        a = (base % 97 + 1).astype(np.uint64)
+        toks = ((a[:, None] * t[None, :] + base[:, None]) % np.uint64(v))
+        noise_mask = (_hash_u32(toks + np.uint64(step))
+                      % np.uint32(1000)) < np.uint32(1000 * d.noise)
+        noise = _hash_u32(toks * np.uint64(31)) % np.uint32(v)
+        toks = np.where(noise_mask, noise, toks)
+        return toks.astype(np.int32)
+
+    def __iter__(self) -> Iterator[dict]:
+        return self
+
+    def __next__(self) -> dict:
+        cfg = self.cfg
+        toks = self._tokens(self.step)
+        tokens, labels = toks[:, :-1], toks[:, 1:]
+        batch = {"tokens": tokens, "labels": labels}
+        if cfg.modality_stub == "vision":
+            n = cfg.n_stub_tokens
+            rng = np.random.default_rng(self.data.seed + self.step)
+            batch["stub_embeds"] = rng.standard_normal(
+                (self.local_batch, n, cfg.d_model)).astype(np.float32)
+            # labels align with [stub ; tokens]; stub positions masked.
+            pad = np.full((self.local_batch, n), -1, np.int32)
+            batch["labels"] = np.concatenate([pad, labels], axis=1)
+        if cfg.modality_stub == "audio":
+            rng = np.random.default_rng(self.data.seed + self.step)
+            batch["frame_embeds"] = rng.standard_normal(
+                (self.local_batch, self.data.seq_len,
+                 cfg.d_model)).astype(np.float32)
+        self.step += 1
+        return batch

@@ -1,0 +1,85 @@
+"""GPipe-style pipeline parallelism over shard_map + collective_permute.
+
+The SPMD circular-pipeline schedule: the "stage" mesh axis holds one
+layer-group per device; microbatches enter at stage 0, activations hop
+stage->stage+1 via ``lax.ppermute`` each tick, and outputs drain from
+the last stage. Total ticks = n_micro + n_stages - 1; bubble fraction =
+(n_stages-1)/(n_micro+n_stages-1) — the same fill/drain overhead as the
+thesis's pipeline model `T = P + II·(L-1)` with P = n_stages and II = 1
+(§3.1: the pipeline-depth term amortizes as the trip count grows).
+
+Composable: `pipeline_forward` runs *inside* an enclosing shard_map and
+can be combined with data parallelism on other mesh axes. The 40-cell
+dry-run uses DP/FSDP/TP/EP/SP (deployment-realistic at these sizes);
+PP is exercised by tests and examples.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def pipeline_forward(stage_fn: Callable, stage_params, xs: jax.Array,
+                     *, axis_name: str = "stage") -> jax.Array:
+    """Run the circular pipeline (call inside shard_map).
+
+    stage_fn: (params_of_stage, x_mb) -> y_mb with y_mb.shape == x_mb.shape
+    stage_params: this device's stage parameters (already sharded).
+    xs: [n_micro, mb, ...] microbatches (replicated input; stage 0 feeds).
+    Returns: [n_micro, mb, ...] outputs (valid on every device after the
+    final masked psum broadcast from the last stage).
+    """
+    n = jax.lax.axis_size(axis_name)
+    stage = jax.lax.axis_index(axis_name)
+    n_micro = xs.shape[0]
+    perm = [(i, (i + 1) % n) for i in range(n)]
+
+    def tick(t, carry):
+        buf, ys = carry
+        # stage 0 consumes microbatch t (zeros once drained)
+        feed = jax.lax.dynamic_index_in_dim(
+            xs, jnp.clip(t, 0, n_micro - 1), 0, keepdims=False)
+        feed = feed * (t < n_micro).astype(feed.dtype)
+        inp = jnp.where(stage == 0, feed, buf)
+        out = stage_fn(stage_params, inp)
+        # last stage emits microbatch t-(n-1)
+        out_idx = jnp.clip(t - (n - 1), 0, n_micro - 1)
+        upd = jax.lax.dynamic_update_index_in_dim(ys, out, out_idx, 0)
+        ys = jnp.where((stage == n - 1) & (t >= n - 1), upd, ys)
+        buf = jax.lax.ppermute(out, axis_name, perm)
+        return buf, ys
+
+    buf0 = jnp.zeros_like(xs[0])
+    ys0 = jnp.zeros_like(xs)
+    _, ys = jax.lax.fori_loop(0, n_micro + n - 1, tick, (buf0, ys0))
+    # broadcast the last stage's outputs to every stage
+    ys = jax.lax.psum(jnp.where(stage == n - 1, ys, jnp.zeros_like(ys)),
+                      axis_name)
+    return ys
+
+
+def make_pipelined_apply(stage_fn: Callable, mesh, n_stages: int,
+                         axis_name: str = "stage") -> Callable:
+    """jit-able wrapper: (stacked_stage_params, xs) -> ys.
+
+    stacked_stage_params: pytree with leading [n_stages, ...] dim,
+    sharded one stage per device along ``axis_name``.
+    """
+    @functools.partial(
+        jax.shard_map, mesh=mesh,
+        in_specs=(P(axis_name), P()), out_specs=P(),
+        check_vma=False)
+    def apply(stacked, xs):
+        local = jax.tree_util.tree_map(lambda x: x[0], stacked)
+        return pipeline_forward(stage_fn, local, xs, axis_name=axis_name)
+
+    return jax.jit(apply)
+
+
+def bubble_fraction(n_stages: int, n_micro: int) -> float:
+    """Pipeline-fill overhead — thesis Eq. 3-1's P/(P+II·(L-1)) analog."""
+    return (n_stages - 1) / (n_micro + n_stages - 1)

@@ -1,0 +1,216 @@
+"""Sharding rules: parameter / batch / cache PartitionSpecs.
+
+Parallelism map (DESIGN.md §5):
+  * DP + FSDP (ZeRO-3): batch and every weight matrix shard one dim over
+    the combined ("pod","data") axes;
+  * TP: the other weight dim shards over "model" (attention heads / ffn
+    / vocab);
+  * EP: MoE expert dim shards over "model";
+  * SP: for long_500k (batch=1) the KV cache shards its *sequence* dim
+    over the dp axes instead of batch.
+
+GSPMD handles non-divisible cases by padding (e.g. 40 heads over 16),
+which is deliberately allowed — the roofline report exposes the waste
+and the §Perf hillclimb addresses the cells where it matters.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import dp_axes
+
+_IN2 = {"wq", "wk", "wv", "wr", "wg", "w1", "w3", "win", "ww1",
+        "in_proj", "router"}
+_OUT2 = {"wo", "w2", "wout", "out_proj", "ww2"}
+_STACKS = {"blocks", "encoder"}
+
+
+def _names(path) -> list[str]:
+    out = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            out.append(str(p.key))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            out.append(p.name)
+    return out
+
+
+def _axes_size(mesh, entry) -> int:
+    if entry is None:
+        return 1
+    axes = entry if isinstance(entry, tuple) else (entry,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _sanitize(spec: tuple, shape: tuple, mesh) -> tuple:
+    """Drop per-dim sharding where the global dim is not divisible.
+
+    jit ``in_shardings`` (unlike GSPMD's internal propagation) rejects
+    non-divisible shardings outright — e.g. 8 kv-heads over a 16-way
+    model axis, grok's 8 experts, whisper's 51865 vocab, or long_500k's
+    batch of 1. Dropping to replicated for that dim keeps the rest of
+    the spec; targeted fallbacks below re-home the "model" axis to a
+    divisible dim first where it matters for memory.
+    """
+    out = []
+    for dim, entry in zip(shape, spec):
+        out.append(entry if dim % _axes_size(mesh, entry) == 0 else None)
+    return tuple(out)
+
+
+def _param_spec(names: list[str], shape: tuple, mesh, fsdp) -> P:
+    name = names[-1]
+    stacked = 1 if (names and names[0] in _STACKS) else 0
+    core_shape = shape[stacked:]
+    core = len(core_shape)
+    model_n = mesh.shape["model"]
+    if name == "embed":
+        spec = ("model", fsdp)
+    elif name == "head":
+        spec = (fsdp, "model")
+    elif name == "router":
+        spec = (fsdp, None)       # [d, E]: E is tiny and rarely divisible
+    elif name in _IN2:
+        if core == 2:
+            spec = (fsdp, "model")
+        elif core == 3:           # MoE experts [E, d_in, d_out]
+            # EP when E divides the model axis, else TP on d_out — the
+            # expert weights are the dominant bytes and must use "model".
+            spec = (("model", fsdp, None)
+                    if core_shape[0] % model_n == 0
+                    else (None, fsdp, "model"))
+        else:
+            spec = (None,) * core
+    elif name in _OUT2:
+        if core == 2:
+            spec = ("model", fsdp)
+        elif core == 3:           # [E, d_in(ff), d_out]
+            spec = (("model", None, fsdp)
+                    if core_shape[0] % model_n == 0
+                    else (None, "model", fsdp))
+        else:
+            spec = (None,) * core
+    else:
+        spec = (None,) * core    # norms, mixes, decay params, u, D, ...
+    spec = (None,) * stacked + _sanitize(tuple(spec), core_shape, mesh)
+    return P(*spec)
+
+
+_SERVING_FSDP_THRESHOLD = 6 * 2 ** 30   # bytes of TP-sharded params/device
+
+
+def param_shardings(params_shapes: Any, mesh, *, serving: bool = False) -> Any:
+    """PartitionSpec tree (as NamedShardings) for a params shape-tree.
+
+    serving=True: if the TP-sharded parameters fit comfortably per
+    device, drop the FSDP dimension (replicate over dp). ZeRO-3 weight
+    shards must be all-gathered *every step*; for a decode step that
+    gather dwarfs the actual compute traffic (measured on rwkv6-7b
+    decode: 118 MB of all-gather vs ~1 MB of everything else —
+    EXPERIMENTS.md §Perf). Models too big for that (grok) keep FSDP.
+    """
+    fsdp = dp_axes(mesh)
+    if serving:
+        total = sum(l.size * jnp_itemsize(l) for l in
+                    jax.tree_util.tree_leaves(params_shapes))
+        if total / mesh.shape["model"] <= _SERVING_FSDP_THRESHOLD:
+            fsdp = None
+
+    def one(path, leaf):
+        return NamedSharding(mesh, _param_spec(_names(path), leaf.shape,
+                                               mesh, fsdp))
+
+    return jax.tree_util.tree_map_with_path(one, params_shapes)
+
+
+def jnp_itemsize(leaf) -> int:
+    import numpy as np
+    return np.dtype(leaf.dtype).itemsize
+
+
+def opt_shardings(opt_shapes: Any, params_shapes: Any, mesh) -> Any:
+    """Optimizer state mirrors parameter sharding (ZeRO); scalars replicate."""
+    fsdp = dp_axes(mesh)
+
+    def one(path, leaf):
+        names = _names(path)
+        if len(leaf.shape) == 0:
+            return NamedSharding(mesh, P())
+        # strip the leading "mu"/"nu" key; rest of path mirrors params
+        return NamedSharding(mesh, _param_spec(names[1:] or names,
+                                               leaf.shape, mesh, fsdp))
+
+    return jax.tree_util.tree_map_with_path(one, opt_shapes)
+
+
+# ---------------------------------------------------------------------------
+# Batches and caches
+# ---------------------------------------------------------------------------
+
+def batch_shardings(batch_shapes: Any, mesh, *, seq_sharded: bool = False):
+    """tokens/labels [B,S] -> P(dp, None); embeds [B,S,d] -> P(dp,None,None).
+
+    seq_sharded (long_500k, batch=1): shard S over dp instead.
+    """
+    dp = dp_axes(mesh)
+
+    def one(path, leaf):
+        nd = len(leaf.shape)
+        if nd == 0:
+            return NamedSharding(mesh, P())
+        if seq_sharded and nd >= 2 and leaf.shape[0] == 1:
+            spec = (None, dp) + (None,) * (nd - 2)
+        else:
+            spec = (dp,) + (None,) * (nd - 1)
+        return NamedSharding(mesh, P(*_sanitize(spec, leaf.shape, mesh)))
+
+    return jax.tree_util.tree_map_with_path(one, batch_shapes)
+
+
+def cache_shardings(cache_shapes: Any, mesh, *, seq_sharded: bool = False):
+    """KV caches [ (stack,) B, S, KV, D ] and SSM states.
+
+    default: batch over dp, kv-heads over model.
+    seq_sharded: sequence over dp (SP for long_500k), kv-heads over model.
+    """
+    dp = dp_axes(mesh)
+    model_n = mesh.shape["model"]
+
+    def one(path, leaf):
+        names = _names(path)
+        nd = len(leaf.shape)
+        stacked = 1 if (names and names[0] in _STACKS) else 0
+        core_shape = leaf.shape[stacked:]
+        core = nd - stacked
+        name = names[-1]
+        if name in ("k", "v", "ck", "cv", "rk", "rv"):   # [B,S,KV,D]
+            # TP on kv-heads when divisible; else TP on head_dim (GQA
+            # archs with 8 kv heads on a 16-way model axis) — the cache
+            # is the dominant serving allocation and must stay sharded.
+            kv_dim = ("model" if core_shape[2] % model_n == 0 else None)
+            d_dim = (None if kv_dim else "model")
+            if seq_sharded:
+                spec = (None, dp, kv_dim, d_dim)
+            else:
+                spec = (dp, None, kv_dim, d_dim)
+        elif name == "S":                          # [B, H, x, y]
+            spec = (dp, "model", None, None) if not seq_sharded \
+                else (None, "model", None, None)
+        elif name in ("last", "last_cm"):          # [B, d]
+            spec = (dp, None) if not seq_sharded else (None, None)
+        else:
+            spec = (None,) * core
+        spec = (None,) * stacked + _sanitize(tuple(spec), core_shape, mesh)
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())

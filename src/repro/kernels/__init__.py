@@ -1,0 +1,1 @@
+"""Pallas TPU kernels for the thesis's compute hot-spots (ch.5 stencils)."""

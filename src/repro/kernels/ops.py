@@ -1,0 +1,75 @@
+"""Public jit'd wrappers for the stencil kernels.
+
+Backend dispatch:
+  * ``"pallas"``     — compile the Pallas kernel for TPU (real hardware);
+  * ``"interpret"``  — execute the Pallas kernel body in Python on CPU
+                       (the validation mode used throughout this repo);
+  * ``"reference"``  — the pure-jnp oracle (kernels/ref.py), i.e. the
+                       thesis's "NDRange-like" data-parallel formulation;
+  * ``"auto"``       — pallas on TPU, interpret elsewhere.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.blocking import BlockPlan
+from repro.core.stencil import StencilSpec
+from repro.kernels import ref as _ref
+from repro.kernels.stencil2d import stencil2d as _stencil2d
+from repro.kernels.stencil3d import stencil3d as _stencil3d
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(backend: str) -> str:
+    if backend == "auto":
+        return "pallas" if _on_tpu() else "interpret"
+    return backend
+
+
+def stencil_sweep(x: jax.Array, spec: StencilSpec, bx: int = 256,
+                  bt: int = 1, backend: str = "auto",
+                  variant: str = "revolving",
+                  source: jax.Array | None = None) -> jax.Array:
+    """One blocked pass = ``bt`` fused time steps over the whole grid.
+
+    ``source``: optional per-step additive grid (Hotspot power input).
+    """
+    backend = _resolve(backend)
+    if backend == "reference":
+        return _ref.stencil_multistep(x, spec, bt, source)
+    interpret = backend == "interpret"
+    if spec.dims == 2:
+        return _stencil2d(x, spec, bx=bx, bt=bt, variant=variant,
+                          interpret=interpret, source=source)
+    return _stencil3d(x, spec, bx=bx, bt=bt, interpret=interpret,
+                      source=source)
+
+
+def stencil_run(x: jax.Array, spec: StencilSpec, n_steps: int,
+                bx: int = 256, bt: int = 1, backend: str = "auto",
+                variant: str = "revolving",
+                source: jax.Array | None = None) -> jax.Array:
+    """``n_steps`` total time steps as ceil(n/bt) blocked sweeps.
+
+    The trailing partial sweep runs with the remainder temporal degree so
+    the result is exactly ``n_steps`` applications of the stencil.
+    """
+    full, rem = divmod(n_steps, bt)
+    for _ in range(full):
+        x = stencil_sweep(x, spec, bx=bx, bt=bt, backend=backend,
+                          variant=variant, source=source)
+    if rem:
+        x = stencil_sweep(x, spec, bx=bx, bt=rem, backend=backend,
+                          variant=variant, source=source)
+    return x
+
+
+def plan_for(x: jax.Array, spec: StencilSpec, bx: int, bt: int) -> BlockPlan:
+    return BlockPlan(spec, x.shape, bx=bx, bt=bt,
+                     itemsize=x.dtype.itemsize)

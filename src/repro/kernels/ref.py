@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+Semantics contract (shared with the Pallas kernels): star stencil of
+``StencilSpec`` with Dirichlet-zero boundaries — reads outside the grid
+return 0 at *every* time step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.stencil import StencilSpec
+
+
+def _shift(x: jax.Array, axis: int, offset: int) -> jax.Array:
+    """x shifted so out[i] = x[i + offset] along ``axis``, zero-filled."""
+    r = abs(offset)
+    if r == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (r, r)
+    padded = jnp.pad(x, pad)
+    idx = [slice(None)] * x.ndim
+    idx[axis] = slice(r + offset, r + offset + x.shape[axis])
+    return padded[tuple(idx)]
+
+
+def stencil_step(x: jax.Array, spec: StencilSpec) -> jax.Array:
+    """One time step of the star stencil (any rank matching spec.dims)."""
+    if x.ndim != spec.dims:
+        raise ValueError(f"rank {x.ndim} != spec.dims {spec.dims}")
+    w = spec.weights
+    acc = jnp.asarray(spec.center, x.dtype) * x
+    r = spec.radius
+    for a in range(spec.dims):
+        for o in range(-r, r + 1):
+            coeff = float(w[a, r + o])
+            if o == 0 or coeff == 0.0:
+                continue
+            acc = acc + jnp.asarray(coeff, x.dtype) * _shift(x, a, o)
+    return acc
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "n_steps"))
+def stencil_multistep(x: jax.Array, spec: StencilSpec, n_steps: int,
+                      source: jax.Array | None = None) -> jax.Array:
+    """``n_steps`` time steps (the oracle for temporally-blocked kernels).
+
+    ``source`` (optional, same shape as x): a per-step additive grid —
+    the Hotspot "power" input (thesis §4.3.1.2). Each step computes
+    ``g <- stencil(g) + source``.
+    """
+    if source is None:
+        return jax.lax.fori_loop(
+            0, n_steps, lambda _, g: stencil_step(g, spec), x)
+    return jax.lax.fori_loop(
+        0, n_steps, lambda _, g: stencil_step(g, spec) + source, x)
+
+
+# ---------------------------------------------------------------------------
+# Oracle for the streaming-attention kernel (kernels/flash_attention.py).
+# ---------------------------------------------------------------------------
+
+def mha_reference(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool = True, scale: float | None = None) -> jax.Array:
+    """Naive attention oracle. q,k,v: [T, H, D] / [S, Hkv, D] (GQA allowed)."""
+    tq, hq, d = q.shape
+    sk, hkv, _ = k.shape
+    scale = scale if scale is not None else d ** -0.5
+    group = hq // hkv
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("thd,shd->hts", q.astype(jnp.float32),
+                        kk.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((tq, sk), bool), k=sk - tq)
+        logits = jnp.where(mask[None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("hts,shd->thd", p, vv.astype(jnp.float32)).astype(q.dtype)

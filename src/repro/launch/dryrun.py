@@ -1,0 +1,307 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves the sharding config is coherent at 256/512
+chips (compile succeeds), that it fits (memory_analysis) and extracts
+the roofline inputs (cost_analysis + collective bytes from the
+partitioned HLO). Results are cached as JSON per cell under
+``benchmarks/results/dryrun/`` for launch.roofline to aggregate.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import shapes as shp
+from repro.configs.registry import ARCHS, get
+from repro.distributed import sharding as shd
+from repro.launch import hlo_analysis as hlo
+from repro.launch.mesh import make_production_mesh
+from repro.optim.adamw import OptConfig
+from repro.runtime import steps as steps_mod
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__),
+                           "..", "..", "..", "benchmarks", "results",
+                           "dryrun")
+
+
+def opt_config_for(cfg) -> OptConfig:
+    # >50B params: bf16 optimizer moments, or 256 x 16 GB cannot hold
+    # params + moments + grads (DESIGN.md §5).
+    big = cfg.param_count() > 50e9
+    return OptConfig(state_dtype="bfloat16" if big else "float32")
+
+
+def _lower_cell(cfg, shape, mesh, microbatches: int = 1,
+                segments: int = 1):
+    """Returns (lowered, aux) for one cell."""
+    oc = opt_config_for(cfg)
+    seq_sharded = shape.name == "long_500k"
+    if shape.kind == "train":
+        step = steps_mod.make_train_step(cfg, oc, microbatches)
+        state_shapes = steps_mod.state_shapes(cfg, oc)
+        state_sh = {
+            "params": shd.param_shardings(state_shapes["params"], mesh),
+            "opt": shd.opt_shardings(state_shapes["opt"],
+                                     state_shapes["params"], mesh),
+        }
+        batch_shapes = shp.input_specs(cfg, shape)
+        batch_sh = shd.batch_shardings(batch_shapes, mesh)
+        fn = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                     out_shardings=(state_sh, None),
+                     donate_argnums=(0,))
+        lowered = fn.lower(state_shapes, batch_shapes)
+    elif shape.kind == "prefill":
+        step = steps_mod.make_prefill_step(cfg, segments)
+        params_shapes = steps_mod.param_shapes(cfg)
+        params_sh = shd.param_shardings(params_shapes, mesh, serving=True)
+        cache_shapes = steps_mod.cache_shapes(cfg, shape.batch, shape.seq)
+        cache_sh = shd.cache_shardings(cache_shapes, mesh,
+                                       seq_sharded=seq_sharded)
+        batch_shapes = shp.input_specs(cfg, shape)
+        batch_sh = shd.batch_shardings(batch_shapes, mesh)
+        fn = jax.jit(step,
+                     in_shardings=(params_sh, cache_sh, batch_sh),
+                     out_shardings=(None, cache_sh),
+                     donate_argnums=(1,))
+        lowered = fn.lower(params_shapes, cache_shapes, batch_shapes)
+    else:  # decode
+        step = steps_mod.make_serve_step(cfg)
+        params_shapes = steps_mod.param_shapes(cfg)
+        params_sh = shd.param_shardings(params_shapes, mesh, serving=True)
+        cache_shapes = steps_mod.cache_shapes(cfg, shape.batch, shape.seq)
+        cache_sh = shd.cache_shardings(cache_shapes, mesh,
+                                       seq_sharded=seq_sharded)
+        specs = shp.input_specs(cfg, shape)
+        tok_sh = shd.batch_shardings(specs, mesh)
+        fn = jax.jit(step,
+                     in_shardings=(params_sh, cache_sh, tok_sh["token"],
+                                   tok_sh["pos"]),
+                     out_shardings=(None, cache_sh),
+                     donate_argnums=(1,))
+        lowered = fn.lower(params_shapes, cache_shapes, specs["token"],
+                           specs["pos"])
+    return lowered
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             verbose: bool = True) -> dict:
+    cfg = get(arch)
+    shape = shp.SHAPES[shape_name]
+    reason = shp.skip_reason(cfg, shape)
+    if reason:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "status": "skipped", "reason": reason}
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = mesh.devices.size
+    t0 = time.time()
+    target = 15.0 * 2 ** 30          # leave ~1 GiB headroom under 16 GiB
+    micro = 1
+    segments = 1
+    can_segment = not (cfg.modality_stub or cfg.enc_dec)
+    with mesh:
+        while True:
+            lowered = _lower_cell(cfg, shape, mesh, microbatches=micro,
+                                  segments=segments)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = hlo.memory_summary(compiled)
+            if mem["total_hbm_bytes"] <= target:
+                break
+            # Fit levers (the framework's temporal blocking of the batch
+            # / sequence dimensions): gradient accumulation for train,
+            # chunked prefill for prefill.
+            # each microbatch must still cover the dp axis (batch/micro >=
+            # dp shards), or DP degenerates to replicated compute.
+            dp_n = chips // mesh.shape["model"]
+            micro_cap = max(shape.batch // dp_n, 1)
+            if shape.kind == "train" and micro < micro_cap:
+                est = max(2 * micro,
+                          2 ** int(np.ceil(np.log2(
+                              mem["temp_size_in_bytes"] / (0.8 * target)))))
+                micro = min(int(est), micro_cap)
+                lever = f"microbatches={micro}"
+            elif (shape.kind == "prefill" and can_segment
+                    and segments < shape.seq // 2048):
+                segments *= 2
+                lever = f"segments={segments}"
+            else:
+                break
+            if verbose:
+                print(f"  [{arch} x {shape_name}] "
+                      f"{mem['total_hbm_bytes']/2**30:.1f} GiB > 15 GiB; "
+                      f"retry with {lever}")
+        cost = hlo.cost_summary(compiled)
+        text = compiled.as_text()
+        coll = hlo.collective_bytes(text)
+        counts = hlo.collective_counts(text)
+    tokens = shape.batch * (shape.seq if shape.kind != "decode" else 1)
+    res = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "status": "ok", "chips": chips,
+        "kind": shape.kind, "tokens": tokens, "microbatches": micro,
+        "segments": segments,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": mem, "cost": cost,
+        "collective_bytes": coll, "collective_counts": counts,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+    if verbose:
+        print(f"[{arch} x {shape_name} x {mesh_kind}] compile OK "
+              f"({t_compile:.0f}s)")
+        print(f"  per-device HBM: args={mem['argument_size_in_bytes']/2**30:.2f} "
+              f"GiB temps={mem['temp_size_in_bytes']/2**30:.2f} GiB "
+              f"out={mem['output_size_in_bytes']/2**30:.2f} GiB "
+              f"aliased={mem['alias_size_in_bytes']/2**30:.2f} GiB")
+        print(f"  per-device flops={cost['flops']:.3e} "
+              f"bytes={cost['bytes']:.3e} "
+              f"collective_bytes={coll.get('total', 0):.3e}")
+        print(f"  collectives: {counts}")
+    return res
+
+
+def cell_path(arch, shape_name, mesh_kind):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    return os.path.join(RESULTS_DIR, f"{arch}__{shape_name}__{mesh_kind}.json")
+
+
+# ---------------------------------------------------------------------------
+# Cost probes: XLA's cost_analysis counts while/scan loop bodies ONCE, so
+# the production lowering (layers scanned, attention chunk-scanned,
+# remat'd) under-reports flops/bytes/collectives. The probe lowers the
+# same cell with n_layers = 1x and 2x the layer period, remat off and
+# attention unchunked (loop-free); per-period cost = cost(2p) - cost(1p),
+# and total = fixed + per_period * n_layers/period. This derives the
+# §Roofline terms from *compiled artifacts* with exact loop accounting
+# (layers are identical by construction).
+# ---------------------------------------------------------------------------
+
+def _probe_cost(cfg, shape, mesh):
+    import dataclasses
+    period = len(cfg.layer_kinds())
+    results = {}
+    for mult in (1, 2):
+        over = dict(n_layers=period * mult, remat=False,
+                    attn_chunk=max(shape.seq, cfg.attn_chunk))
+        if cfg.enc_dec:
+            over["n_enc_layers"] = mult
+        pcfg = dataclasses.replace(cfg, **over)
+        lowered = _lower_cell(pcfg, shape, mesh)
+        compiled = lowered.compile()
+        cost = hlo.cost_summary(compiled)
+        text = compiled.as_text()
+        coll = hlo.collective_bytes(text).get("total", 0)
+        results[mult] = {"flops": cost["flops"], "bytes": cost["bytes"],
+                         "collective": coll}
+    per_period = {k: results[2][k] - results[1][k]
+                  for k in ("flops", "bytes", "collective")}
+    fixed = {k: results[1][k] - per_period[k]
+             for k in ("flops", "bytes", "collective")}
+    n_periods = cfg.n_layers / period
+    total = {k: max(fixed[k], 0.0) + per_period[k] * n_periods
+             for k in ("flops", "bytes", "collective")}
+    if cfg.enc_dec:  # encoder scales with n_enc_layers as well
+        total = {k: total[k] for k in total}  # enc included in per-period
+    return {"per_period": per_period, "fixed": fixed,
+            "probe_raw": results, "total": total}
+
+
+def run_probe(arch: str, shape_name: str, verbose: bool = True) -> dict:
+    """Attach probe-corrected costs to an existing single-mesh cell."""
+    cfg = get(arch)
+    shape = shp.SHAPES[shape_name]
+    if shp.skip_reason(cfg, shape):
+        return {}
+    path = cell_path(arch, shape_name, "single")
+    if not os.path.exists(path):
+        raise FileNotFoundError(f"run the dry-run first: {path}")
+    with open(path) as f:
+        cell = json.load(f)
+    if cell.get("status") != "ok":
+        return {}
+    mesh = make_production_mesh()
+    with mesh:
+        probe = _probe_cost(cfg, shape, mesh)
+    cell["probe"] = probe
+    with open(path, "w") as f:
+        json.dump(cell, f, indent=1)
+    if verbose:
+        t = probe["total"]
+        print(f"[{arch} x {shape_name}] probe: flops={t['flops']:.3e} "
+              f"bytes={t['bytes']:.3e} coll={t['collective']:.3e} "
+              f"(per-device, loop-corrected)")
+    return probe
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(shp.SHAPES) + [None])
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--probe", action="store_true",
+                    help="attach loop-corrected cost probes to cached "
+                         "single-mesh cells")
+    args = ap.parse_args()
+
+    archs = list(ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = list(shp.SHAPES) if (args.all or not args.shape) \
+        else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    failures = []
+    if args.probe:
+        for arch in archs:
+            for shape_name in shapes:
+                try:
+                    run_probe(arch, shape_name)
+                except Exception as e:  # noqa: BLE001
+                    traceback.print_exc()
+                    failures.append((arch, shape_name, "probe"))
+        if failures:
+            print(f"\nFAILED probes: {failures}")
+            raise SystemExit(1)
+        print("\nall probes OK")
+        return
+
+    for arch in archs:
+        for shape_name in shapes:
+            for mesh_kind in meshes:
+                path = cell_path(arch, shape_name, mesh_kind)
+                if os.path.exists(path) and not args.force:
+                    print(f"[{arch} x {shape_name} x {mesh_kind}] cached")
+                    continue
+                try:
+                    res = run_cell(arch, shape_name, mesh_kind)
+                except Exception as e:  # noqa: BLE001
+                    traceback.print_exc()
+                    res = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_kind, "status": "error",
+                           "error": f"{type(e).__name__}: {e}"}
+                    failures.append((arch, shape_name, mesh_kind))
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+    if failures:
+        print(f"\nFAILED cells: {failures}")
+        raise SystemExit(1)
+    print("\nall requested cells OK")
+
+
+if __name__ == "__main__":
+    main()

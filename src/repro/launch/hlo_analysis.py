@@ -1,0 +1,95 @@
+"""Post-SPMD HLO analysis: collective bytes + roofline inputs.
+
+``cost_analysis()`` gives FLOPs and bytes but NOT collective traffic;
+we parse the optimized (partitioned) HLO text and sum operand bytes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (assignment §Roofline).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  f32[16,512,128]{2,1,0}
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|[a-z0-9_]+\[[^\]]*\][^ ]*)\s+"
+    r"(" + "|".join(_COLLECTIVES) + r")(?:-start|-done)?\((.*)$")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-kind operand bytes of collectives in (partitioned) HLO text.
+
+    Returns {kind: bytes, ..., "total": bytes}. Bytes are *per device*
+    (the partitioned module is the per-device program).
+    """
+    out: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        kind, operands = m.group(1), m.group(2)
+        if "-done" in line.split("=")[1][:80] and f"{kind}-done" in line:
+            continue  # async pair: count the -start only
+        total = 0
+        for sm in _SHAPE_RE.finditer(operands):
+            total += _shape_bytes(sm.group(1), sm.group(2))
+        if total == 0:
+            # operands not typed inline; fall back to the result shape
+            for sm in _SHAPE_RE.finditer(line.split("=")[1]):
+                total += _shape_bytes(sm.group(1), sm.group(2))
+                break
+        out[kind] += total
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return dict(out)
+
+
+def collective_counts(hlo_text: str) -> Dict[str, int]:
+    out: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if m and f"{m.group(1)}-done" not in line:
+            out[m.group(1)] += 1
+    return dict(out)
+
+
+def cost_summary(compiled) -> Dict[str, float]:
+    """Normalize compiled.cost_analysis() across jax versions."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", ca.get("bytes_accessed", 0.0)))
+    return {"flops": flops, "bytes": byts}
+
+
+def memory_summary(compiled) -> Dict[str, float]:
+    ma = compiled.memory_analysis()
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        out[k] = float(getattr(ma, k, 0) or 0)
+    out["total_hbm_bytes"] = (out["argument_size_in_bytes"]
+                              + out["output_size_in_bytes"]
+                              + out["temp_size_in_bytes"]
+                              - out["alias_size_in_bytes"])
+    return out

@@ -1,0 +1,451 @@
+"""GQA attention with streaming ("flash") softmax.
+
+The streaming form — a scan over KV blocks carrying an online-softmax
+accumulator — is the sequence-dimension instance of the thesis's
+shift-register streaming (DESIGN.md §5.2): a fixed VMEM-sized window
+slides over the sequence, so `prefill_32k` never materializes an S×S
+score matrix. Sliding-window (gemma3 "local") attention is the same code
+with a 1D-stencil mask of radius `window`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, mesh_axis_size, rope, shard_hint
+
+_NEG = -1e30
+
+
+def attn_init(key, cfg, cross: bool = False):
+    d, hd = cfg.d_model, cfg.head_dim
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d, h * hd, dt),
+        "wk": dense_init(ks[1], d, kv * hd, dt),
+        "wv": dense_init(ks[2], d, kv * hd, dt),
+        "wo": dense_init(ks[3], h * hd, d, dt, scale=(h * hd) ** -0.5),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Streaming attention (train / prefill)
+#
+# custom_vjp: the backward pass recomputes each (q, kv) score block from
+# the saved (q, k, v, out, lse) instead of storing per-block softmax
+# residuals — FlashAttention-2's memory behavior. Without this, the
+# backward of the block scans saves O(T·S/chunk) f32 residuals per layer
+# and the production train_4k cells overflow HBM (measured: 114 GiB/dev
+# before, see EXPERIMENTS.md §Perf).
+# ---------------------------------------------------------------------------
+
+
+def _block_mask(q_pos, kv_pos, causal, window, kv_len=None, kv_start=None):
+    mask = jnp.ones((q_pos.shape[0], kv_pos.shape[0]), bool)
+    if causal:
+        mask &= q_pos[:, None] >= kv_pos[None, :]
+    if window:
+        mask &= (q_pos[:, None] - kv_pos[None, :]) < window
+    if kv_len is not None:
+        mask &= kv_pos[None, :] < kv_len   # static int or traced scalar
+    if kv_start is not None:
+        mask &= kv_pos[None, :] >= kv_start
+    return mask
+
+
+def _flash_fwd_impl(q, k, v, q_offset, causal, window, chunk, kv_len,
+                    kv_start=None):
+    b, t, h, d = q.shape
+    s, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    cq = min(chunk, t)
+    ckv = min(chunk, s)
+    assert t % cq == 0 and s % ckv == 0, (t, s, chunk)
+    nq, nkv = t // cq, s // ckv
+    scale = d ** -0.5
+
+    qc = q.reshape(b, nq, cq, kvh, g, d).transpose(1, 0, 2, 3, 4, 5)
+    kc = k.reshape(b, nkv, ckv, kvh, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nkv, ckv, kvh, d).transpose(1, 0, 2, 3, 4)
+
+    kv_pos = (jnp.arange(nkv)[:, None] * ckv
+              + jnp.arange(ckv)[None, :])          # [nkv, ckv]
+
+    def per_q(_, qi_iq):
+        qi, iq = qi_iq                                # [B,cq,KV,G,D], scalar
+        q_pos = q_offset + iq * cq + jnp.arange(cq)   # [cq]
+        m0 = jnp.full((b, kvh, g, cq), _NEG, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, cq), jnp.float32)
+        o0 = jnp.zeros((b, kvh, g, cq, d), jnp.float32)
+
+        def kv_step(acc, kv_in):
+            m, l, o = acc
+            kj, vj, kp = kv_in                        # [B,ckv,KV,D], [ckv]
+            sij = jnp.einsum("bqkgd,bskd->bkgqs", qi.astype(jnp.float32),
+                             kj.astype(jnp.float32)) * scale
+            mask = _block_mask(q_pos, kp, causal, window, kv_len,
+                               kv_start)
+            sij = jnp.where(mask, sij, _NEG)
+            m_new = jnp.maximum(m, sij.max(axis=-1))
+            p = jnp.exp(sij - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            o_new = o * corr[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p, vj.astype(jnp.float32))
+            return (m_new, l_new, o_new), None
+
+        (m, l, o), _ = jax.lax.scan(kv_step, (m0, l0, o0),
+                                    (kc, vc, kv_pos))
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))      # [B,KV,G,cq]
+        out = o / jnp.maximum(l[..., None], 1e-30)
+        out = out.transpose(0, 3, 1, 2, 4).reshape(b, cq, h, d)
+        return None, (out.astype(q.dtype), lse)
+
+    _, (outs, lses) = jax.lax.scan(per_q, None, (qc, jnp.arange(nq)))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, t, h, d)
+    return out, lses                                   # lses: [nq,B,KV,G,cq]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash(q, k, v, q_offset, causal, window, chunk, kv_len):
+    out, _ = _flash_fwd_impl(q, k, v, q_offset, causal, window, chunk,
+                             kv_len)
+    return out
+
+
+def _flash_vjp_fwd(q, k, v, q_offset, causal, window, chunk, kv_len):
+    out, lse = _flash_fwd_impl(q, k, v, q_offset, causal, window, chunk,
+                               kv_len)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_vjp_bwd(q_offset, causal, window, chunk, kv_len, res, dout):
+    q, k, v, out, lse = res
+    b, t, h, d = q.shape
+    s, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    cq = min(chunk, t)
+    ckv = min(chunk, s)
+    nq, nkv = t // cq, s // ckv
+    scale = d ** -0.5
+
+    qc = q.reshape(b, nq, cq, kvh, g, d).transpose(1, 0, 2, 3, 4, 5)
+    kc = k.reshape(b, nkv, ckv, kvh, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nkv, ckv, kvh, d).transpose(1, 0, 2, 3, 4)
+    doc = dout.reshape(b, nq, cq, kvh, g, d).transpose(1, 0, 2, 3, 4, 5)
+    oc = out.reshape(b, nq, cq, kvh, g, d).transpose(1, 0, 2, 3, 4, 5)
+    # D_i = rowsum(dout * out): [nq, B, KV, G, cq]
+    dsum = jnp.einsum("nbqkgd,nbqkgd->nbkgq", doc.astype(jnp.float32),
+                      oc.astype(jnp.float32))
+    kv_pos = (jnp.arange(nkv)[:, None] * ckv
+              + jnp.arange(ckv)[None, :])
+
+    def p_block(qi, kj, lse_i, q_pos, kp):
+        sij = jnp.einsum("bqkgd,bskd->bkgqs", qi.astype(jnp.float32),
+                         kj.astype(jnp.float32)) * scale
+        mask = _block_mask(q_pos, kp, causal, window, kv_len)
+        p = jnp.exp(sij - lse_i[..., None])
+        return jnp.where(mask, p, 0.0)
+
+    # ---- dq: outer scan over q chunks, inner over kv chunks ----
+    def dq_chunk(_, xs):
+        qi, do_i, lse_i, d_i, iq = xs
+        q_pos = q_offset + iq * cq + jnp.arange(cq)
+
+        def kv_step(acc, kv_in):
+            kj, vj, kp = kv_in
+            p = p_block(qi, kj, lse_i, q_pos, kp)
+            dp = jnp.einsum("bqkgd,bskd->bkgqs", do_i.astype(jnp.float32),
+                            vj.astype(jnp.float32))
+            ds = p * (dp - d_i[..., None])
+            acc = acc + jnp.einsum("bkgqs,bskd->bqkgd", ds,
+                                   kj.astype(jnp.float32)) * scale
+            return acc, None
+
+        acc0 = jnp.zeros((b, cq, kvh, g, d), jnp.float32)
+        acc, _ = jax.lax.scan(kv_step, acc0, (kc, vc, kv_pos))
+        return None, acc
+
+    _, dqc = jax.lax.scan(dq_chunk, None,
+                          (qc, doc, lse, dsum, jnp.arange(nq)))
+    dq = dqc.transpose(1, 0, 2, 3, 4, 5).reshape(b, t, h, d).astype(q.dtype)
+
+    # ---- dk/dv: outer scan over kv chunks, inner over q chunks ----
+    def dkv_chunk(_, xs):
+        kj, vj, kp = xs
+
+        def q_step(acc, q_in):
+            dk_a, dv_a = acc
+            qi, do_i, lse_i, d_i, iq = q_in
+            q_pos = q_offset + iq * cq + jnp.arange(cq)
+            p = p_block(qi, kj, lse_i, q_pos, kp)
+            dv_a = dv_a + jnp.einsum("bkgqs,bqkgd->bskd", p,
+                                     do_i.astype(jnp.float32))
+            dp = jnp.einsum("bqkgd,bskd->bkgqs", do_i.astype(jnp.float32),
+                            vj.astype(jnp.float32))
+            ds = p * (dp - d_i[..., None])
+            dk_a = dk_a + jnp.einsum("bkgqs,bqkgd->bskd", ds,
+                                     qi.astype(jnp.float32)) * scale
+            return (dk_a, dv_a), None
+
+        z = jnp.zeros((b, ckv, kvh, d), jnp.float32)
+        (dk_a, dv_a), _ = jax.lax.scan(
+            q_step, (z, z), (qc, doc, lse, dsum, jnp.arange(nq)))
+        return None, (dk_a, dv_a)
+
+    _, (dkc, dvc) = jax.lax.scan(dkv_chunk, None, (kc, vc, kv_pos))
+    dk = dkc.transpose(1, 0, 2, 3, 4).reshape(b, s, kvh, d).astype(k.dtype)
+    dv = dvc.transpose(1, 0, 2, 3, 4).reshape(b, s, kvh, d).astype(v.dtype)
+    return dq, dk, dv
+
+
+_flash.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+def flash_attention_inference(q, k, v, *, q_offset, causal=True, window=0,
+                              chunk=512, kv_len=None, kv_start=None):
+    """Forward-only streaming attention; ``q_offset`` and ``kv_len`` may
+    be traced scalars (chunked prefill: segment n attends the cache
+    filled by segments 0..n-1; cross-attention decode masks the unfilled
+    cache tail). Bypasses the custom VJP (whose nondiff arguments must
+    be static).
+    """
+    t, s = q.shape[1], k.shape[1]
+    pad_t = -t % chunk if t > chunk else 0
+    pad_s = -s % chunk if s > chunk else 0
+    qp = jnp.pad(q, ((0, 0), (0, pad_t), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+    if kv_len is None and pad_s:
+        kv_len = s
+    out, _ = _flash_fwd_impl(qp, kp, vp, q_offset, causal, window, chunk,
+                             kv_len, kv_start)
+    return out[:, :t]
+
+
+def flash_attention(q, k, v, *, q_offset=0, causal=True, window=0,
+                    chunk=512):
+    """q: [B,T,H,D], k/v: [B,S,KV,D] -> [B,T,H,D].
+
+    Streaming (online-softmax) attention over KV blocks with a
+    recompute-based custom VJP; the sequence-dimension instance of the
+    thesis's shift-register streaming. Non-chunk-multiple lengths are
+    zero-padded here (outside the custom VJP, so gradients flow through
+    the pad/slice) and padded kv positions are masked via ``kv_len``.
+    """
+    t, s = q.shape[1], k.shape[1]
+    pad_t = -t % chunk if t > chunk else 0
+    pad_s = -s % chunk if s > chunk else 0
+    if not pad_t and not pad_s:
+        return _flash(q, k, v, q_offset, causal, window, chunk, None)
+    qp = jnp.pad(q, ((0, 0), (0, pad_t), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+    out = _flash(qp, kp, vp, q_offset, causal, window, chunk,
+                 s if pad_s else None)
+    return out[:, :t]
+
+
+# ---------------------------------------------------------------------------
+# Ring-buffer ("shift register") KV cache for sliding-window layers.
+#
+# The thesis's central storage idiom — a line buffer holding exactly the
+# stencil's working window, advanced by bumping its start address
+# (§3.2.4.1) — applied to the sequence dimension: a local-attention
+# layer's reachable history is exactly `window` tokens, so its cache is
+# a [B, W, KV, D] ring written at slot pos % W. For gemma3 decode_32k
+# this shrinks 40 of 48 layer caches from 32768 to 1024 entries and cuts
+# the decode step's cache traffic by ~6x (EXPERIMENTS.md §Perf).
+# ---------------------------------------------------------------------------
+
+def make_ring_cache(cfg, batch: int, window: int, dtype=None):
+    dt = dtype or jnp.dtype(cfg.dtype)
+    shape = (batch, window, cfg.n_kv_heads, cfg.head_dim)
+    return {"rk": jnp.zeros(shape, dt), "rv": jnp.zeros(shape, dt)}
+
+
+def ring_decode_attention(q, rk, rv, pos, window):
+    """q: [B,1,H,D]; rk/rv: [B,W,KV,D] ring holding positions
+    (pos-W, pos]; pos: [] or [B]."""
+    b, _, h, d = q.shape
+    w, kvh = rk.shape[1], rk.shape[2]
+    g = h // kvh
+    pos = jnp.broadcast_to(jnp.atleast_1d(pos), (b,))
+    j = jnp.arange(w)
+    # absolute position held in slot j (after the current token's write)
+    p_j = pos[:, None] - ((pos[:, None] - j[None, :]) % w)   # [B, W]
+    valid = p_j >= 0
+    qr = q.reshape(b, kvh, g, d)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qr, rk,
+                        preferred_element_type=jnp.float32) * d ** -0.5
+    scores = jnp.where(valid[:, None, None, :], scores, _NEG)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(rv.dtype), rv,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+def _ring_decode_update(cache, k, v, pos, b):
+    w = cache["rk"].shape[1]
+    pos = jnp.broadcast_to(jnp.atleast_1d(pos), (b,))
+    slot = (pos % w).astype(jnp.int32)
+    upd = jax.vmap(lambda c, new, s: jax.lax.dynamic_update_slice(
+        c, new, (s, 0, 0)))
+    rk = upd(cache["rk"], k.astype(cache["rk"].dtype), slot)
+    rv = upd(cache["rv"], v.astype(cache["rv"].dtype), slot)
+    return {"rk": rk, "rv": rv}
+
+
+def _ring_prefill(cache, q, k, v, pos0, window, chunk):
+    """Prefill one segment [pos0, pos0+t) against a ring cache.
+
+    Unrolls the ring to linear order (positions pos0-W..pos0-1), runs
+    streaming attention over [prev window ; segment] in *relative*
+    coordinates, and re-rolls the last W positions into the new ring.
+    """
+    b, t = q.shape[0], q.shape[1]
+    w = cache["rk"].shape[1]
+    s0 = (pos0 % w).astype(jnp.int32)
+    lin_k = jnp.roll(cache["rk"], -s0, axis=1)     # rel. positions 0..W-1
+    lin_v = jnp.roll(cache["rv"], -s0, axis=1)
+    kv_k = jnp.concatenate([lin_k, k.astype(lin_k.dtype)], axis=1)
+    kv_v = jnp.concatenate([lin_v, v.astype(lin_v.dtype)], axis=1)
+    # relative q positions start at W; mask pre-history (pos0 < W)
+    out = flash_attention_inference(
+        q, kv_k, kv_v, q_offset=w, causal=True, window=window,
+        chunk=chunk, kv_start=jnp.maximum(w - pos0, 0))
+    tail_k = kv_k[:, -w:]
+    tail_v = kv_v[:, -w:]
+    shift = ((pos0 + t) % w).astype(jnp.int32)
+    new_cache = {"rk": jnp.roll(tail_k, shift, axis=1),
+                 "rv": jnp.roll(tail_v, shift, axis=1)}
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Decode attention over a KV cache (one new token)
+# ---------------------------------------------------------------------------
+
+def decode_attention(q, k_cache, v_cache, pos, *, window=0):
+    """q: [B,1,H,D]; caches: [B,S,KV,D]; pos: [] or [B] current position.
+
+    A per-slot ``pos`` vector is what lets the serving engine run
+    continuous batching: every slot decodes at its own depth.
+    """
+    b, _, h, d = q.shape
+    s, kvh = k_cache.shape[1], k_cache.shape[2]
+    g = h // kvh
+    pos = jnp.broadcast_to(jnp.atleast_1d(pos), (b,))
+    qr = q.reshape(b, kvh, g, d)
+    # The cache is head-dim-sharded when kv-heads don't divide the model
+    # axis (distributed/sharding.py). q propagates (kv x g)-sharded from
+    # wq; without resharding the *tiny* q here, GSPMD instead replicates
+    # the *huge* cache in f32 ("involuntary full rematerialization",
+    # +2 GiB x n_layers measured on gemma3 decode_32k).
+    if kvh % max(mesh_axis_size("model"), 1) != 0:
+        qr = shard_hint(qr, "dp", None, None, "model")
+    # f32 accumulation *inside* the dots (preferred_element_type) — an
+    # explicit .astype(f32) on the cache materializes a full f32 copy.
+    scores = jnp.einsum("bkgd,bskd->bkgs", qr, k_cache,
+                        preferred_element_type=jnp.float32) * d ** -0.5
+    idx = jnp.arange(s)
+    mask = idx[None, :] <= pos[:, None]                   # [B, S]
+    if window:
+        mask &= (pos[:, None] - idx[None, :]) < window
+    scores = jnp.where(mask[:, None, None, :], scores, _NEG)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Full attention block
+# ---------------------------------------------------------------------------
+
+def attn_apply(p, x, cfg, *, positions, causal=True, window=0,
+               kv_x: Optional[jax.Array] = None, use_rope=True,
+               cache=None, cache_pos=None, cross_cache=False):
+    """Returns (out, new_cache). cache: {"k","v"} [B,S,KV,D] or None."""
+    b, t, d = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, t, h, hd)
+    src = x if kv_x is None else kv_x
+    k = (src @ p["wk"]).reshape(b, src.shape[1], kvh, hd)
+    v = (src @ p["wv"]).reshape(b, src.shape[1], kvh, hd)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        if kv_x is None:
+            k = rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cross_cache and cache is not None:
+        # decode-time cross attention: attend over the (static) encoder
+        # kv, masking the unfilled cache tail via the stored length.
+        out = flash_attention_inference(
+            q, cache["k"], cache["v"], q_offset=0, causal=False,
+            chunk=cfg.attn_chunk, kv_len=cache.get("len"))
+        return out.reshape(b, t, h * hd) @ p["wo"], cache
+    if cache is not None and kv_x is None and "rk" in cache:
+        # sliding-window ring cache (the shift-register analog).
+        if t == 1:
+            new_cache = _ring_decode_update(cache, k, v, cache_pos, b)
+            out = ring_decode_attention(q, new_cache["rk"],
+                                        new_cache["rv"], cache_pos, window)
+        else:
+            pos0 = (jnp.asarray(0, jnp.int32) if cache_pos is None
+                    else jnp.asarray(cache_pos, jnp.int32).reshape(()))
+            out, new_cache = _ring_prefill(cache, q, k, v, pos0, window,
+                                           cfg.attn_chunk)
+        return out.reshape(b, t, h * hd) @ p["wo"], new_cache
+    if cache is not None and kv_x is None and t == 1:
+        # decode: write the new kv at cache_pos, attend over the cache.
+        # cache_pos may be [] (lockstep batch) or [B] (per-slot, for the
+        # serving engine's continuous batching).
+        if jnp.ndim(cache_pos) == 0:
+            kc = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, cache_pos, 0, 0))
+            vc = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, cache_pos, 0, 0))
+        else:
+            upd = jax.vmap(
+                lambda c, new, p_: jax.lax.dynamic_update_slice(
+                    c, new, (p_, 0, 0)))
+            kc = upd(cache["k"], k.astype(cache["k"].dtype), cache_pos)
+            vc = upd(cache["v"], v.astype(cache["v"].dtype), cache_pos)
+        new_cache = {"k": kc, "v": vc}
+        out = decode_attention(q, kc, vc, cache_pos, window=window)
+    elif cache is not None and kv_x is None:
+        # prefill: fill cache[pos0 : pos0+t] and stream attention over
+        # the cache (chunked prefill: pos0 > 0 attends earlier segments;
+        # causality masks the not-yet-written tail).
+        pos0 = (jnp.asarray(0, jnp.int32) if cache_pos is None
+                else jnp.asarray(cache_pos, jnp.int32).reshape(()))
+        kc = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, pos0, 0, 0))
+        vc = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, pos0, 0, 0))
+        new_cache = {"k": kc, "v": vc}
+        out = flash_attention_inference(q, kc, vc, q_offset=pos0,
+                                        causal=causal, window=window,
+                                        chunk=cfg.attn_chunk)
+    elif cache is not None:
+        # cross-attention with precomputed encoder kv.
+        out = flash_attention(q, cache["k"], cache["v"], causal=False,
+                              chunk=cfg.attn_chunk)
+        new_cache = cache
+    else:
+        out = flash_attention(q, k, v, q_offset=0, causal=causal,
+                              window=window, chunk=cfg.attn_chunk)
+    return out.reshape(b, t, h * hd) @ p["wo"], new_cache
+
+
+def make_cache(cfg, batch: int, seq: int, dtype=None):
+    dt = dtype or jnp.dtype(cfg.dtype)
+    shape = (batch, seq, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}

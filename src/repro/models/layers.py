@@ -1,0 +1,126 @@
+"""Shared neural-net building blocks (pure functional, pytree params)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+def mesh_axis_size(name: str) -> int:
+    """Size of a mesh axis in the current trace context (1 if absent).
+
+    Lets model code pick divisibility-dependent layouts (e.g. decode
+    attention resharding q to match a head-dim-sharded KV cache).
+    """
+    try:
+        from jax._src.mesh import thread_resources
+        m = thread_resources.env.physical_mesh
+        if m.empty:
+            return 1
+        return dict(m.shape).get(name, 1)
+    except Exception:  # pragma: no cover - defensive
+        return 1
+
+
+def shard_hint(x: jax.Array, *dims) -> jax.Array:
+    """Best-effort sharding constraint. dims: "dp" | "model" | "?" | None.
+
+    "dp" resolves to ("pod","data") on a multi-pod mesh, ("data",) on a
+    single-pod mesh; "?" leaves the dim unconstrained (GSPMD chooses).
+    Outside any mesh context (CPU unit tests) the hint is a no-op — the
+    constraint only matters for GSPMD propagation at scale (e.g. keeping
+    the lm-head logits vocab-sharded; without the hint GSPMD
+    materializes [B,T,V] f32 logits replicated: +62 GiB/dev measured on
+    the train_4k dry-run cells).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    def entry(d):
+        if d == "?":
+            return P.UNCONSTRAINED
+        return d
+
+    for dp in (("pod", "data"), ("data",)):
+        spec = P(*[dp if d == "dp" else entry(d) for d in dims])
+        try:
+            return jax.lax.with_sharding_constraint(x, spec)
+        except (RuntimeError, ValueError, KeyError):
+            continue
+    return x
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    s = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * s).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, T, H, D]; positions: [B, T] (absolute)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # [B, T, half]
+    sin = jnp.sin(ang)[:, :, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GELU)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d: int, ff: int, mlp_type: str, dtype):
+    ks = jax.random.split(key, 3)
+    if mlp_type == "swiglu":
+        return {"w1": dense_init(ks[0], d, ff, dtype),
+                "w3": dense_init(ks[1], d, ff, dtype),
+                "w2": dense_init(ks[2], ff, d, dtype)}
+    return {"w1": dense_init(ks[0], d, ff, dtype),
+            "w2": dense_init(ks[2], ff, d, dtype)}
+
+
+def mlp_apply(p, x, mlp_type: str):
+    if mlp_type == "swiglu":
+        h = jax.nn.silu(x @ p["w1"]) * (x @ p["w3"])
+    else:
+        h = jax.nn.gelu(x @ p["w1"])
+    return h @ p["w2"]
+
+
+def sinusoidal_positions(n: int, d: int) -> np.ndarray:
+    pos = np.arange(n)[:, None]
+    dim = np.arange(0, d, 2)[None, :] / d
+    ang = pos / (10000.0 ** dim)
+    out = np.zeros((n, d), np.float32)
+    out[:, 0::2] = np.sin(ang)
+    out[:, 1::2] = np.cos(ang)
+    return out

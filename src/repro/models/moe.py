@@ -1,0 +1,125 @@
+"""Mixture-of-Experts FFN with gather-based top-k dispatch.
+
+Design (DESIGN.md §6: the thesis's regular-grid streaming technique is
+*inapplicable* to MoE routing — this layer is implemented without it):
+
+  * routing: per-token top-k over a learned router;
+  * dispatch: tokens are grouped per batch row; within a group, (token,k)
+    pairs are ranked per expert via a stable sort and the first
+    ``capacity`` survive (standard dropping MoE à la GShard/Switch). All
+    data movement is gathers — *no* one-hot dispatch einsums — so the
+    compiled FLOPs stay ≈ active-expert FLOPs (x capacity_factor), which
+    keeps the §Roofline MODEL_FLOPS/HLO_FLOPs ratio honest;
+  * expert compute: a single batched matmul over [E, C, d] with experts
+    sharded over the mesh 'model' axis (expert parallelism); GSPMD
+    inserts the token all-to-all;
+  * combine: gather expert outputs back per (token, k) and sum weighted
+    by router probs. Dropped tokens fall through via the residual.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, shard_hint
+
+
+def moe_init(key, cfg):
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 5)
+
+    def experts(k, d_in, d_out):
+        keys = jax.random.split(k, e)
+        return jnp.stack([dense_init(kk, d_in, d_out, dt) for kk in keys])
+
+    p = {"router": dense_init(ks[0], d, e, dt, scale=0.02),
+         "w1": experts(ks[1], d, ff), "w3": experts(ks[2], d, ff),
+         "w2": experts(ks[3], ff, d)}
+    if cfg.shared_expert:
+        from repro.models.layers import mlp_init
+        p["shared"] = mlp_init(ks[4], d, ff, "swiglu", dt)
+    return p
+
+
+def _capacity(cfg, group: int) -> int:
+    c = math.ceil(cfg.top_k * group * cfg.capacity_factor / cfg.n_experts)
+    return max(c, cfg.top_k)
+
+
+def moe_apply(p, x, cfg):
+    """x: [B, T, d] -> [B, T, d]. Groups = batch rows."""
+    b, t, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = _capacity(cfg, t)
+
+    logits = (x @ p["router"]).astype(jnp.float32)        # [B, T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                # [B, T, k]
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    def dispatch_group(xg, eg, pg):
+        # xg [T, d]; eg/pg [T, k]
+        flat_e = eg.reshape(-1)                            # [T*k]
+        order = jnp.argsort(flat_e, stable=True)           # pairs by expert
+        sorted_e = flat_e[order]
+        counts = jnp.bincount(flat_e, length=e)
+        starts = jnp.cumsum(counts) - counts               # [E]
+        rank = jnp.arange(t * k) - starts[sorted_e]        # pos within expert
+        keep = rank < cap
+        slot = jnp.where(keep, sorted_e * cap + rank, e * cap)  # drop slot
+        token_of_pair = order // k
+        # build [E*C] -> token index table (dummy row at the end)
+        table = jnp.full((e * cap + 1,), t, jnp.int32)     # t = dummy token
+        table = table.at[slot].set(token_of_pair.astype(jnp.int32),
+                                   mode="drop")
+        xg_pad = jnp.concatenate([xg, jnp.zeros((1, d), xg.dtype)], 0)
+        xe = xg_pad[table[:-1]].reshape(e, cap, d)         # gather
+        # pair -> (expert, rank) for combine
+        inv = jnp.argsort(order, stable=True)              # pair order undo
+        pair_slot = jnp.where(keep, slot, e * cap)[inv]    # [T*k]
+        return xe, pair_slot
+
+    xe, pair_slot = jax.vmap(dispatch_group)(x, top_e, top_p)
+    # xe: [B, E, C, d] -> merge groups so experts see all their tokens.
+    xe = xe.transpose(1, 0, 2, 3).reshape(e, b * cap, d)
+    # Keep the token/capacity dim data-sharded through the expert
+    # matmuls (expert dim stays unconstrained: EP when E divides the
+    # model axis). Without this pin GSPMD contracts over the
+    # fsdp-sharded d instead, materializing partial [E, B·C, ff]
+    # activations per device (+10.7 GiB/dev/layer measured on grok).
+    xe = shard_hint(xe, "?", "dp", None)
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["w1"])) \
+        * jnp.einsum("ecd,edf->ecf", xe, p["w3"])
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w2"])            # [E, B*C, d]
+    ye = shard_hint(ye, "?", "dp", None)
+
+    ye = ye.reshape(e, b, cap, d).transpose(1, 0, 2, 3).reshape(b, e * cap, d)
+    ye = jnp.concatenate([ye, jnp.zeros((b, 1, d), ye.dtype)], 1)
+    # combine one routed expert at a time: gathers stay in the compute
+    # dtype and the f32 accumulator is only [B,T,d] (a single
+    # [B,T,k,d]-f32 einsum costs k x that and dominated prefill temps).
+    slots = pair_slot.reshape(b, t, k)
+    out = jnp.zeros((b, t, d), jnp.float32)
+    for i in range(k):
+        yi = jnp.take_along_axis(ye, slots[:, :, i][..., None], axis=1)
+        out = out + yi.astype(jnp.float32) * top_p[:, :, i][..., None]
+    out = out.astype(x.dtype)
+
+    if cfg.shared_expert:
+        from repro.models.layers import mlp_apply
+        out = out + mlp_apply(p["shared"], x, "swiglu")
+    return out
+
+
+def load_balance_loss(logits_f32, top_e, cfg):
+    """Switch-style auxiliary loss: E * sum_e f_e * p_e."""
+    e = cfg.n_experts
+    probs = jax.nn.softmax(logits_f32, axis=-1)
+    frac = jnp.mean(jax.nn.one_hot(top_e[..., 0], e, dtype=jnp.float32),
+                    axis=tuple(range(top_e.ndim - 1)))
+    pmean = jnp.mean(probs, axis=tuple(range(probs.ndim - 1)))
+    return e * jnp.sum(frac * pmean)

@@ -1,0 +1,319 @@
+"""Attention-free sequence mixers: RWKV6 (Finch) and Mamba2 (SSD).
+
+Both are implemented with a *chunked* scan: the sequence is split into
+blocks of ``cfg.ssm_chunk``; within a block the recurrence is evaluated
+as dense (block-quadratic) algebra, and a single carried state crosses
+block boundaries. This is the thesis's temporal blocking transferred to
+a recurrence (DESIGN.md §5.3): ``bt`` fused steps per on-chip pass, one
+"halo" state instead of per-step HBM round-trips.
+
+Simplifications vs. the reference implementations (documented per
+DESIGN.md §8): RWKV6's data-dependent decay keeps its low-rank
+data-dependent form but is bounded to w ∈ [0.9, 1) for f32-stable
+chunking; token-shift mixing uses static learned coefficients
+(RWKV5-style); Mamba2's short depthwise conv is omitted.
+
+Naive step-by-step references for both live in this module
+(``*_reference``) and are the oracles for the chunked forms.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+# ===========================================================================
+# RWKV6
+# ===========================================================================
+
+def rwkv6_init(key, cfg):
+    d = cfg.d_model
+    hd = cfg.ssm_head_dim
+    h = d // hd
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 12)
+    lora = max(d // 16, 8)
+    return {
+        "mix_r": jnp.full((d,), 0.5, dt), "mix_k": jnp.full((d,), 0.5, dt),
+        "mix_v": jnp.full((d,), 0.5, dt), "mix_w": jnp.full((d,), 0.5, dt),
+        "mix_g": jnp.full((d,), 0.5, dt),
+        "wr": dense_init(ks[0], d, d, dt), "wk": dense_init(ks[1], d, d, dt),
+        "wv": dense_init(ks[2], d, d, dt), "wg": dense_init(ks[3], d, d, dt),
+        "wo": dense_init(ks[4], d, d, dt),
+        "w0": jnp.zeros((d,), dt),
+        "ww1": dense_init(ks[5], d, lora, dt),
+        "ww2": dense_init(ks[6], lora, d, dt),
+        "u": (jax.random.normal(ks[7], (h, hd), jnp.float32) * 0.1).astype(dt),
+        "ln": {"scale": jnp.ones((d,), dt)},
+    }
+
+
+def _token_shift(x, last=None):
+    """x[t-1] stream; ``last`` is the carried previous token (decode)."""
+    if last is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return jnp.concatenate([last[:, None], x[:, :-1]], axis=1)
+
+
+def _rwkv6_rkvwg(p, x, last=None):
+    xx = _token_shift(x, last)
+
+    def mix(name):
+        m = p["mix_" + name]
+        return x + (xx - x) * m
+
+    r = mix("r") @ p["wr"]
+    k = mix("k") @ p["wk"]
+    v = mix("v") @ p["wv"]
+    g = jax.nn.silu(mix("g") @ p["wg"])
+    wraw = (mix("w") @ p["ww1"]) @ p["ww2"] + p["w0"]
+    # bounded data-dependent decay (Finch), w in [0.9, 1).
+    w = 0.9 + 0.0999 * jax.nn.sigmoid(wraw.astype(jnp.float32))
+    return r, k, v, w, g
+
+
+def rwkv6_core_reference(r, k, v, w, u):
+    """Step-by-step oracle. r,k,w: [B,T,H,K] f32; v: [B,T,H,V]; u: [H,K]."""
+    b, t, h, kk = r.shape
+    vv = v.shape[-1]
+
+    def step(S, inp):
+        r_, k_, v_, w_ = inp  # [B,H,K] / [B,H,V]
+        kv = k_[..., :, None] * v_[..., None, :]          # [B,H,K,V]
+        out = jnp.einsum("bhk,bhkv->bhv", r_, S + u[..., None] * kv)
+        S = w_[..., None] * S + kv
+        return S, out
+
+    s0 = jnp.zeros((b, h, kk, vv), jnp.float32)
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (r, k, v, w))
+    _, outs = jax.lax.scan(step, s0, xs)
+    return outs.transpose(1, 0, 2, 3)
+
+
+def rwkv6_core_chunked(r, k, v, w, u, chunk, state=None):
+    """Chunked ("temporally blocked") evaluation. Returns (out, state)."""
+    b, t, h, kk = r.shape
+    vv = v.shape[-1]
+    c = min(chunk, t)
+    while t % c:          # snap to a divisor of t (exact, state-correct)
+        c -= 1
+    n = t // c
+
+    def to_chunks(a):
+        return a.reshape(b, n, c, h, -1).transpose(1, 0, 2, 3, 4)
+
+    rc, kc, vc, wc = map(to_chunks, (r, k, v, w))
+    s0 = state if state is not None else jnp.zeros((b, h, kk, vv), jnp.float32)
+    tri = jnp.tril(jnp.ones((c, c), jnp.float32), k=-1)
+
+    def step(S, inp):
+        r_, k_, v_, w_ = inp                     # [B,C,H,K] ...
+        lw = jnp.cumsum(jnp.log(w_), axis=1)     # inclusive
+        lw_excl = lw - jnp.log(w_)               # decay start..t-1
+        lw_last = lw[:, -1:]                     # full-chunk decay
+        a_q = r_ * jnp.exp(lw_excl)
+        b_k = k_ * jnp.exp(-lw)                  # bounded: w>=0.9, C small
+        scores = jnp.einsum("bchk,bdhk->bhcd", a_q, b_k) * tri[None, None]
+        bonus = jnp.einsum("bchk,bchk->bch", r_, u[None, None] * k_)
+        intra = jnp.einsum("bhcd,bdhv->bchv", scores, v_) \
+            + bonus[..., None] * v_
+        inter = jnp.einsum("bchk,bhkv->bchv", a_q, S)
+        k_end = k_ * jnp.exp(lw_last - lw)
+        S = S * jnp.exp(lw_last[:, 0])[..., None] \
+            + jnp.einsum("bchk,bchv->bhkv", k_end, v_)
+        return S, intra + inter
+
+    state, outs = jax.lax.scan(step, s0, (rc, kc, vc, wc))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, t, h, vv)
+    return out, state
+
+
+def rwkv6_apply(p, x, cfg, state=None):
+    """Full RWKV6 time-mix block. state: {"S","last"} or None (train)."""
+    b, t, d = x.shape
+    hd = cfg.ssm_head_dim
+    h = d // hd
+    last = state["last"] if state is not None else None
+    r, k, v, w, g = _rwkv6_rkvwg(p, x, last)
+
+    def heads(a):
+        return a.astype(jnp.float32).reshape(b, t, h, hd)
+
+    u = p["u"].astype(jnp.float32)
+    s_in = state["S"] if state is not None else None
+    if t == 1 and state is not None:
+        kv = heads(k)[..., :, None] * heads(v)[..., None, :]
+        out = jnp.einsum("bhk,bhkv->bhv", heads(r)[:, 0],
+                         s_in + u[..., None] * kv[:, 0])[:, None]
+        s_out = heads(w)[:, 0][..., None] * s_in + kv[:, 0]
+    else:
+        out, s_out = rwkv6_core_chunked(heads(r), heads(k), heads(v),
+                                        heads(w), u, cfg.ssm_chunk, s_in)
+    out = out.reshape(b, t, d)
+    # per-head norm approximated by rmsnorm over d
+    from repro.models.layers import rmsnorm
+    out = rmsnorm(p["ln"], out.astype(x.dtype), cfg.norm_eps)
+    out = (out * g.astype(x.dtype)) @ p["wo"]
+    new_state = {"S": s_out, "last": x[:, -1]} if state is not None else None
+    return out, new_state
+
+
+def rwkv6_channel_mix_init(key, cfg):
+    d, ff = cfg.d_model, cfg.d_ff
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 2)
+    return {"mix": jnp.full((d,), 0.5, dt),
+            "win": dense_init(ks[0], d, ff, dt),
+            "wout": dense_init(ks[1], ff, d, dt)}
+
+
+def rwkv6_channel_mix(p, x, last=None):
+    xx = _token_shift(x, last)
+    mixed = x + (xx - x) * p["mix"]
+    h = jnp.square(jax.nn.relu(mixed @ p["win"]))
+    return h @ p["wout"]
+
+
+def rwkv6_state_init(cfg, batch):
+    d = cfg.d_model
+    hd = cfg.ssm_head_dim
+    h = d // hd
+    return {"S": jnp.zeros((batch, h, hd, hd), jnp.float32),
+            "last": jnp.zeros((batch, d), jnp.dtype(cfg.dtype)),
+            "last_cm": jnp.zeros((batch, d), jnp.dtype(cfg.dtype))}
+
+
+# ===========================================================================
+# Mamba2 (SSD)
+# ===========================================================================
+
+def _mamba2_dims(cfg):
+    di = cfg.ssm_expand * cfg.d_model           # inner width
+    nh = di // cfg.ssm_head_dim                 # heads
+    return di, nh
+
+
+def mamba2_init(key, cfg):
+    d = cfg.d_model
+    n = cfg.ssm_state
+    di, nh = _mamba2_dims(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 3)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di + 2 * n + nh, dt),
+        "out_proj": dense_init(ks[1], di, d, dt),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "dt_bias": jnp.full((nh,), -1.0, jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "ln": {"scale": jnp.ones((di,), dt)},
+    }
+
+
+def _mamba2_project(p, x, cfg):
+    n = cfg.ssm_state
+    di, nh = _mamba2_dims(cfg)
+    zxbcdt = x @ p["in_proj"]
+    z, xin, bmat, cmat, dt_raw = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"])                    # [B,T,nh]
+    a = jnp.exp(-jnp.exp(p["A_log"])[None, None] * dt)      # decay in (0,1)
+    return z, xin, bmat.astype(jnp.float32), cmat.astype(jnp.float32), dt, a
+
+
+def mamba2_core_reference(xh, bmat, cmat, dt, a, dd):
+    """Oracle. xh: [B,T,H,P] f32; bmat/cmat: [B,T,N]; dt,a: [B,T,H]."""
+    b, t, h, pp = xh.shape
+    n = bmat.shape[-1]
+
+    def step(S, inp):
+        x_, b_, c_, dt_, a_ = inp
+        S = a_[..., None, None] * S \
+            + (dt_[..., None, None] * x_[..., :, None] * b_[:, None, None, :])
+        y = jnp.einsum("bn,bhpn->bhp", c_, S) + dd[None, :, None] * x_
+        return S, y
+
+    s0 = jnp.zeros((b, h, pp, n), jnp.float32)
+    xs = (xh.transpose(1, 0, 2, 3), bmat.transpose(1, 0, 2),
+          cmat.transpose(1, 0, 2), dt.transpose(1, 0, 2),
+          a.transpose(1, 0, 2))
+    _, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2, 3)
+
+
+def mamba2_core_chunked(xh, bmat, cmat, dt, a, dd, chunk, state=None):
+    b, t, h, pp = xh.shape
+    n = bmat.shape[-1]
+    c = min(chunk, t)
+    while t % c:          # snap to a divisor of t (exact, state-correct)
+        c -= 1
+    nchunks = t // c
+    tri = jnp.tril(jnp.ones((c, c), jnp.float32))           # incl. diagonal
+
+    xc = xh.reshape(b, nchunks, c, h, pp).transpose(1, 0, 2, 3, 4)
+    bc = bmat.reshape(b, nchunks, c, n).transpose(1, 0, 2, 3)
+    cc = cmat.reshape(b, nchunks, c, n).transpose(1, 0, 2, 3)
+    dtc = dt.reshape(b, nchunks, c, h).transpose(1, 0, 2, 3)
+    ac = a.reshape(b, nchunks, c, h).transpose(1, 0, 2, 3)
+    s0 = state if state is not None else jnp.zeros((b, h, pp, n), jnp.float32)
+
+    def step(S, inp):
+        x_, b_, c_, dt_, a_ = inp                 # [B,C,...]
+        lw = jnp.cumsum(jnp.log(a_), axis=1)      # [B,C,H] inclusive
+        lw_last = lw[:, -1]                       # [B,H]
+        # intra: y_t += sum_{i<=t} exp(lw_t - lw_i)*dt_i*(C_t.B_i)*x_i
+        gmat = jnp.einsum("bcn,bdn->bcd", c_, b_)           # [B,C,C]
+        decay = jnp.exp(lw[:, :, None, :] - lw[:, None, :, :])  # [B,C,C,H]
+        m = gmat[..., None] * decay * tri[None, :, :, None]
+        m = m * dt_[:, None, :, :]                          # weight by dt_i
+        intra = jnp.einsum("bcdh,bdhp->bchp", m, x_)
+        # inter: y_t += exp(lw_t) * C_t . S_in
+        inter = jnp.einsum("bcn,bhpn->bchp", c_, S) \
+            * jnp.exp(lw)[..., None]
+        y = intra + inter + dd[None, None, :, None] * x_
+        # state: S' = exp(lw_last) S + sum_i exp(lw_last-lw_i) dt_i x_i B_i^T
+        xw = x_ * (dt_ * jnp.exp(lw_last[:, None] - lw))[..., None]
+        S = S * jnp.exp(lw_last)[..., None, None] \
+            + jnp.einsum("bchp,bcn->bhpn", xw, b_)
+        return S, y
+
+    state, ys = jax.lax.scan(step, s0, (xc, bc, cc, dtc, ac))
+    out = ys.transpose(1, 0, 2, 3, 4).reshape(b, t, h, pp)
+    return out, state
+
+
+def mamba2_apply(p, x, cfg, state=None):
+    """Mamba2 mixer. state: {"S"} [B,H,P,N] or None."""
+    b, t, d = x.shape
+    hd = cfg.ssm_head_dim
+    di, nh = _mamba2_dims(cfg)
+    z, xin, bmat, cmat, dt, a = _mamba2_project(p, x, cfg)
+    xh = xin.astype(jnp.float32).reshape(b, t, nh, hd)
+    dd = p["D"]
+    if t == 1 and state is not None:
+        s_in = state["S"]
+        x_, b_, c_, dt_, a_ = (xh[:, 0], bmat[:, 0], cmat[:, 0],
+                               dt[:, 0], a[:, 0])
+        s_out = a_[..., None, None] * s_in \
+            + dt_[..., None, None] * x_[..., :, None] * b_[:, None, None, :]
+        y = jnp.einsum("bn,bhpn->bhp", c_, s_out) \
+            + dd[None, :, None] * x_
+        y = y[:, None]
+    else:
+        s_in = state["S"] if state is not None else None
+        y, s_out = mamba2_core_chunked(xh, bmat, cmat, dt, a, dd,
+                                       cfg.ssm_chunk, s_in)
+    y = y.reshape(b, t, di).astype(x.dtype)
+    from repro.models.layers import rmsnorm
+    y = rmsnorm(p["ln"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = y @ p["out_proj"]
+    new_state = {"S": s_out} if state is not None else None
+    return out, new_state
+
+
+def mamba2_state_init(cfg, batch):
+    di, nh = _mamba2_dims(cfg)
+    return {"S": jnp.zeros((batch, nh, cfg.ssm_head_dim, cfg.ssm_state),
+                           jnp.float32)}

@@ -1,0 +1,90 @@
+"""AdamW with configurable state dtype + cosine schedule + global clip.
+
+Optimizer moments can be held in bf16 (``state_dtype="bfloat16"``) to
+halve optimizer HBM — required for grok-1-314b to fit 256 chips at 16 GB
+(DESIGN.md §5). Update math always runs in f32.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr_peak: float = 3e-4
+    lr_min_ratio: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: str = "float32"
+
+
+def lr_at(step, cfg: OptConfig):
+    """Linear warmup -> cosine decay to lr_min_ratio * peak."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = cfg.lr_peak * step / max(cfg.warmup_steps, 1)
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.lr_min_ratio + (1 - cfg.lr_min_ratio) \
+        * 0.5 * (1 + jnp.cos(math.pi * frac))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.lr_peak * cos)
+
+
+def init(params: Any, cfg: OptConfig) -> dict:
+    dt = jnp.dtype(cfg.state_dtype)
+    z = lambda p: jnp.zeros(p.shape, dt)  # noqa: E731
+    return {"mu": jax.tree_util.tree_map(z, params),
+            "nu": jax.tree_util.tree_map(z, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def update(params: Any, grads: Any, state: dict, cfg: OptConfig):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.grad_clip > 0 else jnp.asarray(1.0)
+    lr = lr_at(step, cfg)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+    sdt = jnp.dtype(cfg.state_dtype)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu32 = mu.astype(jnp.float32) * b1 + (1 - b1) * g
+        nu32 = nu.astype(jnp.float32) * b2 + (1 - b2) * g * g
+        mhat = mu32 / bc1
+        vhat = nu32 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_p, mu32.astype(sdt), nu32.astype(sdt)
+
+    flat = jax.tree_util.tree_map(upd, params, grads, state["mu"],
+                                  state["nu"])
+    new_params = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                        is_leaf=lambda t: isinstance(t, tuple))
+    new_mu = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                    is_leaf=lambda t: isinstance(t, tuple))
+    new_nu = jax.tree_util.tree_map(lambda t: t[2], flat,
+                                    is_leaf=lambda t: isinstance(t, tuple))
+    new_state = {"mu": new_mu, "nu": new_nu, "step": step}
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, new_state, metrics

@@ -1,0 +1,126 @@
+"""jit-able train / prefill / serve steps (the functions the dry-run
+lowers and the trainer executes).
+
+``make_train_step`` supports gradient accumulation over microbatches via
+``lax.scan`` — the framework-level temporal blocking: several passes
+accumulate on-chip before one optimizer step + gradient all-reduce
+(DESIGN.md §5.3).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as tf
+from repro.optim import adamw
+
+
+def make_loss_fn(cfg: ArchConfig) -> Callable:
+    def loss_fn(params, batch):
+        return tf.lm_loss(params, cfg, batch)
+    return loss_fn
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: adamw.OptConfig,
+                    microbatches: int = 1) -> Callable:
+    loss_fn = make_loss_fn(cfg)
+
+    def train_step(state: dict, batch: dict):
+        params = state["params"]
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(microbatches, b // microbatches,
+                                 *x.shape[1:])
+
+            micro = jax.tree_util.tree_map(split, batch)
+
+            def acc_step(carry, mb):
+                loss_acc, g_acc = carry
+                loss, g = jax.value_and_grad(loss_fn)(params, mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b_: a + b_.astype(jnp.float32), g_acc, g)
+                return (loss_acc + loss, g_acc), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(acc_step, (0.0, g0), micro)
+            loss = loss / microbatches
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+        new_params, new_opt, metrics = adamw.update(params, grads,
+                                                    state["opt"], opt_cfg)
+        metrics["loss"] = loss
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, segments: int = 1) -> Callable:
+    """Prefill, optionally chunked into ``segments`` sequential pieces.
+
+    Chunked prefill (segments > 1) is the serving-side temporal blocking:
+    each segment's activations are a 1/segments-size working set, the KV
+    cache/SSM state carries between segments, and segment n's attention
+    streams over the cache written by segments 0..n-1. Only for plain
+    decoder archs (modality stubs prepend tokens; enc-dec is small).
+    """
+    if segments == 1 or cfg.modality_stub or cfg.enc_dec:
+        def prefill_step(params, cache, batch):
+            kw = {}
+            if "stub_embeds" in batch:
+                kw["stub_embeds"] = batch["stub_embeds"]
+            if "frame_embeds" in batch:
+                kw["frame_embeds"] = batch["frame_embeds"]
+            return tf.prefill(params, cfg, batch["tokens"], cache, **kw)
+        return prefill_step
+
+    def prefill_step(params, cache, batch):
+        toks = batch["tokens"]
+        b, t = toks.shape
+        assert t % segments == 0, (t, segments)
+        seg = t // segments
+        xs = (toks.reshape(b, segments, seg).transpose(1, 0, 2),
+              jnp.arange(segments, dtype=jnp.int32) * seg)
+
+        def body(cache, x):
+            seg_toks, pos0 = x
+            logits, cache = tf.forward(params, cfg, seg_toks, cache=cache,
+                                       cache_pos=pos0)
+            return cache, logits[:, -1]
+
+        cache, lasts = jax.lax.scan(body, cache, xs)
+        return lasts[-1], cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig) -> Callable:
+    def serve_step(params, cache, token, pos):
+        return tf.decode_step(params, cfg, token, cache, pos)
+    return serve_step
+
+
+def init_state(key, cfg: ArchConfig, opt_cfg: adamw.OptConfig) -> dict:
+    params = tf.init_params(key, cfg)
+    return {"params": params, "opt": adamw.init(params, opt_cfg)}
+
+
+def state_shapes(cfg: ArchConfig, opt_cfg: adamw.OptConfig):
+    """abstract state (ShapeDtypeStructs) without allocating anything."""
+    return jax.eval_shape(
+        lambda: init_state(jax.random.PRNGKey(0), cfg, opt_cfg))
+
+
+def cache_shapes(cfg: ArchConfig, batch: int, seq: int):
+    return jax.eval_shape(lambda: tf.init_cache(cfg, batch, seq))
+
+
+def param_shapes(cfg: ArchConfig):
+    return jax.eval_shape(
+        lambda: tf.init_params(jax.random.PRNGKey(0), cfg))

@@ -1,0 +1,120 @@
+"""Fault-tolerant training loop.
+
+Large-scale behaviors (DESIGN.md §5), all testable on CPU:
+
+  * checkpoint/restart — periodic async checkpoints carrying the data
+    step; on failure (exception, non-finite loss, or an injected fault)
+    the loop restores the last checkpoint, rewinds the data stream and
+    continues; a bounded retry budget prevents crash loops;
+  * straggler mitigation — a per-step wall-time EWMA; steps slower than
+    ``straggler_factor``x the EWMA are counted and surfaced through
+    ``on_straggler`` (at scale: trigger microbatch rebalance or
+    checkpoint-and-replace-node; here: a hook + metric, injected in
+    tests via ``delay_hook``);
+  * NaN quarantine — a non-finite loss is treated as a failure, not a
+    silent divergence.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 50
+    checkpoint_every: int = 10
+    max_restarts: int = 3
+    straggler_factor: float = 3.0
+    ewma_alpha: float = 0.2
+    log_every: int = 10
+
+
+class Trainer:
+    def __init__(self, train_step: Callable, state: Any, data_iter,
+                 ckpt: CheckpointManager, cfg: TrainerConfig,
+                 donate: bool = True,
+                 fault_hook: Optional[Callable[[int], None]] = None,
+                 delay_hook: Optional[Callable[[int], float]] = None,
+                 on_straggler: Optional[Callable[[int, float], None]] = None):
+        self.train_step = train_step
+        self.state = state
+        self.data = data_iter
+        self.ckpt = ckpt
+        self.cfg = cfg
+        self.fault_hook = fault_hook
+        self.delay_hook = delay_hook
+        self.on_straggler = on_straggler
+        self.step = 0
+        self.restarts = 0
+        self.straggler_steps: list[int] = []
+        self.history: list[dict] = []
+        self._ewma: Optional[float] = None
+
+    # ------------------------------------------------------------------
+    def _restore(self):
+        step = self.ckpt.latest_step()
+        if step is None:
+            raise RuntimeError("failure before first checkpoint; "
+                               "cannot recover")
+        self.state, extra = self.ckpt.restore(self.state)
+        self.step = extra["data_step"]
+        self.data.set_step(self.step)
+        self.restarts += 1
+        if self.restarts > self.cfg.max_restarts:
+            raise RuntimeError(f"exceeded max_restarts="
+                               f"{self.cfg.max_restarts}")
+
+    def _maybe_checkpoint(self):
+        if self.step % self.cfg.checkpoint_every == 0 and self.step > 0:
+            self.ckpt.save(self.step, self.state,
+                           extra={"data_step": self.step})
+
+    # ------------------------------------------------------------------
+    def run(self) -> list[dict]:
+        # step 0 checkpoint so the very first failure is recoverable
+        self.ckpt.save(0, self.state, extra={"data_step": 0})
+        while self.step < self.cfg.total_steps:
+            try:
+                batch = next(self.data)
+                t0 = time.perf_counter()
+                if self.fault_hook is not None:
+                    self.fault_hook(self.step)       # may raise (test inject)
+                self.state, metrics = self.train_step(self.state, batch)
+                loss = float(metrics["loss"])
+                if not np.isfinite(loss):
+                    raise FloatingPointError(f"non-finite loss at "
+                                             f"step {self.step}: {loss}")
+                if self.delay_hook is not None:
+                    time.sleep(self.delay_hook(self.step))
+                dt = time.perf_counter() - t0
+                self._track_time(dt)
+                self.history.append({"step": self.step, "loss": loss,
+                                     "dt": dt,
+                                     "lr": float(metrics["lr"])})
+                self.step += 1
+                self._maybe_checkpoint()
+            except (FloatingPointError, RuntimeError, ValueError) as e:
+                if isinstance(e, RuntimeError) and "max_restarts" in str(e):
+                    raise
+                self._restore()
+        self.ckpt.save(self.step, self.state,
+                       extra={"data_step": self.step}, async_=False)
+        return self.history
+
+    def _track_time(self, dt: float):
+        if self._ewma is None:
+            self._ewma = dt
+            return
+        if dt > self.cfg.straggler_factor * self._ewma:
+            self.straggler_steps.append(self.step)
+            if self.on_straggler is not None:
+                self.on_straggler(self.step, dt / self._ewma)
+        a = self.cfg.ewma_alpha
+        self._ewma = (1 - a) * self._ewma + a * dt

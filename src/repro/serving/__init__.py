@@ -1,0 +1,4 @@
+"""Serving: slot-based KV-cache engine with continuous batching."""
+from repro.serving.engine import Completion, Engine, Request
+
+__all__ = ["Completion", "Engine", "Request"]

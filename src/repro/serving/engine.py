@@ -1,0 +1,183 @@
+"""Batched serving engine with continuous batching.
+
+A slot-based KV-cache engine: ``max_slots`` cache rows live on device;
+requests claim a free slot, are prefilled (bucketed prompt lengths to
+bound recompilation), and then *all* active slots decode in lockstep
+with per-slot positions — a finished request frees its slot mid-flight
+and a queued request takes it over without draining the batch
+(continuous batching). The per-slot position vector threads through
+``models.attention.decode_attention``.
+
+The streaming structure is the serving-side instance of the thesis's
+pipeline model (§3.1): slots are the pipeline's in-flight items, a
+prefill is the pipeline fill (P), and steady-state decode is the II=1
+regime; the engine keeps the pipeline full to maximize it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as tf
+
+_STACKS = ("blocks",)
+
+
+def _names(path):
+    out = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            out.append(str(p.key))
+    return out
+
+
+def _bucket(n: int, minimum: int = 16) -> int:
+    b = minimum
+    while b < n:
+        b *= 2
+    return b
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: List[int]
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+
+
+@dataclasses.dataclass
+class Completion:
+    uid: int
+    tokens: List[int]
+    prompt_len: int
+    finished_reason: str          # "eos" | "length"
+
+
+class Engine:
+    def __init__(self, params, cfg: ArchConfig, *, max_slots: int = 4,
+                 max_seq: int = 256):
+        self.params = params
+        self.cfg = cfg
+        self.max_slots = max_slots
+        self.max_seq = max_seq
+        self.cache = tf.init_cache(cfg, max_slots, max_seq)
+        self.pos = np.zeros((max_slots,), np.int32)   # next write position
+        self.slot_req: List[Optional[Request]] = [None] * max_slots
+        self.slot_last_tok = np.zeros((max_slots,), np.int32)
+        self.slot_generated: Dict[int, List[int]] = {}
+        self.metrics = {"prefills": 0, "decode_steps": 0,
+                        "slot_steps_active": 0, "slot_steps_idle": 0}
+
+        @jax.jit
+        def _decode(params, cache, token, pos):
+            logits, cache = tf.forward(params, cfg, token, cache=cache,
+                                       cache_pos=pos)
+            return logits[:, -1], cache
+
+        self._decode = _decode
+
+        @functools.partial(jax.jit, static_argnames=("bucket",))
+        def _prefill_one(params, cache1, tokens, true_len, bucket):
+            logits, cache1 = tf.forward(params, cfg, tokens, cache=cache1,
+                                        cache_pos=jnp.zeros((), jnp.int32))
+            last = jnp.take_along_axis(
+                logits, (true_len - 1)[None, None, None].astype(jnp.int32),
+                axis=1)[:, 0]
+            return last, cache1
+
+        self._prefill_one = _prefill_one
+
+        @jax.jit
+        def _scatter(big, small, slot):
+            def one(path, b_leaf, s_leaf):
+                axis = 1 if (_names(path) and _names(path)[0] in _STACKS) \
+                    else 0
+                row = jnp.take(s_leaf, 0, axis=axis)
+                return jax.lax.dynamic_update_index_in_dim(
+                    b_leaf, row.astype(b_leaf.dtype), slot, axis)
+            return jax.tree_util.tree_map_with_path(one, big, small)
+
+        self._scatter = _scatter
+
+    # ------------------------------------------------------------------
+    def _free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    def _admit(self, req: Request, slot: int):
+        l = len(req.prompt)
+        if l + req.max_new_tokens > self.max_seq:
+            raise ValueError(f"request {req.uid} exceeds max_seq")
+        bucket = min(_bucket(l), self.max_seq)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :l] = req.prompt
+        cache1 = tf.init_cache(self.cfg, 1, self.max_seq)
+        logits, cache1 = self._prefill_one(
+            self.params, cache1, jnp.asarray(toks),
+            jnp.asarray(l, jnp.int32), bucket=bucket)
+        self.cache = self._scatter(self.cache, cache1,
+                                   jnp.asarray(slot, jnp.int32))
+        nxt = int(np.argmax(np.asarray(logits[0], np.float32)))
+        self.slot_req[slot] = req
+        self.pos[slot] = l
+        self.slot_last_tok[slot] = nxt
+        self.slot_generated[req.uid] = [nxt]
+        self.metrics["prefills"] += 1
+
+    def _retire(self, slot: int, reason: str,
+                done: List[Completion]):
+        req = self.slot_req[slot]
+        done.append(Completion(uid=req.uid,
+                               tokens=self.slot_generated[req.uid],
+                               prompt_len=len(req.prompt),
+                               finished_reason=reason))
+        self.slot_req[slot] = None
+
+    def _check_done(self, slot: int, done: List[Completion]):
+        req = self.slot_req[slot]
+        gen = self.slot_generated[req.uid]
+        if req.eos_id is not None and gen[-1] == req.eos_id:
+            self._retire(slot, "eos", done)
+        elif len(gen) >= req.max_new_tokens:
+            self._retire(slot, "length", done)
+
+    # ------------------------------------------------------------------
+    def run(self, requests: List[Request]) -> List[Completion]:
+        """Continuous-batching loop over a workload of requests."""
+        queue = list(requests)
+        done: List[Completion] = []
+
+        while queue or any(r is not None for r in self.slot_req):
+            # admit as many queued requests as there are free slots
+            for slot in self._free_slots():
+                if not queue:
+                    break
+                self._admit(queue.pop(0), slot)
+                self._check_done(slot, done)
+
+            active = [i for i, r in enumerate(self.slot_req)
+                      if r is not None]
+            if not active:
+                continue
+            # one lockstep decode step over all slots
+            tok = jnp.asarray(self.slot_last_tok[:, None])
+            pos = jnp.asarray(self.pos)
+            logits, self.cache = self._decode(self.params, self.cache,
+                                              tok, pos)
+            nxt = np.argmax(np.asarray(logits, np.float32), axis=-1)
+            self.metrics["decode_steps"] += 1
+            self.metrics["slot_steps_active"] += len(active)
+            self.metrics["slot_steps_idle"] += self.max_slots - len(active)
+            for slot in active:
+                self.pos[slot] += 1
+                self.slot_last_tok[slot] = int(nxt[slot])
+                self.slot_generated[self.slot_req[slot].uid].append(
+                    int(nxt[slot]))
+                self._check_done(slot, done)
+        return done

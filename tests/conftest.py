@@ -1,0 +1,13 @@
+import os
+
+# Tests must see exactly the host's real device (the dry-run, and only
+# the dry-run, forces 512 fake devices — see launch/dryrun.py).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,114 @@
+"""Rodinia app ports (thesis ch.4): the optimized rewrites must agree
+with the direct/reference ports — the thesis's correctness bar for its
+speed-up tables.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.apps import hotspot, hotspot3d, lud, nw, pathfinder, srad
+
+KEY = jax.random.PRNGKey(0)
+
+
+# --- NW --------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [5, 16, 33, 64])
+def test_nw_wavefront_equals_reference(n):
+    ref_mat = nw.random_problem(jax.random.fold_in(KEY, n), n)
+    a = nw.nw_reference(ref_mat, penalty=10)
+    b = nw.nw_wavefront(ref_mat, penalty=10)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_nw_known_small_case():
+    # match/mismatch matrix for strings "ab" vs "ab": diag +1, off -1
+    ref_mat = jnp.asarray([[1, -1], [-1, 1]], jnp.int32)
+    out = nw.nw_reference(ref_mat, penalty=1)
+    # optimal alignment: both match -> score 2
+    assert int(out[2, 2]) == 2
+
+
+# --- Hotspot ----------------------------------------------------------------
+
+def test_hotspot_blocked_equals_reference():
+    t, p = hotspot.random_problem(KEY, 40, 300)
+    a = hotspot.hotspot_reference(t, p, 6)
+    b = hotspot.hotspot_blocked(t, p, 6, bt=3, bx=128, backend="interpret")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_hotspot_temperatures_stay_physical():
+    t, p = hotspot.random_problem(KEY, 32, 256)
+    out = hotspot.hotspot_blocked(t, p, 10, bt=2, bx=128,
+                                  backend="interpret")
+    arr = np.asarray(out)
+    assert np.isfinite(arr).all()
+    assert arr.min() > 0 and arr.max() < 200
+
+
+def test_hotspot3d_blocked_equals_reference():
+    t, p = hotspot3d.random_problem(KEY, 8, 24, 260)
+    a = hotspot3d.hotspot3d_reference(t, p, 4)
+    b = hotspot3d.hotspot3d_blocked(t, p, 4, bt=2, bx=128,
+                                    backend="interpret")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-4, atol=1e-3)
+
+
+# --- Pathfinder --------------------------------------------------------------
+
+@pytest.mark.parametrize("rows,cols", [(20, 64), (100, 257)])
+def test_pathfinder_variants_agree(rows, cols):
+    w = pathfinder.random_problem(KEY, rows, cols)
+    a = pathfinder.pathfinder_reference(w)
+    b = pathfinder.pathfinder_fused(w)
+    c = pathfinder.pathfinder_blocked(w, block=16)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_pathfinder_known_case():
+    wall = jnp.asarray([[1, 9, 9],
+                        [9, 1, 9],
+                        [9, 9, 1]], jnp.int32)
+    cost = pathfinder.pathfinder_fused(wall)
+    assert int(cost.min()) == 3   # diagonal path 1+1+1
+
+
+# --- SRAD --------------------------------------------------------------------
+
+def test_srad_fused_equals_multikernel():
+    img = srad.random_problem(KEY, 50, 60)
+    a = srad.srad_multikernel(img, 5)
+    b = srad.srad_fused(img, 5)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_srad_smooths():
+    """Diffusion reduces variance (the point of speckle reduction)."""
+    img = srad.random_problem(jax.random.fold_in(KEY, 1), 64, 64)
+    out = srad.srad_fused(img, 20)
+    assert float(jnp.var(out)) < float(jnp.var(img))
+    assert np.isfinite(np.asarray(out)).all()
+
+
+# --- LUD --------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,bsize", [(64, 16), (96, 32), (128, 64)])
+def test_lud_blocked_equals_unblocked(n, bsize):
+    a = lud.random_problem(jax.random.fold_in(KEY, n), n)
+    lu1 = lud.lud_unblocked(a)
+    lu2 = lud.lud_blocked(a, bsize=bsize)
+    np.testing.assert_allclose(np.asarray(lu1), np.asarray(lu2),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_lud_reconstructs():
+    a = lud.random_problem(KEY, 64)
+    l, u = lud.unpack(lud.lud_blocked(a, bsize=16))
+    np.testing.assert_allclose(np.asarray(l @ u), np.asarray(a),
+                               rtol=1e-4, atol=1e-3)

@@ -1,0 +1,204 @@
+"""Fault-tolerance tests: checkpoint/restart, NaN quarantine, straggler
+detection, elastic restore, deterministic data restart.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.registry import get
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.optim.adamw import OptConfig
+from repro.runtime import steps as steps_mod
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _mk(tmp_path, cfg=None, total=12, ckpt_every=4, **trainer_kw):
+    cfg = cfg or get("llama3.2-1b").smoke()
+    oc = OptConfig(total_steps=total, warmup_steps=2, lr_peak=1e-3)
+    data = SyntheticLM(cfg, DataConfig(seq_len=32, global_batch=4))
+    state = steps_mod.init_state(KEY, cfg, oc)
+    step = jax.jit(steps_mod.make_train_step(cfg, oc))
+    tr = Trainer(step, state, data, CheckpointManager(str(tmp_path)),
+                 TrainerConfig(total_steps=total, checkpoint_every=ckpt_every),
+                 **trainer_kw)
+    return tr
+
+
+def test_train_runs_and_loss_finite(tmp_path):
+    tr = _mk(tmp_path)
+    hist = tr.run()
+    assert len(hist) == 12
+    assert all(np.isfinite(h["loss"]) for h in hist)
+
+
+def test_fault_injection_recovers(tmp_path):
+    boom = {"armed": True}
+
+    def fault(step):
+        if step == 7 and boom["armed"]:
+            boom["armed"] = False
+            raise RuntimeError("injected node failure")
+
+    tr = _mk(tmp_path, fault_hook=fault)
+    hist = tr.run()
+    assert tr.restarts == 1
+    assert [h["step"] for h in hist][-1] == 11
+    # the failed step re-ran after restore from the step-4 checkpoint
+    assert sum(1 for h in hist if h["step"] == 7) >= 1
+
+
+def test_restart_is_deterministic(tmp_path):
+    """A run with an injected failure converges to the same state as an
+    uninterrupted run (bitwise data replay + checkpoint restore)."""
+    tr1 = _mk(tmp_path / "a")
+    tr1.run()
+
+    armed = {"on": True}
+
+    def fault(step):
+        if step == 6 and armed["on"]:
+            armed["on"] = False
+            raise RuntimeError("boom")
+
+    tr2 = _mk(tmp_path / "b", fault_hook=fault)
+    tr2.run()
+    p1 = jax.tree_util.tree_leaves(tr1.state["params"])
+    p2 = jax.tree_util.tree_leaves(tr2.state["params"])
+    for a, b in zip(p1, p2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_exceeding_max_restarts_raises(tmp_path):
+    def always_fail(step):
+        if step >= 4:
+            raise RuntimeError("persistent failure")
+
+    tr = _mk(tmp_path, fault_hook=always_fail)
+    with pytest.raises(RuntimeError, match="max_restarts"):
+        tr.run()
+
+
+def test_nan_loss_triggers_restore(tmp_path):
+    cfg = get("llama3.2-1b").smoke()
+    armed = {"on": True}
+
+    def fault(step):
+        # simulate NaN at step 5 by raising FloatingPointError directly
+        if step == 5 and armed["on"]:
+            armed["on"] = False
+            raise FloatingPointError("non-finite loss (injected)")
+
+    tr = _mk(tmp_path, cfg=cfg, fault_hook=fault)
+    tr.run()
+    assert tr.restarts == 1
+
+
+def test_straggler_detection(tmp_path):
+    """Uses a no-op train step so the wall time is fully controlled by
+    the injected delays (robust to host load)."""
+    def fake_step(state, batch):
+        return state, {"loss": 1.0, "lr": 0.0}
+
+    cfg = get("llama3.2-1b").smoke()
+    data = SyntheticLM(cfg, DataConfig(seq_len=8, global_batch=2))
+
+    def delay(step):
+        return 0.5 if step == 9 else 0.01
+
+    seen = []
+    tr = Trainer(fake_step, {"x": jnp.zeros(())}, data,
+                 CheckpointManager(str(tmp_path)),
+                 TrainerConfig(total_steps=12, checkpoint_every=4),
+                 delay_hook=delay,
+                 on_straggler=lambda s, ratio: seen.append((s, ratio)))
+    tr.run()
+    assert 9 in tr.straggler_steps
+    assert seen and seen[0][0] == 9 and seen[0][1] > 3.0
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint manager
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    state = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+             "nested": {"b": jnp.ones((4,), jnp.bfloat16)},
+             "step": jnp.asarray(7, jnp.int32)}
+    cm = CheckpointManager(str(tmp_path))
+    cm.save(7, state, extra={"data_step": 7}, async_=False)
+    restored, extra = cm.restore(state)
+    assert extra["data_step"] == 7
+    for a, b in zip(jax.tree_util.tree_leaves(state),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_gc_keeps_last(tmp_path):
+    cm = CheckpointManager(str(tmp_path), keep=2)
+    state = {"x": jnp.zeros((2,))}
+    for s in (1, 2, 3, 4):
+        cm.save(s, state, async_=False)
+    assert cm.all_steps() == [3, 4]
+
+
+def test_checkpoint_async_then_restore(tmp_path):
+    cm = CheckpointManager(str(tmp_path))
+    state = {"x": jnp.arange(4, dtype=jnp.float32)}
+    cm.save(3, state, extra={"data_step": 3}, async_=True)
+    cm.wait()
+    restored, extra = cm.restore(state)
+    np.testing.assert_array_equal(np.asarray(restored["x"]),
+                                  np.asarray(state["x"]))
+
+
+def test_elastic_restore_resharding(tmp_path):
+    """A checkpoint restores under a different sharding (elastic)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    cm = CheckpointManager(str(tmp_path))
+    state = {"w": jnp.arange(8, dtype=jnp.float32).reshape(2, 4)}
+    cm.save(1, state, async_=False)
+    mesh = jax.make_mesh((1,), ("data",))
+    sh = {"w": NamedSharding(mesh, P("data", None))}
+    restored, _ = cm.restore(state, shardings=sh)
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(state["w"]))
+    assert restored["w"].sharding == sh["w"]
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline
+# ---------------------------------------------------------------------------
+
+def test_data_restart_bitwise_identical():
+    cfg = get("llama3.2-1b").smoke()
+    d1 = SyntheticLM(cfg, DataConfig(seq_len=16, global_batch=4))
+    batches = [next(d1) for _ in range(5)]
+    d2 = SyntheticLM(cfg, DataConfig(seq_len=16, global_batch=4))
+    d2.set_step(3)
+    b3 = next(d2)
+    np.testing.assert_array_equal(batches[3]["tokens"], b3["tokens"])
+    np.testing.assert_array_equal(batches[3]["labels"], b3["labels"])
+
+
+def test_data_host_sharding_partitions_global_batch():
+    cfg = get("llama3.2-1b").smoke()
+    full = next(SyntheticLM(cfg, DataConfig(seq_len=16, global_batch=4)))
+    parts = [next(SyntheticLM(cfg, DataConfig(seq_len=16, global_batch=4),
+                              host_index=i, host_count=2))
+             for i in range(2)]
+    np.testing.assert_array_equal(
+        full["tokens"], np.concatenate([p["tokens"] for p in parts], axis=0))
+
+
+def test_data_tokens_in_vocab():
+    cfg = get("gemma3-12b").smoke()
+    b = next(SyntheticLM(cfg, DataConfig(seq_len=64, global_batch=2)))
+    assert b["tokens"].min() >= 0
+    assert b["tokens"].max() < cfg.vocab

@@ -1,0 +1,114 @@
+"""End-to-end system tests: training improves the loss, the model-driven
+stencil autotuner runs, and the roofline pipeline analyzes a cell.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.stencil import diffusion
+from repro.core.temporal import autotuned_run, tune_and_run
+from repro.kernels import ref
+from repro.launch import hlo_analysis as hlo
+from repro.launch import roofline
+
+
+def test_training_reduces_loss():
+    from repro.launch import train as train_mod
+    hist = train_mod.main(["--arch", "llama3.2-1b", "--smoke",
+                           "--steps", "40", "--batch", "8",
+                           "--seq", "64", "--lr", "3e-3"])
+    losses = [h["loss"] for h in hist]
+    assert np.mean(losses[:4]) - np.mean(losses[-4:]) > 0.05
+
+
+def test_serve_launcher_end_to_end():
+    from repro.launch import serve as serve_mod
+    done = serve_mod.main(["--arch", "llama3.2-1b", "--requests", "4",
+                           "--slots", "2", "--max-new", "4"])
+    assert len(done) == 4
+
+
+def test_autotuned_stencil_run_correct():
+    spec = diffusion(2, 1)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((32, 512)), jnp.float32)
+    out, plan = autotuned_run(x, spec, n_steps=4, backend="interpret",
+                              vmem_budget=2 ** 22)
+    want = ref.stencil_multistep(x, spec, 4)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    assert plan.bt >= 1
+
+
+def test_tune_and_run_measures_shortlist():
+    spec = diffusion(2, 1)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((16, 256)), jnp.float32)
+    out, plan, timings = tune_and_run(x, spec, n_steps=2,
+                                      backend="reference", top_k=2,
+                                      vmem_budget=2 ** 22)
+    assert len(timings) == 2
+    want = ref.stencil_multistep(x, spec, 2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# HLO analysis + roofline aggregation
+# ---------------------------------------------------------------------------
+
+HLO_SNIPPET = """
+  %ag = f32[16,512]{1,0} all-gather(f32[4,512]{1,0} %p0), dimensions={0}
+  %ar = bf16[1024]{0} all-reduce(bf16[1024]{0} %x), to_apply=%add
+  %rs = f32[2,64]{1,0} reduce-scatter(f32[8,64]{1,0} %y), dimensions={0}
+  %cp = f32[128]{0} collective-permute(f32[128]{0} %z)
+"""
+
+
+def test_collective_bytes_parser():
+    cb = hlo.collective_bytes(HLO_SNIPPET)
+    assert cb["all-gather"] == 4 * 512 * 4
+    assert cb["all-reduce"] == 1024 * 2
+    assert cb["reduce-scatter"] == 8 * 64 * 4
+    assert cb["collective-permute"] == 128 * 4
+    assert cb["total"] == sum(v for k, v in cb.items() if k != "total")
+    counts = hlo.collective_counts(HLO_SNIPPET)
+    assert counts == {"all-gather": 1, "all-reduce": 1,
+                      "reduce-scatter": 1, "collective-permute": 1}
+
+
+def _fake_cell(**over):
+    cell = {
+        "arch": "llama3.2-1b", "shape": "train_4k", "mesh": "single",
+        "status": "ok", "chips": 256, "kind": "train", "tokens": 1048576,
+        "memory": {"total_hbm_bytes": 8 * 2 ** 30},
+        "cost": {"flops": 3.5e13, "bytes": 4e11},
+        "collective_bytes": {"total": 7.7e10},
+        "collective_counts": {"all-reduce": 28},
+        "params": 1.5e9, "active_params": 1.5e9,
+    }
+    cell.update(over)
+    return cell
+
+
+def test_roofline_analyze_cell():
+    r = roofline.analyze(_fake_cell())
+    assert r["dominant"] in ("compute", "memory", "collective")
+    assert r["model_flops"] == pytest.approx(6 * 1.5e9 * 1048576)
+    assert 0 < r["mfu_at_roofline"] <= 1.0
+    assert r["t_predicted"] >= max(r["t_compute"], r["t_memory"],
+                                   r["t_collective"]) * 0.999
+
+
+def test_roofline_skips_non_ok():
+    assert roofline.analyze({"status": "error"}) is None
+    assert roofline.analyze({"status": "skipped"}) is None
+
+
+def test_roofline_markdown_renders():
+    rows = [roofline.analyze(_fake_cell()),
+            roofline.analyze(_fake_cell(shape="decode_32k", kind="decode",
+                                        tokens=128))]
+    md = roofline.markdown_table(rows)
+    assert "llama3.2-1b" in md and md.count("|") > 10
