@@ -19,8 +19,16 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of: " + ",".join(SUITES))
+    ap.add_argument("--retune", action="store_true",
+                    help="drop the stencil autotuner's on-disk cache so "
+                         "every (bx, bt, variant) choice is re-searched")
     args = ap.parse_args(argv)
     picked = args.only.split(",") if args.only else list(SUITES)
+
+    from repro.kernels import autotune
+    if args.retune:
+        autotune.clear_cache()
+    print(f"# autotune cache: {autotune.cache_path()}", file=sys.stderr)
 
     failures = []
     print("name,us_per_call,derived")

@@ -1,7 +1,7 @@
 """End-to-end driver: a few hundred steps of thermal simulation
 (Rodinia Hotspot, the thesis's ch.4/ch.5 flagship app) through the
-blocked stencil accelerator, with the performance model choosing the
-blocking configuration.
+blocked stencil accelerator, with the autotuner (model prior ->
+measured ground truth -> disk cache) choosing the configuration.
 
   PYTHONPATH=src python examples/hotspot_sim.py [--steps 200]
 """
@@ -13,8 +13,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.apps import hotspot
-from repro.core.blocking import BlockPlan
-from repro.core.perf_model import V5E, select_config, stencil_roofline
+from repro.core.perf_model import V5E, stencil_roofline
+from repro.kernels import autotune
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--steps", type=int, default=200)
@@ -26,11 +26,14 @@ params = hotspot.HotspotParams()
 spec = hotspot.spec_of(params)
 temp, power = hotspot.random_problem(jax.random.PRNGKey(0), args.h, args.w)
 
-# model-driven blocking choice (the thesis's pruning step)
-plan = select_config(spec, (args.h, args.w), args.steps, top_k=1)[0]
+# autotuned blocking choice (the thesis's §5.4 tuning flow)
+tuned = autotune.plan((args.h, args.w), spec, backend="reference",
+                      n_steps=args.steps)
+plan = tuned.block_plan
 terms = stencil_roofline(plan, args.steps, tpu=V5E)
-print(f"grid {args.h}x{args.w}, {args.steps} steps; model chose "
-      f"bx={plan.bx} bt={plan.bt} (v5e-bound: {terms.dominant}, "
+print(f"grid {args.h}x{args.w}, {args.steps} steps; autotuner chose "
+      f"bx={plan.bx} bt={plan.bt} [{tuned.source}] "
+      f"(v5e-bound: {terms.dominant}, "
       f"predicted {terms.t_predicted*1e3:.2f} ms/run)")
 
 t0 = time.perf_counter()

@@ -68,10 +68,14 @@ def hotspot_reference(temp: jax.Array, power: jax.Array, n_steps: int,
 
 
 def hotspot_blocked(temp: jax.Array, power: jax.Array, n_steps: int,
-                    bt: int = 4, bx: int = 256,
+                    bt: int | None = None, bx: int | None = None,
                     p: HotspotParams = HotspotParams(),
                     backend: str = "auto") -> jax.Array:
-    """Spatial+temporal-blocked Pallas port (ch.5 template + source)."""
+    """Spatial+temporal-blocked Pallas port (ch.5 template + source).
+
+    ``bt``/``bx`` default to the autotuner's choice
+    (``kernels.autotune.plan``); pass explicit values to pin them.
+    """
     spec = spec_of(p)
     src = source_of(power, p)
     return ops.stencil_run(temp, spec, n_steps, bx=bx, bt=bt,

@@ -53,9 +53,11 @@ def hotspot3d_reference(temp: jax.Array, power: jax.Array, n_steps: int,
 
 
 def hotspot3d_blocked(temp: jax.Array, power: jax.Array, n_steps: int,
-                      bt: int = 2, bx: int = 128,
+                      bt: int | None = None, bx: int | None = None,
                       p: Hotspot3DParams = Hotspot3DParams(),
                       backend: str = "auto") -> jax.Array:
+    """Blocked 2.5D port; ``bt``/``bx`` default to the autotuner's
+    choice (``kernels.autotune.plan``)."""
     spec = spec_of(p)
     src = source_of(power, p)
     return ops.stencil_run(temp, spec, n_steps, bx=bx, bt=bt,

@@ -52,11 +52,38 @@ def pathfinder_fused(wall: jax.Array) -> jax.Array:
     return cost
 
 
+# Planning proxy for the autotuner: the min-plus row update is a 1D
+# 3-point stencil swept down the grid — radius-1 halo growth per fused
+# row, exactly the temporal-blocking geometry the §5.4 model scores.
+# (Weights are placeholders; only dims/radius enter the cost model.)
+def _plan_spec():
+    from repro.core.stencil import StencilSpec
+    return StencilSpec(dims=2, radius=1, center=1.0,
+                       axis_weights=((0.0, 0.0, 0.0), (0.5, 0.0, 0.5)),
+                       name="pathfinder_minplus")
+
+
+def planned_block(wall: jax.Array) -> int:
+    """The autotuner's pyramid height for this grid: the planner's
+    temporal degree ``bt`` (kernels.autotune.plan)."""
+    from repro.kernels import autotune
+    return autotune.plan(wall.shape, _plan_spec(), dtype=wall.dtype,
+                         backend="reference", measure=False).bt
+
+
+def pathfinder_blocked(wall: jax.Array, block: int | None = None) -> jax.Array:
+    """Fused in blocks of ``block`` rows (the thesis's pyramid_height).
+
+    ``block=None`` uses :func:`planned_block`."""
+    if block is None:
+        block = planned_block(wall)
+    return _pathfinder_blocked(wall, block)
+
+
 @functools.partial(jax.jit, static_argnames=("block",))
-def pathfinder_blocked(wall: jax.Array, block: int = 64) -> jax.Array:
-    """Fused in blocks of ``block`` rows (the thesis's pyramid_height),
-    shown for completeness: each outer step scans a row *block* whose
-    unrolled inner loop is the temporal-blocking analog."""
+def _pathfinder_blocked(wall: jax.Array, block: int) -> jax.Array:
+    """Each outer step scans a row *block* whose unrolled inner loop is
+    the temporal-blocking analog."""
     rows, cols = wall.shape
     n_blocks = (rows - 1) // block
     head = wall[1:1 + n_blocks * block].reshape(n_blocks, block, cols)

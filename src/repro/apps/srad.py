@@ -88,6 +88,42 @@ def srad_fused(j_img: jax.Array, n_iter: int, lam: float = 0.5) -> jax.Array:
     return jax.lax.fori_loop(0, n_iter, body, j_img)
 
 
+# --- blocked ("planner-chunked") tier ---------------------------------------
+
+# Planning proxy for the autotuner: SRAD's two passes are radius-1
+# 5-point stencils over J; the planner's temporal degree bounds how many
+# iterations fuse into one dispatched kernel (the pyramid/chunk choice).
+# Results are bit-identical to ``srad_fused`` — fori_loop composition is
+# exact — the knob trades dispatch count against compiled-loop length.
+def _plan_spec():
+    from repro.core.stencil import StencilSpec
+    return StencilSpec(dims=2, radius=1, center=1.0,
+                       axis_weights=((0.25, 0.0, 0.25),
+                                     (0.25, 0.0, 0.25)),
+                       name="srad5pt")
+
+
+def planned_chunk(j_img: jax.Array) -> int:
+    """The autotuner's iteration-chunk size for this image: the
+    planner's temporal degree ``bt`` (kernels.autotune.plan)."""
+    from repro.kernels import autotune
+    return autotune.plan(j_img.shape, _plan_spec(), dtype=j_img.dtype,
+                         backend="reference", measure=False).bt
+
+
+def srad_blocked(j_img: jax.Array, n_iter: int, lam: float = 0.5,
+                 chunk: int | None = None) -> jax.Array:
+    """Fused SRAD dispatched in autotuned temporal chunks."""
+    if chunk is None:
+        chunk = planned_chunk(j_img)
+    done = 0
+    while done < n_iter:
+        step = min(chunk, n_iter - done)
+        j_img = srad_fused(j_img, step, lam)
+        done += step
+    return j_img
+
+
 def random_problem(key, h: int, w: int):
     """Positive image (SRAD divides by J), like Rodinia's exp(img)."""
     return jnp.exp(jax.random.normal(key, (h, w), jnp.float32) * 0.1)

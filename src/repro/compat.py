@@ -1,0 +1,119 @@
+"""JAX version-compatibility shim — the single place this repo touches
+``jax.experimental``.
+
+Policy (see README §Compat): every symbol whose home or spelling has
+drifted across jax releases is resolved *here, once*, and the rest of
+the codebase imports it from ``repro.compat``. The suite runs on
+jax 0.4.3x through current; known drift handled:
+
+  * ``pallas`` / ``pallas.tpu`` module homes (re-exported as ``pl`` /
+    ``pltpu``);
+  * the TPU compiler-params class: ``pltpu.TPUCompilerParams`` (0.4.x)
+    vs ``pltpu.CompilerParams`` (renamed in 0.5+), constructed through
+    :func:`tpu_compiler_params` which also drops kwargs a given version
+    does not know (e.g. ``dimension_semantics`` spelling changes);
+  * ``shard_map``: ``jax.experimental.shard_map.shard_map`` (0.4.x) vs
+    public ``jax.shard_map`` (0.5+), including the ``check_rep`` ->
+    ``check_vma`` keyword rename, via :func:`shard_map`.
+
+Keep this module dependency-light: importing it must never require a
+TPU, and must stay side-effect free.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import inspect
+from typing import Any, Callable
+
+import jax
+
+# --------------------------------------------------------------------------
+# Pallas module homes. jax.experimental is the only sanctioned import site.
+# --------------------------------------------------------------------------
+from jax.experimental import pallas as pl                   # noqa: F401
+from jax.experimental.pallas import tpu as pltpu            # noqa: F401
+
+__all__ = ["pl", "pltpu", "jax_version", "tpu_compiler_params",
+           "shard_map", "axis_size"]
+
+
+def jax_version() -> tuple[int, ...]:
+    return tuple(int(p) for p in jax.__version__.split(".")[:3])
+
+
+# --------------------------------------------------------------------------
+# TPU compiler params
+# --------------------------------------------------------------------------
+
+def _compiler_params_cls():
+    for name in ("CompilerParams", "TPUCompilerParams"):
+        cls = getattr(pltpu, name, None)
+        if cls is not None:
+            return cls
+    raise ImportError(
+        "pallas TPU compiler-params class not found in this jax version; "
+        "extend repro.compat._compiler_params_cls")
+
+
+def tpu_compiler_params(**kwargs: Any):
+    """Construct the TPU compiler-params object, whatever it is called.
+
+    Unknown keywords are dropped (with the value silently ignored) so a
+    caller can request e.g. ``dimension_semantics`` uniformly and still
+    run on a jax whose params class predates/renamed that field.
+    """
+    cls = _compiler_params_cls()
+    if dataclasses.is_dataclass(cls):
+        known = {f.name for f in dataclasses.fields(cls)}
+    else:  # pragma: no cover - non-dataclass future versions
+        known = set(inspect.signature(cls).parameters)
+    return cls(**{k: v for k, v in kwargs.items() if k in known})
+
+
+def axis_size(axis_name) -> int:
+    """``lax.axis_size`` (new jax) with the classic ``psum(1, name)``
+    constant-folding idiom as the 0.4.x fallback."""
+    impl = getattr(jax.lax, "axis_size", None)
+    if impl is not None:
+        return impl(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+# --------------------------------------------------------------------------
+# shard_map
+# --------------------------------------------------------------------------
+
+def _resolve_shard_map() -> tuple[Callable, str | None]:
+    """Return (impl, replication-check kwarg name or None)."""
+    impl = getattr(jax, "shard_map", None)
+    if impl is None:
+        from jax.experimental.shard_map import shard_map as impl
+    params = set(inspect.signature(impl).parameters)
+    for name in ("check_vma", "check_rep"):
+        if name in params:
+            return impl, name
+    return impl, None
+
+
+def shard_map(f: Callable | None = None, *, mesh, in_specs, out_specs,
+              check_vma: bool | None = None,
+              check_rep: bool | None = None, **kwargs: Any):
+    """Version-stable ``shard_map``.
+
+    Accepts either ``check_vma`` (0.5+ spelling) or ``check_rep`` (0.4.x
+    spelling) and forwards under whichever name the installed jax
+    understands. Usable bare or as ``functools.partial(shard_map,
+    mesh=..., ...)`` like the underlying transform.
+    """
+    if f is None:
+        return functools.partial(
+            shard_map, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma, check_rep=check_rep, **kwargs)
+    impl, check_kw = _resolve_shard_map()
+    flag = check_vma if check_vma is not None else check_rep
+    call_kw = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   **kwargs)
+    if flag is not None and check_kw is not None:
+        call_kw[check_kw] = flag
+    return impl(f, **call_kw)

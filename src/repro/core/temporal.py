@@ -1,10 +1,10 @@
 """Host-level temporal orchestration: model-driven sweep scheduling.
 
-``autotuned_run`` is the end-to-end reproduction of the thesis's tuning
-flow: the §5.4 model (core.perf_model.select_config) prunes the (bx, bt)
-space, the top candidate executes. ``tune_and_run`` additionally measures
-the shortlisted candidates (the thesis's "place and route only the
-shortlist" step) and keeps the empirically fastest.
+Thin veneer over ``kernels.autotune`` (the §5.4 tuning flow):
+``autotuned_run`` takes the model prior's top configuration and runs
+with it; ``tune_and_run`` additionally measures the shortlist (the
+thesis's "place and route only the shortlist" step) and keeps the
+empirically fastest.
 """
 from __future__ import annotations
 
@@ -14,20 +14,22 @@ from typing import Callable
 import jax
 
 from repro.core.blocking import BlockPlan
-from repro.core.perf_model import TpuSpec, V5E, select_config
+from repro.core.perf_model import TpuSpec, V5E
 from repro.core.stencil import StencilSpec
-from repro.kernels import ops
+from repro.kernels import autotune, ops
 
 
 def autotuned_run(x: jax.Array, spec: StencilSpec, n_steps: int,
                   tpu: TpuSpec = V5E, backend: str = "auto",
                   vmem_budget: int | None = None) -> tuple[jax.Array, BlockPlan]:
     """Pick the model-optimal plan and run n_steps with it."""
-    best = select_config(spec, x.shape, n_steps, tpu=tpu, top_k=1,
-                         vmem_budget=vmem_budget)[0]
-    out = ops.stencil_run(x, spec, n_steps, bx=best.bx, bt=best.bt,
-                          backend=backend)
-    return out, best
+    tuned = autotune.plan(x.shape, spec, dtype=x.dtype, backend=backend,
+                          n_steps=n_steps, top_k=1, measure=False,
+                          use_cache=False, vmem_budget=vmem_budget,
+                          tpu=tpu)
+    out = ops.stencil_run(x, spec, n_steps, bx=tuned.bx, bt=tuned.bt,
+                          backend=backend, variant=tuned.variant)
+    return out, tuned.block_plan
 
 
 def tune_and_run(x: jax.Array, spec: StencilSpec, n_steps: int,
@@ -36,19 +38,10 @@ def tune_and_run(x: jax.Array, spec: StencilSpec, n_steps: int,
                  vmem_budget: int | None = None,
                  ) -> tuple[jax.Array, BlockPlan, dict]:
     """Model-shortlist then measure: returns (result, plan, timings)."""
-    shortlist = select_config(spec, x.shape, n_steps, tpu=tpu, top_k=top_k,
-                              vmem_budget=vmem_budget)
-    timings = {}
-    best_plan, best_t = None, float("inf")
-    for plan in shortlist:
-        run = lambda: ops.stencil_run(  # noqa: E731
-            x, spec, n_steps, bx=plan.bx, bt=plan.bt, backend=backend
-        ).block_until_ready()
-        run()  # warm-up / compile
-        t0 = timer()
-        out = run()
-        dt = timer() - t0
-        timings[(plan.bx, plan.bt)] = dt
-        if dt < best_t:
-            best_plan, best_t, best_out = plan, dt, out
-    return best_out, best_plan, timings
+    tuned = autotune.plan(x.shape, spec, dtype=x.dtype, backend=backend,
+                          n_steps=n_steps, top_k=top_k, measure=True,
+                          use_cache=False, vmem_budget=vmem_budget,
+                          tpu=tpu, timer=timer)
+    out = ops.stencil_run(x, spec, n_steps, bx=tuned.bx, bt=tuned.bt,
+                          backend=backend, variant=tuned.variant)
+    return out, tuned.block_plan, tuned.timings

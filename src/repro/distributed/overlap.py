@@ -25,6 +25,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.optim import compress as comp
 
 
@@ -82,7 +83,7 @@ def make_dp_grad_fn(loss_fn: Callable, mesh, *, schedule: str = "overlapped",
           else grad_accum_then_reduce)
 
     @functools.partial(
-        jax.shard_map, mesh=mesh,
+        compat.shard_map, mesh=mesh,
         in_specs=(P(), P(None, axis_name)), out_specs=(P(), P()),
         check_vma=False)
     def dp_grads(params, micro_batches):

@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 
 def pipeline_forward(stage_fn: Callable, stage_params, xs: jax.Array,
                      *, axis_name: str = "stage") -> jax.Array:
@@ -33,7 +35,7 @@ def pipeline_forward(stage_fn: Callable, stage_params, xs: jax.Array,
     Returns: [n_micro, mb, ...] outputs (valid on every device after the
     final masked psum broadcast from the last stage).
     """
-    n = jax.lax.axis_size(axis_name)
+    n = compat.axis_size(axis_name)
     stage = jax.lax.axis_index(axis_name)
     n_micro = xs.shape[0]
     perm = [(i, (i + 1) % n) for i in range(n)]
@@ -70,7 +72,7 @@ def make_pipelined_apply(stage_fn: Callable, mesh, n_stages: int,
     sharded one stage per device along ``axis_name``.
     """
     @functools.partial(
-        jax.shard_map, mesh=mesh,
+        compat.shard_map, mesh=mesh,
         in_specs=(P(axis_name), P()), out_specs=P(),
         check_vma=False)
     def apply(stacked, xs):

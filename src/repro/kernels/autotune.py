@@ -1,0 +1,230 @@
+"""Stencil autotuner: model-pruned, measurement-grounded, disk-cached.
+
+This is the thesis's §5.4 tuning flow made a first-class subsystem:
+
+  1. **prior** — ``core.perf_model.select_config`` ranks all legal
+     ``(bx, bt)`` under the VMEM budget by the three-term roofline model
+     (the thesis's "prune before place-and-route" step);
+  2. **ground truth** — the shortlisted candidates (crossed with the
+     engine's kernel variants) are actually executed and timed; the
+     empirically fastest per-time-step configuration wins (the thesis's
+     "place and route only the shortlist, then measure");
+  3. **cache** — *measured* winners persist on disk keyed by
+     ``(spec, shape, dtype, backend, vmem_budget, tpu)`` so the search
+     runs once per problem class per machine (``REPRO_AUTOTUNE_CACHE``
+     overrides the location; default ``~/.cache/repro/autotune.json``).
+     Model-prior choices are never persisted: they are cheap to
+     recompute and must not shadow a later forced measurement.
+
+``plan(shape, spec)`` is the single entry point used by
+``kernels.ops``, the Rodinia apps, and ``benchmarks/rodinia.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import pathlib
+import tempfile
+import time
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.blocking import BlockPlan
+from repro.core.perf_model import TpuSpec, V5E, select_config
+from repro.core.stencil import StencilSpec
+
+_CACHE_VERSION = 1
+# Grids above this cell count are never timed on the host — the model
+# prior picks alone (measuring a 8192^2 interpret-mode sweep on CPU
+# would dwarf the run it is meant to speed up).
+_MEASURE_CELL_LIMIT = 4 * 2 ** 20
+
+
+@dataclasses.dataclass(frozen=True)
+class TunedPlan:
+    """A fully-resolved (bx, bt, variant) choice + its provenance."""
+
+    bx: int
+    bt: int
+    variant: str
+    source: str                      # "cache" | "measured" | "model"
+    block_plan: BlockPlan
+    # (bx, bt) -> best measured seconds per *time step* (empty when the
+    # choice came from the model prior or the cache).
+    timings: Dict[Tuple[int, int], float] = dataclasses.field(
+        default_factory=dict, compare=False)
+
+
+# ---------------------------------------------------------------------------
+# Disk cache
+# ---------------------------------------------------------------------------
+
+def cache_path() -> pathlib.Path:
+    env = os.environ.get("REPRO_AUTOTUNE_CACHE")
+    if env:
+        return pathlib.Path(env)
+    return pathlib.Path.home() / ".cache" / "repro" / "autotune.json"
+
+
+# Parsed cache files memoized per path so resolving a plan in a loop
+# does not pay a file read + JSON parse per iteration.
+_MEM: dict = {}
+
+
+def _load_cache() -> dict:
+    path = str(cache_path())
+    if path in _MEM:
+        return _MEM[path]
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (OSError, ValueError):
+        data = {}
+    if data.get("version") != _CACHE_VERSION:
+        data = {}
+    _MEM[path] = data
+    return data
+
+
+def _store_cache(data: dict) -> None:
+    path = cache_path()
+    _MEM[str(path)] = data
+    try:
+        path.parent.mkdir(parents=True, exist_ok=True)
+        data["version"] = _CACHE_VERSION
+        fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp")
+        with os.fdopen(fd, "w") as f:
+            json.dump(data, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+    except OSError:
+        pass  # caching is best-effort; never fail the computation
+
+
+def clear_cache() -> None:
+    _MEM.pop(str(cache_path()), None)
+    try:
+        cache_path().unlink()
+    except OSError:
+        pass
+
+
+def _key(spec: StencilSpec, shape, dtype: str, backend: str,
+         vmem_budget: int, tpu_name: str) -> str:
+    sh = "x".join(str(s) for s in shape)
+    return (f"{spec.name}|d{spec.dims}|r{spec.radius}|{sh}|{dtype}|"
+            f"{backend}|vm{vmem_budget}|{tpu_name}")
+
+
+# ---------------------------------------------------------------------------
+# Search
+# ---------------------------------------------------------------------------
+
+def _variants_for(spec: StencilSpec, backend: str) -> tuple[str, ...]:
+    if backend == "reference":
+        return ("revolving",)    # the oracle has no kernel variants
+    from repro.kernels import engine
+    return engine.variants_for(spec.dims)
+
+
+def _measure(x, spec, plans, variants, backend, timer,
+             repeats: int = 2):
+    """Time each (plan, variant); return (winner, winner_variant,
+    {(bx, bt): best seconds-per-step})."""
+    from repro.kernels import ops
+    timings: Dict[Tuple[int, int], float] = {}
+    best = (None, None, float("inf"))
+    for p in plans:
+        for v in variants:
+            def run(p=p, v=v):
+                return ops.stencil_sweep(
+                    x, spec, bx=p.bx, bt=p.bt, backend=backend,
+                    variant=v).block_until_ready()
+            try:
+                run()  # warm-up / compile
+            except Exception:   # noqa: BLE001 - an illegal candidate
+                continue        # just leaves the race
+            dt = float("inf")
+            for _ in range(repeats):
+                t0 = timer()
+                run()
+                dt = min(dt, timer() - t0)
+            per_step = dt / p.bt
+            key = (p.bx, p.bt)
+            timings[key] = min(timings.get(key, float("inf")), per_step)
+            if per_step < best[2]:
+                best = (p, v, per_step)
+    return best[0], best[1], timings
+
+
+def plan(shape, spec: StencilSpec, *, dtype="float32",
+         backend: str = "auto", n_steps: int = 16, top_k: int = 3,
+         measure: bool | None = None, use_cache: bool = True,
+         vmem_budget: int | None = None, tpu: TpuSpec = V5E,
+         timer: Callable[[], float] = time.perf_counter) -> TunedPlan:
+    """Resolve the best (bx, bt, variant) for one stencil problem.
+
+    ``measure=None`` (default) measures iff the grid is small enough to
+    time on this host (< ``_MEASURE_CELL_LIMIT`` cells) and the backend
+    is a real one — ``interpret`` is a correctness harness whose
+    wall-clock says nothing about the compiled kernel, so it defaults
+    to the model prior. ``False`` takes the model prior's top choice;
+    ``True`` forces measurement.
+    """
+    from repro.kernels import ops
+    shape = tuple(int(s) for s in shape)
+    dtype = str(jnp.dtype(dtype).name)
+    backend = ops.resolve_backend(backend)
+    budget = vmem_budget if vmem_budget is not None else tpu.vmem_bytes
+    key = _key(spec, shape, dtype, backend, budget, tpu.name)
+
+    def _mk(bx, bt, variant, source, timings=None):
+        bp = BlockPlan(spec, shape, bx=bx, bt=bt,
+                       itemsize=jnp.dtype(dtype).itemsize)
+        return TunedPlan(bx=bx, bt=bt, variant=variant, source=source,
+                         block_plan=bp, timings=timings or {})
+
+    cache = _load_cache() if use_cache else {}
+    hit = cache.get(key)
+    # A hit only satisfies a forced-measurement request if the cached
+    # winner was itself measured (only measured winners are persisted,
+    # but stay defensive about hand-edited cache files).
+    if hit is not None and not (measure is True
+                                and hit.get("source") != "measured"):
+        return _mk(hit["bx"], hit["bt"], hit["variant"], "cache")
+
+    shortlist = select_config(
+        spec, shape, n_steps, tpu=tpu, top_k=top_k,
+        vmem_budget=vmem_budget)
+    variants = _variants_for(spec, backend)
+
+    cells = 1
+    for s in shape:
+        cells *= s
+    do_measure = (backend != "interpret" and cells <= _MEASURE_CELL_LIMIT
+                  if measure is None else measure)
+
+    if do_measure:
+        x = jnp.zeros(shape, jnp.dtype(dtype))
+        winner, w_variant, timings = _measure(
+            x, spec, shortlist, variants, backend, timer)
+        if winner is not None:
+            tuned = _mk(winner.bx, winner.bt, w_variant, "measured",
+                        timings)
+        else:   # every candidate failed to run; fall back to the prior
+            tuned = _mk(shortlist[0].bx, shortlist[0].bt, variants[0],
+                        "model")
+    else:
+        tuned = _mk(shortlist[0].bx, shortlist[0].bt, variants[0],
+                    "model")
+
+    # Only measured winners are worth persisting: the model prior is
+    # cheap to recompute and caching it would shadow later measurement.
+    if use_cache and tuned.source == "measured":
+        cache = _load_cache()
+        cache[key] = {"bx": tuned.bx, "bt": tuned.bt,
+                      "variant": tuned.variant, "source": tuned.source}
+        _store_cache(cache)
+    return tuned

@@ -1,0 +1,340 @@
+"""Unified spatial+temporal-blocked stencil engine (thesis ch.5).
+
+One engine owns everything the 2D and 3D accelerators share — the
+dimension-*specific* arithmetic is injected as a plugin:
+
+  * window masking (Dirichlet-zero validity over the padded window),
+  * the fused-time-step loop (``bt`` in-VMEM steps per HBM pass, halo
+    shrinking by ``r`` per step — overlapped blocking, thesis fig. 5-6),
+  * variant dispatch:
+      - ``multioperand`` ("basic"): the input is passed three times with
+        left/center/right BlockSpec index maps — 3x HBM read
+        amplification;
+      - ``revolving`` ("advanced", the shift-register analog §3.2.4.1):
+        a persistent VMEM scratch holds the last three tiles across the
+        sequential grid, so each tile is read from HBM exactly once.
+        For 3D grids the z axis is *streamed* plane-by-plane through a
+        rolling plane window (2.5D blocking) — the same shift-register
+        idea along z — so both named variants map to the one streaming
+        kernel (x-tiles are re-read 3x; z is read once per sweep);
+  * ``pallas_call`` assembly: grids, Block/scratch specs, compiler
+    params (all experimental-jax symbols come through ``repro.compat``,
+    per the README shim policy), padding to lane/sublane tiles and
+    cropping back.
+
+Plugins (see ``stencil2d._apply_star_2d`` / ``stencil3d._apply_star_3d``):
+
+  2D: ``apply_fn(win[rows, cols], spec) -> [rows, cols]`` — one time
+      step on a window, zero-padded edges;
+  3D: ``apply_fn(window[2r+1, rows, cols], spec) -> [rows, cols]`` —
+      one time step at the window's center plane.
+
+Boundary semantics: Dirichlet zero (see kernels/ref.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.compat import pl, pltpu, tpu_compiler_params
+from repro.core.blocking import BlockPlan
+from repro.core.stencil import StencilSpec
+
+VARIANTS_2D = ("revolving", "multioperand")
+VARIANTS_3D = ("revolving",)   # one streaming kernel; see module docstring
+
+
+def variants_for(dims: int) -> tuple[str, ...]:
+    return VARIANTS_2D if dims == 2 else VARIANTS_3D
+
+
+# ---------------------------------------------------------------------------
+# Shared in-kernel machinery
+# ---------------------------------------------------------------------------
+
+def window_mask(tile_idx, bx: int, halo: int, rows: int, true_h: int,
+                true_w: int):
+    """Valid-region mask for the [rows, bx + 2*halo] window of tile_idx."""
+    width = bx + 2 * halo
+    col0 = tile_idx * bx - halo
+    cols = col0 + jax.lax.broadcasted_iota(jnp.int32, (rows, width), 1)
+    rr = jax.lax.broadcasted_iota(jnp.int32, (rows, width), 0)
+    return (cols >= 0) & (cols < true_w) & (rr < true_h)
+
+
+def fused_steps(win, mask, spec: StencilSpec, bt: int, apply_fn, src=None):
+    """``bt`` fused steps on a window; ``src`` is an optional per-step
+    additive source window (Hotspot power grid, thesis §4.3.1.2)."""
+    zero = jnp.zeros_like(win)
+    win = jnp.where(mask, win, zero)
+    if src is not None:
+        src = jnp.where(mask, src, zero)
+
+    def body(_, g):
+        out = apply_fn(g, spec)
+        if src is not None:
+            out = out + src
+        return jnp.where(mask, out, zero)
+
+    return jax.lax.fori_loop(0, bt, body, win)
+
+
+# ---------------------------------------------------------------------------
+# 2D kernel bodies
+# ---------------------------------------------------------------------------
+
+def _kernel_2d_multi(*refs, spec, bx, bt, true_h, true_w, has_src,
+                     apply_fn):
+    if has_src:
+        xl_ref, xc_ref, xr_ref, sl_ref, sc_ref, sr_ref, o_ref = refs
+    else:
+        (xl_ref, xc_ref, xr_ref, o_ref), src = refs, None
+    i = pl.program_id(0)
+    halo = spec.halo(bt)
+    rows = xc_ref.shape[0]
+    cat = jnp.concatenate([xl_ref[...], xc_ref[...], xr_ref[...]], axis=1)
+    win = cat[:, bx - halo: 2 * bx + halo]
+    if has_src:
+        scat = jnp.concatenate([sl_ref[...], sc_ref[...], sr_ref[...]],
+                               axis=1)
+        src = scat[:, bx - halo: 2 * bx + halo]
+    mask = window_mask(i, bx, halo, rows, true_h, true_w)
+    win = fused_steps(win, mask, spec, bt, apply_fn, src)
+    o_ref[...] = win[:, halo: halo + bx]
+
+
+def _kernel_2d_revolving(*refs, spec, bx, bt, true_h, true_w, has_src,
+                         apply_fn):
+    if has_src:
+        x_ref, s_ref, o_ref, buf_ref, sbuf_ref = refs
+    else:
+        (x_ref, o_ref, buf_ref), s_ref, sbuf_ref = refs, None, None
+    i = pl.program_id(0)
+    halo = spec.halo(bt)
+    rows = x_ref.shape[0]
+
+    @pl.when(i == 0)
+    def _init():
+        buf_ref[...] = jnp.zeros_like(buf_ref)
+        if has_src:
+            sbuf_ref[...] = jnp.zeros_like(sbuf_ref)
+
+    # Shift the revolving buffer left by one tile...
+    @pl.when(i > 0)
+    def _shift():
+        buf_ref[:, : 2 * bx] = buf_ref[:, bx:]
+        if has_src:
+            sbuf_ref[:, : 2 * bx] = sbuf_ref[:, bx:]
+
+    # ...and stream in tile i (zero if past the right edge of the grid).
+    col0 = i * bx
+    cols = col0 + jax.lax.broadcasted_iota(jnp.int32, (rows, bx), 1)
+    rr = jax.lax.broadcasted_iota(jnp.int32, (rows, bx), 0)
+    inb = (cols < true_w) & (rr < true_h)
+    buf_ref[:, 2 * bx:] = jnp.where(inb, x_ref[...], 0)
+    if has_src:
+        sbuf_ref[:, 2 * bx:] = jnp.where(inb, s_ref[...], 0)
+
+    # Compute output tile i-1 from the assembled window.
+    win = buf_ref[:, bx - halo: 2 * bx + halo]
+    src = sbuf_ref[:, bx - halo: 2 * bx + halo] if has_src else None
+    mask = window_mask(i - 1, bx, halo, rows, true_h, true_w)
+    win = fused_steps(win, mask, spec, bt, apply_fn, src)
+    o_ref[...] = win[:, halo: halo + bx]
+
+
+# ---------------------------------------------------------------------------
+# 3D kernel body: 2.5D blocking, z streamed through a plane pipeline.
+# Stage ``s`` holds a rolling window of the last 2r+1 planes of the field
+# after ``s+1`` time steps; at z-grid-step ``k`` it consumes the stage
+# ``s-1`` window and emits plane ``k - (s+1)*r`` — the FPGA pipeline in
+# which each temporal stage lags its producer by ``r`` shift-register
+# planes (thesis §5.3, fig. 5-6 b).
+# ---------------------------------------------------------------------------
+
+def _kernel_3d_stream(*refs, spec, bx, bt, true_d, true_h, true_w,
+                      has_src, apply_fn):
+    if has_src:
+        (xl_ref, xc_ref, xr_ref, sl_ref, sc_ref, sr_ref, o_ref,
+         win_ref, src_ref) = refs
+    else:
+        xl_ref, xc_ref, xr_ref, o_ref, win_ref = refs
+    i = pl.program_id(0)       # x tile
+    k = pl.program_id(1)       # z pipeline step
+    r = spec.radius
+    halo = spec.halo(bt)
+    rows = xc_ref.shape[1]
+
+    @pl.when(k == 0)
+    def _init():
+        win_ref[...] = jnp.zeros_like(win_ref)
+        if has_src:
+            src_ref[...] = jnp.zeros_like(src_ref)
+
+    # ---- assemble the input plane window for z = k (stage-0 input) ----
+    cat = jnp.concatenate([xl_ref[0], xc_ref[0], xr_ref[0]], axis=1)
+    plane = cat[:, bx - halo: 2 * bx + halo]
+    xymask = window_mask(i, bx, halo, rows, true_h, true_w)
+    zero = jnp.zeros_like(plane)
+    plane = jnp.where(xymask & (k < true_d), plane, zero)
+
+    if has_src:
+        # Rolling source-plane buffer (Hotspot3D power): slot bt*r holds
+        # plane k; stage s reads its output plane's source at the
+        # *static* slot bt*r - (s+1)*r.
+        scat = jnp.concatenate([sl_ref[0], sc_ref[0], sr_ref[0]], axis=1)
+        splane = scat[:, bx - halo: 2 * bx + halo]
+        splane = jnp.where(xymask & (k < true_d), splane, zero)
+        for j in range(bt * r):
+            src_ref[j] = src_ref[j + 1]
+        src_ref[bt * r] = splane
+
+    # ---- pipeline: stage s consumes window[s], emits plane k-(s+1)*r ----
+    for s in range(bt):
+        # push the producer plane into stage s's rolling window
+        for j in range(2 * r):
+            win_ref[s, j] = win_ref[s, j + 1]
+        win_ref[s, 2 * r] = plane
+        z_out = k - (s + 1) * r
+        updated = apply_fn(win_ref[s], spec)
+        if has_src:
+            updated = updated + src_ref[bt * r - (s + 1) * r]
+        plane = jnp.where(xymask & (z_out >= 0) & (z_out < true_d),
+                          updated, zero)
+
+    o_ref[0] = plane[:, halo: halo + bx]
+
+
+# ---------------------------------------------------------------------------
+# pallas_call assembly
+# ---------------------------------------------------------------------------
+
+def _run_2d(x, spec, plan: BlockPlan, bx, bt, variant, interpret, source,
+            apply_fn):
+    true_h, true_w = x.shape
+    hp, wp = plan.padded_rows, plan.padded_width
+    xp = jnp.pad(x, ((0, hp - true_h), (0, wp - true_w)))
+    has_src = source is not None
+    sp = (jnp.pad(source.astype(x.dtype),
+                  ((0, hp - true_h), (0, wp - true_w)))
+          if has_src else None)
+    rows, nt = plan.padded_rows, plan.n_tiles
+    block = (rows, bx)
+    params = tpu_compiler_params(dimension_semantics=("arbitrary",))
+
+    if variant == "multioperand":
+        kern = functools.partial(_kernel_2d_multi, spec=spec, bx=bx, bt=bt,
+                                 true_h=true_h, true_w=true_w,
+                                 has_src=has_src, apply_fn=apply_fn)
+        tri_specs = [
+            pl.BlockSpec(block, lambda i: (0, jnp.maximum(i - 1, 0))),
+            pl.BlockSpec(block, lambda i: (0, i)),
+            pl.BlockSpec(block, lambda i: (0, jnp.minimum(i + 1, nt - 1))),
+        ]
+        out = pl.pallas_call(
+            kern,
+            grid=(nt,),
+            in_specs=tri_specs * (2 if has_src else 1),
+            out_specs=pl.BlockSpec(block, lambda i: (0, i)),
+            out_shape=jax.ShapeDtypeStruct(xp.shape, xp.dtype),
+            compiler_params=params,
+            interpret=interpret,
+        )(*((xp, xp, xp) + ((sp, sp, sp) if has_src else ())))
+    elif variant == "revolving":
+        kern = functools.partial(_kernel_2d_revolving, spec=spec, bx=bx,
+                                 bt=bt, true_h=true_h, true_w=true_w,
+                                 has_src=has_src, apply_fn=apply_fn)
+        in_spec = pl.BlockSpec(block, lambda i: (0, jnp.minimum(i, nt - 1)))
+        scratch = [pltpu.VMEM((rows, 3 * bx), xp.dtype)]
+        if has_src:
+            scratch.append(pltpu.VMEM((rows, 3 * bx), xp.dtype))
+        out = pl.pallas_call(
+            kern,
+            grid=(nt + 1,),
+            in_specs=[in_spec] * (2 if has_src else 1),
+            out_specs=pl.BlockSpec(block,
+                                   lambda i: (0, jnp.maximum(i - 1, 0))),
+            out_shape=jax.ShapeDtypeStruct(xp.shape, xp.dtype),
+            scratch_shapes=scratch,
+            compiler_params=params,
+            interpret=interpret,
+        )(*((xp, sp) if has_src else (xp,)))
+    else:
+        raise ValueError(f"unknown 2D variant {variant!r}; "
+                         f"expected one of {VARIANTS_2D}")
+    return out[:true_h, :true_w]
+
+
+def _run_3d(x, spec, plan: BlockPlan, bx, bt, variant, interpret, source,
+            apply_fn):
+    if variant not in VARIANTS_3D:
+        raise ValueError(f"unknown 3D variant {variant!r}; "
+                         f"expected one of {VARIANTS_3D}")
+    true_d, true_h, true_w = x.shape
+    rows, nt, r = plan.padded_rows, plan.n_tiles, spec.radius
+    fill = bt * r
+    has_src = source is not None
+    pad3 = ((0, 0), (0, rows - true_h), (0, plan.padded_width - true_w))
+    xp = jnp.pad(x, pad3)
+    sp = jnp.pad(source.astype(x.dtype), pad3) if has_src else None
+    block = (1, rows, bx)
+
+    kern = functools.partial(_kernel_3d_stream, spec=spec, bx=bx, bt=bt,
+                             true_d=true_d, true_h=true_h, true_w=true_w,
+                             has_src=has_src, apply_fn=apply_fn)
+    tri_specs = [
+        pl.BlockSpec(block, lambda i, k: (
+            jnp.minimum(k, true_d - 1), 0, jnp.maximum(i - 1, 0))),
+        pl.BlockSpec(block, lambda i, k: (
+            jnp.minimum(k, true_d - 1), 0, i)),
+        pl.BlockSpec(block, lambda i, k: (
+            jnp.minimum(k, true_d - 1), 0, jnp.minimum(i + 1, nt - 1))),
+    ]
+    scratch = [pltpu.VMEM((bt, 2 * r + 1, rows, bx + 2 * bt * r), xp.dtype)]
+    if has_src:
+        scratch.append(
+            pltpu.VMEM((bt * r + 1, rows, bx + 2 * bt * r), xp.dtype))
+    out = pl.pallas_call(
+        kern,
+        grid=(nt, true_d + fill),
+        in_specs=tri_specs * (2 if has_src else 1),
+        out_specs=pl.BlockSpec(block, lambda i, k: (
+            jnp.maximum(k - fill, 0), 0, i)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, xp.dtype),
+        scratch_shapes=scratch,
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(*((xp, xp, xp, sp, sp, sp) if has_src else (xp, xp, xp)))
+    return out[:true_d, :true_h, :true_w]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("spec", "bx", "bt", "variant",
+                                    "interpret", "apply_fn"))
+def stencil_call(x: jax.Array, spec: StencilSpec, *, bx: int, bt: int,
+                 variant: str = "revolving", interpret: bool = True,
+                 source: jax.Array | None = None,
+                 apply_fn=None) -> jax.Array:
+    """Run ``bt`` fused time steps of ``spec`` over a 2D or 3D grid.
+
+    ``source``: optional same-shape per-step additive grid (Hotspot's
+    power input); each fused step computes ``g <- stencil(g) + source``.
+    ``apply_fn``: the dimension-specific plugin (defaults to the star
+    update of the matching stencil module).
+    """
+    if x.ndim != spec.dims:
+        raise ValueError(
+            f"grid rank {x.ndim} != spec.dims {spec.dims}")
+    plan = BlockPlan(spec, x.shape, bx=bx, bt=bt, itemsize=x.dtype.itemsize)
+    if spec.dims == 2:
+        if apply_fn is None:
+            from repro.kernels.stencil2d import _apply_star_2d as apply_fn
+        return _run_2d(x, spec, plan, bx, bt, variant, interpret, source,
+                       apply_fn)
+    if apply_fn is None:
+        from repro.kernels.stencil3d import _apply_star_3d as apply_fn
+    return _run_3d(x, spec, plan, bx, bt, variant, interpret, source,
+                   apply_fn)

@@ -1,4 +1,4 @@
-"""Public jit'd wrappers for the stencil kernels.
+"""Public wrappers for the stencil engine + autotuner glue.
 
 Backend dispatch:
   * ``"pallas"``     — compile the Pallas kernel for TPU (real hardware);
@@ -7,13 +7,14 @@ Backend dispatch:
   * ``"reference"``  — the pure-jnp oracle (kernels/ref.py), i.e. the
                        thesis's "NDRange-like" data-parallel formulation;
   * ``"auto"``       — pallas on TPU, interpret elsewhere.
+
+Blocking parameters: pass explicit ``bx``/``bt``/``variant``, or leave
+any of them ``None`` to have ``kernels.autotune.plan`` resolve it
+(model prior -> measured ground truth -> disk cache).
 """
 from __future__ import annotations
 
-import functools
-
 import jax
-import jax.numpy as jnp
 
 from repro.core.blocking import BlockPlan
 from repro.core.stencil import StencilSpec
@@ -32,34 +33,58 @@ def _resolve(backend: str) -> str:
     return backend
 
 
-def stencil_sweep(x: jax.Array, spec: StencilSpec, bx: int = 256,
-                  bt: int = 1, backend: str = "auto",
-                  variant: str = "revolving",
+resolve_backend = _resolve
+
+
+def _resolve_blocking(x, spec, bx, bt, variant, backend, n_steps=None):
+    """Fill any None among (bx, bt, variant) from the autotuner.
+
+    With ``bx`` and ``bt`` both explicit, no tuner runs and a None
+    variant just takes the engine default — the tuner's variant choice
+    is only meaningful alongside the (bx, bt) it was measured with.
+    """
+    if bx is not None and bt is not None:
+        return bx, bt, variant if variant is not None else "revolving"
+    from repro.kernels import autotune
+    tuned = autotune.plan(x.shape, spec, dtype=x.dtype, backend=backend,
+                          **({} if n_steps is None
+                             else {"n_steps": n_steps}))
+    return (bx if bx is not None else tuned.bx,
+            bt if bt is not None else tuned.bt,
+            variant if variant is not None else tuned.variant)
+
+
+def stencil_sweep(x: jax.Array, spec: StencilSpec, bx: int | None = 256,
+                  bt: int | None = 1, backend: str = "auto",
+                  variant: str | None = None,
                   source: jax.Array | None = None) -> jax.Array:
     """One blocked pass = ``bt`` fused time steps over the whole grid.
 
     ``source``: optional per-step additive grid (Hotspot power input).
     """
     backend = _resolve(backend)
+    bx, bt, variant = _resolve_blocking(x, spec, bx, bt, variant, backend)
     if backend == "reference":
         return _ref.stencil_multistep(x, spec, bt, source)
     interpret = backend == "interpret"
-    if spec.dims == 2:
-        return _stencil2d(x, spec, bx=bx, bt=bt, variant=variant,
-                          interpret=interpret, source=source)
-    return _stencil3d(x, spec, bx=bx, bt=bt, interpret=interpret,
-                      source=source)
+    fn = _stencil2d if spec.dims == 2 else _stencil3d
+    return fn(x, spec, bx=bx, bt=bt, variant=variant,
+              interpret=interpret, source=source)
 
 
 def stencil_run(x: jax.Array, spec: StencilSpec, n_steps: int,
-                bx: int = 256, bt: int = 1, backend: str = "auto",
-                variant: str = "revolving",
+                bx: int | None = 256, bt: int | None = 1,
+                backend: str = "auto", variant: str | None = None,
                 source: jax.Array | None = None) -> jax.Array:
     """``n_steps`` total time steps as ceil(n/bt) blocked sweeps.
 
     The trailing partial sweep runs with the remainder temporal degree so
     the result is exactly ``n_steps`` applications of the stencil.
     """
+    backend = _resolve(backend)
+    bx, bt, variant = _resolve_blocking(x, spec, bx, bt, variant, backend,
+                                        n_steps=n_steps)
+    bt = min(bt, n_steps) if n_steps else bt
     full, rem = divmod(n_steps, bt)
     for _ in range(full):
         x = stencil_sweep(x, spec, bx=bx, bt=bt, backend=backend,
@@ -68,6 +93,20 @@ def stencil_run(x: jax.Array, spec: StencilSpec, n_steps: int,
         x = stencil_sweep(x, spec, bx=bx, bt=rem, backend=backend,
                           variant=variant, source=source)
     return x
+
+
+def stencil_auto(x: jax.Array, spec: StencilSpec, n_steps: int,
+                 backend: str = "auto", source: jax.Array | None = None,
+                 **tune_kw):
+    """Autotuned end-to-end run; returns (result, TunedPlan)."""
+    from repro.kernels import autotune
+    backend = _resolve(backend)
+    tuned = autotune.plan(x.shape, spec, dtype=x.dtype, backend=backend,
+                          n_steps=n_steps, **tune_kw)
+    out = stencil_run(x, spec, n_steps, bx=tuned.bx, bt=tuned.bt,
+                      backend=backend, variant=tuned.variant,
+                      source=source)
+    return out, tuned
 
 
 def plan_for(x: jax.Array, spec: StencilSpec, bx: int, bt: int) -> BlockPlan:

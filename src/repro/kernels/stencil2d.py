@@ -1,37 +1,25 @@
-"""Pallas TPU kernel: 2D star stencil with spatial + temporal blocking.
+"""2D star-stencil plugin for the unified engine (thesis ch.5, 2D).
 
-TPU mapping of the thesis's ch.5 2D accelerator (see DESIGN.md §2/§4):
+All blocking/variant/pallas_call machinery lives in
+``repro.kernels.engine``; this module contributes only the 2D star
+update (the per-window arithmetic) and a thin public wrapper.
 
-  * spatial blocking: 1D blocking in x with tiles of ``bx`` columns; the
-    full y extent of the tile is VMEM-resident (the thesis streams y
-    through a shift register one cell per cycle; the TPU VPU wants whole
-    (8,128) tiles, so we hold the column panel instead),
-  * temporal blocking: ``bt`` fused time steps per HBM pass via an
-    in-kernel ``fori_loop``; validity shrinks by ``r`` per step, so the
-    working window is ``bx + 2*bt*r`` columns (overlapped blocking,
-    thesis fig. 5-6 a),
-  * two variants mirroring the thesis's optimization ladder:
-      - ``multioperand`` ("basic"): the same input array is passed three
-        times with shifted BlockSpec index maps (left/center/right tile)
-        — simple, but 3x HBM read amplification;
-      - ``revolving`` ("advanced", the shift-register analog §3.2.4.1):
-        a persistent VMEM scratch holds the last three tiles across the
-        sequential grid; each tile is read from HBM exactly once.
+TPU mapping notes (DESIGN.md §2/§4): spatial blocking is 1D in x with
+``bx``-column tiles and the full y extent VMEM-resident (the thesis
+streams y through a shift register one cell per cycle; the TPU VPU
+wants whole (8,128) tiles, so we hold the column panel instead);
+temporal blocking fuses ``bt`` steps per HBM pass, shrinking validity
+by ``r`` per step (overlapped blocking, thesis fig. 5-6 a).
 
 Boundary semantics: Dirichlet zero (see kernels/ref.py).
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.blocking import BlockPlan, round_up, _SUBLANE
 from repro.core.stencil import StencilSpec
+from repro.kernels import engine
 
 
 def _apply_star_2d(win: jax.Array, spec: StencilSpec) -> jax.Array:
@@ -54,173 +42,12 @@ def _apply_star_2d(win: jax.Array, spec: StencilSpec) -> jax.Array:
     return acc
 
 
-def _window_mask(tile_idx, bx: int, halo: int, rows: int, true_h: int,
-                 true_w: int, dtype):
-    """Valid-region mask for the [rows, bx + 2*halo] window of tile_idx."""
-    width = bx + 2 * halo
-    col0 = tile_idx * bx - halo
-    cols = col0 + jax.lax.broadcasted_iota(jnp.int32, (rows, width), 1)
-    rr = jax.lax.broadcasted_iota(jnp.int32, (rows, width), 0)
-    return (cols >= 0) & (cols < true_w) & (rr < true_h)
-
-
-def _fused_steps(win, mask, spec: StencilSpec, bt: int, src=None):
-    """``bt`` fused steps on a window; ``src`` is an optional per-step
-    additive source window (Hotspot power grid, thesis §4.3.1.2)."""
-    zero = jnp.zeros_like(win)
-    win = jnp.where(mask, win, zero)
-    if src is not None:
-        src = jnp.where(mask, src, zero)
-
-    def body(_, g):
-        out = _apply_star_2d(g, spec)
-        if src is not None:
-            out = out + src
-        return jnp.where(mask, out, zero)
-
-    return jax.lax.fori_loop(0, bt, body, win)
-
-
-# ---------------------------------------------------------------------------
-# Variant 1: multioperand ("basic"; 3x read amplification)
-# ---------------------------------------------------------------------------
-
-def _kernel_multi(*refs, spec, bx, bt, true_h, true_w, has_src):
-    if has_src:
-        xl_ref, xc_ref, xr_ref, sl_ref, sc_ref, sr_ref, o_ref = refs
-    else:
-        (xl_ref, xc_ref, xr_ref, o_ref), src = refs, None
-    i = pl.program_id(0)
-    halo = spec.halo(bt)
-    rows = xc_ref.shape[0]
-    cat = jnp.concatenate([xl_ref[...], xc_ref[...], xr_ref[...]], axis=1)
-    win = cat[:, bx - halo: 2 * bx + halo]
-    if has_src:
-        scat = jnp.concatenate([sl_ref[...], sc_ref[...], sr_ref[...]],
-                               axis=1)
-        src = scat[:, bx - halo: 2 * bx + halo]
-    mask = _window_mask(i, bx, halo, rows, true_h, true_w, win.dtype)
-    win = _fused_steps(win, mask, spec, bt, src)
-    o_ref[...] = win[:, halo: halo + bx]
-
-
-# ---------------------------------------------------------------------------
-# Variant 2: revolving scratch buffer ("advanced"; 1x reads; the
-# shift-register analog — each grid step shifts the 3-tile buffer left by
-# one tile and streams in the next tile, exactly like thesis fig. 3-6).
-# ---------------------------------------------------------------------------
-
-def _kernel_revolving(*refs, spec, bx, bt, true_h, true_w, n_tiles,
-                      has_src):
-    if has_src:
-        x_ref, s_ref, o_ref, buf_ref, sbuf_ref = refs
-    else:
-        (x_ref, o_ref, buf_ref), s_ref, sbuf_ref = refs, None, None
-    i = pl.program_id(0)
-    halo = spec.halo(bt)
-    rows = x_ref.shape[0]
-
-    @pl.when(i == 0)
-    def _init():
-        buf_ref[...] = jnp.zeros_like(buf_ref)
-        if has_src:
-            sbuf_ref[...] = jnp.zeros_like(sbuf_ref)
-
-    # Shift the revolving buffer left by one tile...
-    @pl.when(i > 0)
-    def _shift():
-        buf_ref[:, : 2 * bx] = buf_ref[:, bx:]
-        if has_src:
-            sbuf_ref[:, : 2 * bx] = sbuf_ref[:, bx:]
-
-    # ...and stream in tile i (zero if past the right edge of the grid).
-    col0 = i * bx
-    cols = col0 + jax.lax.broadcasted_iota(jnp.int32, (rows, bx), 1)
-    rr = jax.lax.broadcasted_iota(jnp.int32, (rows, bx), 0)
-    inb = (cols < true_w) & (rr < true_h)
-    buf_ref[:, 2 * bx:] = jnp.where(inb, x_ref[...], 0)
-    if has_src:
-        sbuf_ref[:, 2 * bx:] = jnp.where(inb, s_ref[...], 0)
-
-    # Compute output tile i-1 from the assembled window.
-    win = buf_ref[:, bx - halo: 2 * bx + halo]
-    src = sbuf_ref[:, bx - halo: 2 * bx + halo] if has_src else None
-    mask = _window_mask(i - 1, bx, halo, rows, true_h, true_w, win.dtype)
-    win = _fused_steps(win, mask, spec, bt, src)
-    o_ref[...] = win[:, halo: halo + bx]
-
-
-# ---------------------------------------------------------------------------
-# pallas_call builders
-# ---------------------------------------------------------------------------
-
-def _padded(x: jax.Array, plan: BlockPlan):
-    h, w = x.shape
-    hp, wp = plan.padded_rows, plan.padded_width
-    return jnp.pad(x, ((0, hp - h), (0, wp - w)))
-
-
-@functools.partial(jax.jit,
-                   static_argnames=("spec", "bx", "bt", "variant",
-                                    "interpret"))
 def stencil2d(x: jax.Array, spec: StencilSpec, bx: int = 256, bt: int = 1,
               variant: str = "revolving", interpret: bool = True,
               source: jax.Array | None = None) -> jax.Array:
-    """Run ``bt`` fused time steps of ``spec`` over a [H, W] grid.
-
-    ``source``: optional same-shape per-step additive grid (Hotspot's
-    power input); each fused step computes ``g <- stencil(g) + source``.
-    """
+    """Run ``bt`` fused time steps of ``spec`` over a [H, W] grid."""
     if x.ndim != 2 or spec.dims != 2:
         raise ValueError("stencil2d needs a 2D grid and a 2D spec")
-    true_h, true_w = x.shape
-    plan = BlockPlan(spec, x.shape, bx=bx, bt=bt, itemsize=x.dtype.itemsize)
-    xp = _padded(x, plan)
-    has_src = source is not None
-    sp = _padded(source.astype(x.dtype), plan) if has_src else None
-    rows = plan.padded_rows
-    nt = plan.n_tiles
-    block = (rows, bx)
-
-    if variant == "multioperand":
-        kern = functools.partial(_kernel_multi, spec=spec, bx=bx, bt=bt,
-                                 true_h=true_h, true_w=true_w,
-                                 has_src=has_src)
-        tri_specs = [
-            pl.BlockSpec(block, lambda i: (0, jnp.maximum(i - 1, 0))),
-            pl.BlockSpec(block, lambda i: (0, i)),
-            pl.BlockSpec(block, lambda i: (0, jnp.minimum(i + 1, nt - 1))),
-        ]
-        operands = (xp, xp, xp) + ((sp, sp, sp) if has_src else ())
-        out = pl.pallas_call(
-            kern,
-            grid=(nt,),
-            in_specs=tri_specs * (2 if has_src else 1),
-            out_specs=pl.BlockSpec(block, lambda i: (0, i)),
-            out_shape=jax.ShapeDtypeStruct(xp.shape, xp.dtype),
-            compiler_params=pltpu.CompilerParams(
-                dimension_semantics=("arbitrary",)),
-            interpret=interpret,
-        )(*operands)
-    elif variant == "revolving":
-        kern = functools.partial(_kernel_revolving, spec=spec, bx=bx, bt=bt,
-                                 true_h=true_h, true_w=true_w, n_tiles=nt,
-                                 has_src=has_src)
-        in_spec = pl.BlockSpec(block, lambda i: (0, jnp.minimum(i, nt - 1)))
-        scratch = [pltpu.VMEM((rows, 3 * bx), xp.dtype)]
-        if has_src:
-            scratch.append(pltpu.VMEM((rows, 3 * bx), xp.dtype))
-        out = pl.pallas_call(
-            kern,
-            grid=(nt + 1,),
-            in_specs=[in_spec] * (2 if has_src else 1),
-            out_specs=pl.BlockSpec(block, lambda i: (0, jnp.maximum(i - 1, 0))),
-            out_shape=jax.ShapeDtypeStruct(xp.shape, xp.dtype),
-            scratch_shapes=scratch,
-            compiler_params=pltpu.CompilerParams(
-                dimension_semantics=("arbitrary",)),
-            interpret=interpret,
-        )(*((xp, sp) if has_src else (xp,)))
-    else:
-        raise ValueError(f"unknown variant {variant!r}")
-    return out[:true_h, :true_w]
+    return engine.stencil_call(x, spec, bx=bx, bt=bt, variant=variant,
+                               interpret=interpret, source=source,
+                               apply_fn=_apply_star_2d)

@@ -1,36 +1,28 @@
-"""Pallas TPU kernel: 3D star stencil, 2.5D spatial blocking + z-streaming
-with plane-pipelined temporal blocking (thesis §5.3, fig. 5-6 b).
+"""3D star-stencil plugin for the unified engine (thesis §5.3, 3D).
 
-Mapping (DESIGN.md §4):
-  * x is blocked into ``bx``-wide tiles (overlap = bt*r via the 3-operand
-    window assembly, as in stencil2d);
-  * y is fully VMEM-resident per plane;
-  * z is *streamed*: the grid's inner dimension walks planes front-to-back
-    — the thesis's "2.5D blocking: block two spatial dims, stream the
-    last" (from Nguyen et al. 3.5D blocking, which the thesis builds on);
-  * temporal blocking is a pipeline of ``bt`` stages. Stage ``s`` holds a
-    rolling window of the last ``2r+1`` planes of the field after ``s+1``
-    time steps; at z-grid-step ``k`` it consumes the stage ``s-1`` window
-    and emits plane ``k - (s+1)*r``. This is exactly the FPGA pipeline in
-    which each temporal stage lags its producer by ``r`` planes of the
-    shift register.
+All blocking/streaming/pallas_call machinery lives in
+``repro.kernels.engine``; this module contributes only the 3D star
+update at a plane window's center (the per-plane arithmetic) and a
+thin public wrapper.
+
+TPU mapping notes (DESIGN.md §4): x is blocked into ``bx``-wide tiles,
+y is fully VMEM-resident per plane, and z is *streamed* front-to-back
+— the thesis's "2.5D blocking: block two spatial dims, stream the
+last" — with temporal blocking as a pipeline of ``bt`` plane stages
+(engine._kernel_3d_stream).
 
 Boundary semantics: Dirichlet zero on all six faces (see kernels/ref.py).
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.blocking import BlockPlan
 from repro.core.stencil import StencilSpec
+from repro.kernels import engine
 
 
-def _plane_update(window: jax.Array, spec: StencilSpec) -> jax.Array:
+def _apply_star_3d(window: jax.Array, spec: StencilSpec) -> jax.Array:
     """One time step at the window's center plane.
 
     window: [2r+1, rows, cols] — planes z-r .. z+r of the producer field.
@@ -62,113 +54,12 @@ def _plane_update(window: jax.Array, spec: StencilSpec) -> jax.Array:
     return acc
 
 
-def _kernel_3d(*refs, spec, bx, bt, true_d, true_h, true_w, n_tiles,
-               has_src):
-    if has_src:
-        (xl_ref, xc_ref, xr_ref, sl_ref, sc_ref, sr_ref, o_ref,
-         win_ref, src_ref) = refs
-    else:
-        xl_ref, xc_ref, xr_ref, o_ref, win_ref = refs
-    i = pl.program_id(0)       # x tile
-    k = pl.program_id(1)       # z pipeline step
-    r = spec.radius
-    halo = spec.halo(bt)
-    rows = xc_ref.shape[1]
-    width = bx + 2 * halo
-
-    @pl.when(k == 0)
-    def _init():
-        win_ref[...] = jnp.zeros_like(win_ref)
-        if has_src:
-            src_ref[...] = jnp.zeros_like(src_ref)
-
-    # ---- assemble the input plane window for z = k (stage-0 input) ----
-    cat = jnp.concatenate(
-        [xl_ref[0], xc_ref[0], xr_ref[0]], axis=1)
-    plane = cat[:, bx - halo: 2 * bx + halo]
-    col0 = i * bx - halo
-    cols = col0 + jax.lax.broadcasted_iota(jnp.int32, (rows, width), 1)
-    rr = jax.lax.broadcasted_iota(jnp.int32, (rows, width), 0)
-    xymask = (cols >= 0) & (cols < true_w) & (rr < true_h)
-    zero = jnp.zeros_like(plane)
-    plane = jnp.where(xymask & (k < true_d), plane, zero)
-
-    if has_src:
-        # Rolling source-plane buffer (Hotspot3D power): slot bt*r holds
-        # plane k; stage s reads its output plane's source at the
-        # *static* slot bt*r - (s+1)*r.
-        scat = jnp.concatenate([sl_ref[0], sc_ref[0], sr_ref[0]], axis=1)
-        splane = scat[:, bx - halo: 2 * bx + halo]
-        splane = jnp.where(xymask & (k < true_d), splane, zero)
-        for j in range(bt * r):
-            src_ref[j] = src_ref[j + 1]
-        src_ref[bt * r] = splane
-
-    # ---- pipeline: stage s consumes window[s], emits plane k-(s+1)*r ----
-    for s in range(bt):
-        # push the producer plane into stage s's rolling window
-        for j in range(2 * r):
-            win_ref[s, j] = win_ref[s, j + 1]
-        win_ref[s, 2 * r] = plane
-        z_out = k - (s + 1) * r
-        updated = _plane_update(win_ref[s], spec)
-        if has_src:
-            updated = updated + src_ref[bt * r - (s + 1) * r]
-        plane = jnp.where(xymask & (z_out >= 0) & (z_out < true_d),
-                          updated, zero)
-
-    o_ref[0] = plane[:, halo: halo + bx]
-
-
-@functools.partial(jax.jit,
-                   static_argnames=("spec", "bx", "bt", "interpret"))
 def stencil3d(x: jax.Array, spec: StencilSpec, bx: int = 128, bt: int = 1,
-              interpret: bool = True,
+              variant: str = "revolving", interpret: bool = True,
               source: jax.Array | None = None) -> jax.Array:
-    """Run ``bt`` fused time steps of ``spec`` over a [D, H, W] grid.
-
-    ``source``: optional same-shape per-step additive grid (Hotspot3D's
-    power input); each fused step computes ``g <- stencil(g) + source``.
-    """
+    """Run ``bt`` fused time steps of ``spec`` over a [D, H, W] grid."""
     if x.ndim != 3 or spec.dims != 3:
         raise ValueError("stencil3d needs a 3D grid and a 3D spec")
-    true_d, true_h, true_w = x.shape
-    plan = BlockPlan(spec, x.shape, bx=bx, bt=bt, itemsize=x.dtype.itemsize)
-    rows = plan.padded_rows
-    nt = plan.n_tiles
-    r = spec.radius
-    fill = bt * r
-    has_src = source is not None
-    pad3 = ((0, 0), (0, rows - true_h), (0, plan.padded_width - true_w))
-    xp = jnp.pad(x, pad3)
-    sp = jnp.pad(source.astype(x.dtype), pad3) if has_src else None
-    block = (1, rows, bx)
-
-    kern = functools.partial(_kernel_3d, spec=spec, bx=bx, bt=bt,
-                             true_d=true_d, true_h=true_h, true_w=true_w,
-                             n_tiles=nt, has_src=has_src)
-    tri_specs = [
-        pl.BlockSpec(block, lambda i, k: (
-            jnp.minimum(k, true_d - 1), 0, jnp.maximum(i - 1, 0))),
-        pl.BlockSpec(block, lambda i, k: (
-            jnp.minimum(k, true_d - 1), 0, i)),
-        pl.BlockSpec(block, lambda i, k: (
-            jnp.minimum(k, true_d - 1), 0, jnp.minimum(i + 1, nt - 1))),
-    ]
-    scratch = [pltpu.VMEM((bt, 2 * r + 1, rows, bx + 2 * bt * r), xp.dtype)]
-    if has_src:
-        scratch.append(
-            pltpu.VMEM((bt * r + 1, rows, bx + 2 * bt * r), xp.dtype))
-    out = pl.pallas_call(
-        kern,
-        grid=(nt, true_d + fill),
-        in_specs=tri_specs * (2 if has_src else 1),
-        out_specs=pl.BlockSpec(block, lambda i, k: (
-            jnp.maximum(k - fill, 0), 0, i)),
-        out_shape=jax.ShapeDtypeStruct(xp.shape, xp.dtype),
-        scratch_shapes=scratch,
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("arbitrary", "arbitrary")),
-        interpret=interpret,
-    )(*((xp, xp, xp, sp, sp, sp) if has_src else (xp, xp, xp)))
-    return out[:true_d, :true_h, :true_w]
+    return engine.stencil_call(x, spec, bx=bx, bt=bt, variant=variant,
+                               interpret=interpret, source=source,
+                               apply_fn=_apply_star_3d)

@@ -17,14 +17,22 @@ _DTYPE_BYTES = {
     "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
 }
 
-_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-                "collective-permute")
+# Longest spellings first so the alternation can't stop at a prefix
+# (e.g. "ragged-all-to-all" must not count as "all-to-all").
+_COLLECTIVES = ("ragged-all-to-all", "all-gather", "all-reduce",
+                "reduce-scatter", "all-to-all", "collective-permute",
+                "collective-broadcast")
 
 # e.g.  f32[16,512,128]{2,1,0}
 _SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+# Matches "<result-shape> <kind>[-start|-done](operands...". The result
+# shape is either one typed shape ("f32[16,128]{1,0}") or a tuple
+# ("(f32[...], u32[], token[])" — async -start ops and variadic
+# collectives). Current jax also dot-suffixes instruction names and may
+# wrap lines with metadata; we only require the "= shape kind(" core.
 _INSTR_RE = re.compile(
-    r"=\s*(?:\([^)]*\)|[a-z0-9_]+\[[^\]]*\][^ ]*)\s+"
-    r"(" + "|".join(_COLLECTIVES) + r")(?:-start|-done)?\((.*)$")
+    r"=\s*(?:\([^)]*\)|[a-z0-9_]+\[[^\]]*\]\S*)\s+"
+    r"(" + "|".join(_COLLECTIVES) + r")(-start|-done)?\((.*)$")
 
 
 def _shape_bytes(dtype: str, dims: str) -> int:
@@ -35,20 +43,29 @@ def _shape_bytes(dtype: str, dims: str) -> int:
     return n * _DTYPE_BYTES[dtype]
 
 
+def _match(line):
+    """(kind, operands) for a collective instruction; None for
+    non-collectives and for ``-done`` halves of async pairs (the
+    ``-start`` op already carries the full operand shapes)."""
+    m = _INSTR_RE.search(line)
+    if not m or m.group(2) == "-done":
+        return None
+    return m.group(1), m.group(3)
+
+
 def collective_bytes(hlo_text: str) -> Dict[str, int]:
     """Per-kind operand bytes of collectives in (partitioned) HLO text.
 
     Returns {kind: bytes, ..., "total": bytes}. Bytes are *per device*
-    (the partitioned module is the per-device program).
+    (the partitioned module is the per-device program). Async
+    start/done pairs are counted once, at the -start op.
     """
     out: Dict[str, int] = defaultdict(int)
     for line in hlo_text.splitlines():
-        m = _INSTR_RE.search(line)
-        if not m:
+        m = _match(line)
+        if m is None:
             continue
-        kind, operands = m.group(1), m.group(2)
-        if "-done" in line.split("=")[1][:80] and f"{kind}-done" in line:
-            continue  # async pair: count the -start only
+        kind, operands = m
         total = 0
         for sm in _SHAPE_RE.finditer(operands):
             total += _shape_bytes(sm.group(1), sm.group(2))
@@ -65,9 +82,9 @@ def collective_bytes(hlo_text: str) -> Dict[str, int]:
 def collective_counts(hlo_text: str) -> Dict[str, int]:
     out: Dict[str, int] = defaultdict(int)
     for line in hlo_text.splitlines():
-        m = _INSTR_RE.search(line)
-        if m and f"{m.group(1)}-done" not in line:
-            out[m.group(1)] += 1
+        m = _match(line)
+        if m is not None:
+            out[m[0]] += 1
     return dict(out)
 
 

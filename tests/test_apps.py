@@ -70,6 +70,14 @@ def test_pathfinder_variants_agree(rows, cols):
     np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
 
 
+def test_pathfinder_autotuned_block(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "at.json"))
+    w = pathfinder.random_problem(KEY, 60, 130)
+    a = pathfinder.pathfinder_reference(w)
+    c = pathfinder.pathfinder_blocked(w)   # planner-chosen pyramid height
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+
+
 def test_pathfinder_known_case():
     wall = jnp.asarray([[1, 9, 9],
                         [9, 1, 9],
@@ -86,6 +94,15 @@ def test_srad_fused_equals_multikernel():
     b = srad.srad_fused(img, 5)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                rtol=1e-5, atol=1e-6)
+
+
+def test_srad_blocked_equals_fused(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "at.json"))
+    img = srad.random_problem(KEY, 40, 50)
+    a = srad.srad_fused(img, 7)
+    b = srad.srad_blocked(img, 7)          # planner-chunked dispatch
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-6, atol=1e-7)
 
 
 def test_srad_smooths():

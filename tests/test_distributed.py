@@ -94,9 +94,10 @@ def test_compressed_psum_exactness_small_ints():
     _run("""
         import jax, numpy as np, jax.numpy as jnp, functools
         from jax.sharding import PartitionSpec as P
+        from repro import compat
         from repro.optim.compress import compressed_psum
         mesh = jax.make_mesh((4,), ("d",))
-        @functools.partial(jax.shard_map, mesh=mesh, in_specs=P("d"),
+        @functools.partial(compat.shard_map, mesh=mesh, in_specs=P("d"),
                            out_specs=P("d"), check_vma=False)
         def f(x):
             return compressed_psum(x, "d")
@@ -152,9 +153,10 @@ def test_collective_parsing_on_real_hlo():
     _run("""
         import jax, jax.numpy as jnp, functools
         from jax.sharding import PartitionSpec as P
+        from repro import compat
         from repro.launch import hlo_analysis as hlo
         mesh = jax.make_mesh((4,), ("d",))
-        @functools.partial(jax.shard_map, mesh=mesh, in_specs=P("d"),
+        @functools.partial(compat.shard_map, mesh=mesh, in_specs=P("d"),
                            out_specs=P(), check_vma=False)
         def f(x):
             return jax.lax.psum(x, "d")

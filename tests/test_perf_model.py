@@ -3,7 +3,10 @@ roofline adaptation (§5.4): algebraic properties the thesis derives.
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+pytest.importorskip(
+    "hypothesis",
+    reason="dev-only dependency — pip install -r requirements-dev.txt")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import perf_model as pm
 from repro.core import pipeline_model as pl

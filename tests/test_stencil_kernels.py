@@ -6,7 +6,12 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis",
+    reason="dev-only dependency — pip install -r requirements-dev.txt "
+           "(the non-hypothesis engine coverage lives in test_engine.py)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.blocking import BlockPlan, candidate_plans
 from repro.core.stencil import StencilSpec, diffusion, hotspot2d, hotspot3d

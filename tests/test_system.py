@@ -78,6 +78,33 @@ def test_collective_bytes_parser():
                       "reduce-scatter": 1, "collective-permute": 1}
 
 
+# Current-jax spellings: dotted instruction names, channel/replica-group
+# attrs, async -start/-done pairs (count once, at -start), and the
+# ragged all-to-all that must not be misparsed as plain all-to-all.
+HLO_SNIPPET_MODERN = """
+  ROOT %all-reduce.1 = f32[16,128]{1,0} all-reduce(f32[16,128]{1,0} %p), \
+channel_id=1, replica_groups={{0,1,2,3}}, use_global_device_ids=true
+  %ags.2 = (f32[4,512]{1,0}, f32[16,512]{1,0}) all-gather-start(\
+f32[4,512]{1,0} %x), dimensions={0}
+  %agd.3 = f32[16,512]{1,0} all-gather-done((f32[4,512]{1,0}, \
+f32[16,512]{1,0}) %ags.2)
+  %rag.4 = f32[8,64]{1,0} ragged-all-to-all(f32[8,64]{1,0} %y, \
+s32[4]{0} %os, s32[4]{0} %rs)
+"""
+
+
+def test_collective_bytes_parser_modern_spellings():
+    cb = hlo.collective_bytes(HLO_SNIPPET_MODERN)
+    assert cb["all-reduce"] == 16 * 128 * 4
+    # async pair counted once, from the -start op's input operand shapes
+    assert cb["all-gather"] == 4 * 512 * 4
+    assert cb["ragged-all-to-all"] == 8 * 64 * 4 + 2 * 4 * 4
+    assert "all-to-all" not in cb
+    counts = hlo.collective_counts(HLO_SNIPPET_MODERN)
+    assert counts == {"all-reduce": 1, "all-gather": 1,
+                      "ragged-all-to-all": 1}
+
+
 def _fake_cell(**over):
     cell = {
         "arch": "llama3.2-1b", "shape": "train_4k", "mesh": "single",
