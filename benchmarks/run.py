@@ -12,7 +12,7 @@ import argparse
 import sys
 import traceback
 
-SUITES = ("rodinia", "stencil", "model_accuracy", "projection")
+SUITES = ("rodinia", "stencil", "scaling", "model_accuracy", "projection")
 
 
 def main(argv=None):
@@ -38,6 +38,8 @@ def main(argv=None):
                 from benchmarks import rodinia as mod
             elif suite == "stencil":
                 from benchmarks import stencil_tables as mod
+            elif suite == "scaling":
+                from benchmarks import scaling as mod
             elif suite == "model_accuracy":
                 from benchmarks import model_accuracy as mod
             elif suite == "projection":

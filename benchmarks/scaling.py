@@ -1,0 +1,127 @@
+"""Weak/strong scaling of the deep-halo multi-device stencil runner.
+
+For each device count the §5.4 model (device-aware: halo-fits-shard
+pruning, collective term, slab-recompute factor — see
+``core.perf_model.select_config``) picks the best (bx, bt) and reports:
+
+  * **strong scaling** — fixed global grid split n ways: modeled
+    speedup over n=1 plus the modeled *exposed-communication fraction*
+    (how much of the halo ppermute the interior/edge overlap schedule
+    cannot hide, ``RooflineTerms.exposed_collective_fraction``);
+  * **weak scaling** — the per-device grid held constant while the
+    global grid grows with n: modeled parallel efficiency;
+  * **measured parity sweep** — when this host exposes more than one
+    device (e.g. ``XLA_FLAGS=--xla_force_host_platform_device_count``),
+    one small sharded sweep is actually executed and timed through
+    ``ops.stencil_run(..., n_devices=...)`` and checked against the
+    oracle, so the scaling table is anchored by at least one ground-
+    truth cell.
+
+Note how the tuner's chosen ``bt`` can *grow* with the device count:
+deeper halos are the price of exchanging less often once the collective
+term competes with HBM traffic — the central tradeoff of the deep-halo
+design (arXiv:2002.05983's multi-FPGA spatial blocking, here with
+temporal blocking preserved across the distribution boundary).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import perf_model as pm
+from repro.core.stencil import diffusion
+from repro.kernels import ops, ref
+
+GRID_2D = (8192, 8192)
+GRID_3D = (512, 512, 512)
+BASE_2D = (2048, 8192)      # weak scaling: per-device share at n=1
+BASE_3D = (128, 512, 512)
+N_STEPS = 64
+DEVICE_COUNTS = (1, 2, 4, 8, 16)
+
+
+def _modeled(spec, grid, n: int):
+    plan = pm.select_config(spec, grid, N_STEPS, top_k=1, n_devices=n)[0]
+    terms = pm.stencil_roofline(plan, N_STEPS, chips=n,
+                                halo_exchange=n > 1)
+    return plan, terms
+
+
+def _strong_rows() -> list[dict]:
+    rows = []
+    for dims, grid in ((2, GRID_2D), (3, GRID_3D)):
+        spec = diffusion(dims, 2)
+        base = None
+        for n in DEVICE_COUNTS:
+            plan, terms = _modeled(spec, grid, n)
+            t = terms.t_predicted
+            base = t if base is None else base
+            rows.append({
+                "name": f"strong{dims}d_n{n}",
+                "us": t * 1e6,
+                "derived": (f"bx={plan.bx} bt={plan.bt} "
+                            f"speedup={base / t:.2f}x "
+                            f"eff={base / t / n:.2f} "
+                            f"exposed_comm="
+                            f"{terms.exposed_collective_fraction:.3f} "
+                            f"bound={terms.dominant}"),
+            })
+    return rows
+
+
+def _weak_rows() -> list[dict]:
+    rows = []
+    for dims, base_grid in ((2, BASE_2D), (3, BASE_3D)):
+        spec = diffusion(dims, 2)
+        base = None
+        for n in DEVICE_COUNTS:
+            grid = (base_grid[0] * n,) + base_grid[1:]
+            plan, terms = _modeled(spec, grid, n)
+            t = terms.t_predicted
+            base = t if base is None else base
+            rows.append({
+                "name": f"weak{dims}d_n{n}",
+                "us": t * 1e6,
+                "derived": (f"bx={plan.bx} bt={plan.bt} "
+                            f"eff={base / t:.2f} "
+                            f"exposed_comm="
+                            f"{terms.exposed_collective_fraction:.3f} "
+                            f"bound={terms.dominant}"),
+            })
+    return rows
+
+
+def _measured_rows() -> list[dict]:
+    """One executed sharded cell when this host has > 1 device."""
+    n = len(jax.devices())
+    if n < 2:
+        return [{"name": "measured_sharded", "us": 0.0,
+                 "derived": "skipped: single-device host (set XLA_FLAGS="
+                            "--xla_force_host_platform_device_count=N)"}]
+    n = min(n, 4)
+    spec = diffusion(2, 2)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((64 * n + 3, 512)), jnp.float32)
+    run = lambda: ops.stencil_run(x, spec, 4, bx=256, bt=2,  # noqa: E731
+                                  backend="interpret",
+                                  n_devices=n).block_until_ready()
+    got = run()   # warm-up; also the parity check below
+    t0 = time.perf_counter()
+    run()
+    dt = time.perf_counter() - t0
+    err = float(jnp.max(jnp.abs(got - ref.stencil_multistep(x, spec, 4))))
+    return [{"name": f"measured_sharded_n{n}", "us": dt * 1e6,
+             "derived": f"grid={tuple(x.shape)} bt=2 maxerr={err:.1e}"}]
+
+
+def run() -> list[dict]:
+    return _strong_rows() + _weak_rows() + _measured_rows()
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r['name']},{r['us']:.1f},{r['derived']}")

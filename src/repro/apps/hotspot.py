@@ -70,16 +70,21 @@ def hotspot_reference(temp: jax.Array, power: jax.Array, n_steps: int,
 def hotspot_blocked(temp: jax.Array, power: jax.Array, n_steps: int,
                     bt: int | None = None, bx: int | None = None,
                     p: HotspotParams = HotspotParams(),
-                    backend: str = "auto") -> jax.Array:
+                    backend: str = "auto",
+                    n_devices: int | None = None) -> jax.Array:
     """Spatial+temporal-blocked Pallas port (ch.5 template + source).
 
     ``bt``/``bx`` default to the autotuner's choice
     (``kernels.autotune.plan``); pass explicit values to pin them.
+    ``n_devices > 1`` shards the temperature and power grids row-wise
+    over the deep-halo runner (``distributed/halo.py``); the tuner's
+    (bx, bt) choice then weighs halo depth against exchange frequency.
     """
     spec = spec_of(p)
     src = source_of(power, p)
     return ops.stencil_run(temp, spec, n_steps, bx=bx, bt=bt,
-                           backend=backend, source=src)
+                           backend=backend, source=src,
+                           n_devices=n_devices)
 
 
 def random_problem(key, h: int, w: int):

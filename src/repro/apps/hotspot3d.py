@@ -55,13 +55,18 @@ def hotspot3d_reference(temp: jax.Array, power: jax.Array, n_steps: int,
 def hotspot3d_blocked(temp: jax.Array, power: jax.Array, n_steps: int,
                       bt: int | None = None, bx: int | None = None,
                       p: Hotspot3DParams = Hotspot3DParams(),
-                      backend: str = "auto") -> jax.Array:
+                      backend: str = "auto",
+                      n_devices: int | None = None) -> jax.Array:
     """Blocked 2.5D port; ``bt``/``bx`` default to the autotuner's
-    choice (``kernels.autotune.plan``)."""
+    choice (``kernels.autotune.plan``). ``n_devices > 1`` shards the
+    grids along z over the deep-halo runner (``distributed/halo.py``) —
+    each device streams its own z-slab while depth-``r*bt`` plane halos
+    are exchanged once per fused block."""
     spec = spec_of(p)
     src = source_of(power, p)
     return ops.stencil_run(temp, spec, n_steps, bx=bx, bt=bt,
-                           backend=backend, source=src)
+                           backend=backend, source=src,
+                           n_devices=n_devices)
 
 
 def random_problem(key, d: int, h: int, w: int):

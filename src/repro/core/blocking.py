@@ -27,6 +27,18 @@ def round_up(x: int, m: int) -> int:
     return (x + m - 1) // m * m
 
 
+def shard_extent(extent: int, n_devices: int) -> int:
+    """Leading-axis slice owned per device when ``distributed/halo.py``
+    shards a grid ``n_devices`` ways (grid padded to ``n * S``).
+
+    The single source of the partition rule: the runner's bt clamp and
+    radius guard, ``perf_model.select_config``'s halo-fits-shard
+    pruning, and ``perf_model.stencil_roofline``'s slab-recompute
+    factor must all agree on it.
+    """
+    return math.ceil(extent / n_devices)
+
+
 @dataclasses.dataclass(frozen=True)
 class BlockPlan:
     """A fully-resolved blocking configuration for one stencil sweep."""
@@ -125,6 +137,22 @@ class BlockPlan:
         reads each tile once (amp=1).
         """
         return self.cells * self.itemsize * (read_amplification + 1.0)
+
+    @property
+    def leading(self) -> int:
+        """Extent of the leading axis — the one ``distributed/halo.py``
+        shards (y for 2D, z for 3D)."""
+        return self.grid_shape[0]
+
+    def halo_bytes_per_exchange(self) -> int:
+        """Bytes a device receives per sweep when the grid is sharded
+        along the leading axis: two ``halo``-deep boundary slices
+        (one per neighbor), each covering the full non-leading extent.
+        Grows with ``bt`` (deeper halos) while the number of exchanges
+        shrinks as ``ceil(n_steps / bt)`` — the tradeoff the
+        device-aware autotuner searches."""
+        per_slice = self.cells // self.leading
+        return 2 * self.halo * per_slice * self.itemsize
 
     def vmem_bytes(self) -> int:
         """Per-core VMEM working set of the Pallas kernel."""

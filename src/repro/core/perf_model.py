@@ -18,7 +18,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Iterable, Sequence
 
-from repro.core.blocking import BlockPlan, candidate_plans
+from repro.core.blocking import BlockPlan, candidate_plans, shard_extent
 from repro.core.stencil import StencilSpec
 
 
@@ -77,24 +77,44 @@ class RooflineTerms:
         return 0.0 if t == 0 else max(self.t_compute, self.t_memory) / t if (
             self.t_collective == t) else 1.0
 
+    @property
+    def exposed_collective_fraction(self) -> float:
+        """Modeled fraction of run time spent in *exposed* (un-hidden)
+        communication, assuming perfect overlap of collectives with the
+        local work (the halo runner's interior/edge schedule): only the
+        excess of t_collective over max(t_compute, t_memory) shows."""
+        t = self.t_predicted
+        if t == 0:
+            return 0.0
+        return max(0.0, self.t_collective
+                   - max(self.t_compute, self.t_memory)) / t
+
 
 def stencil_roofline(plan: BlockPlan, n_steps: int, tpu: TpuSpec = V5E,
                      chips: int = 1, read_amplification: float = 1.0,
                      halo_exchange: bool = False) -> RooflineTerms:
     """Roofline terms for running ``n_steps`` of a stencil under ``plan``.
 
-    ``halo_exchange``: when the grid is sharded over ``chips`` along y,
-    each sweep exchanges 2 * halo * width * itemsize bytes per chip
-    boundary — the collective term the thesis (single-FPGA) didn't need.
-    Stencils are VPU work on TPU, so the compute roof is vpu_flops_f32.
+    ``halo_exchange``: when the grid is sharded over ``chips`` along its
+    leading axis (``distributed/halo.py``), each sweep ppermutes two
+    ``halo``-deep boundary slices per device — the collective term the
+    thesis (single-FPGA) didn't need — and every device recomputes its
+    ``halo+shard+halo`` slab, scaling the local compute/HBM terms by
+    ``(S + 2*halo)/S``. Raising ``bt`` deepens the halos (more
+    redundancy) but cuts the number of exchanges — the tradeoff the
+    device-aware tuner resolves. Stencils are VPU work on TPU, so the
+    compute roof is vpu_flops_f32.
     """
     sweeps = plan.sweeps(n_steps)
     flops = plan.flops_per_sweep() * sweeps
     hbm = plan.hbm_bytes_per_sweep(read_amplification) * sweeps
     coll = 0.0
     if halo_exchange and chips > 1:
-        per_sweep = 2 * plan.halo * (plan.cells // plan.rows) * plan.itemsize
-        coll = per_sweep * sweeps  # per chip; both directions
+        shard = shard_extent(plan.leading, chips)
+        slab = (shard + 2 * plan.halo) / shard  # per-device recompute
+        flops *= slab
+        hbm *= slab
+        coll = plan.halo_bytes_per_exchange() * sweeps
     return RooflineTerms(
         t_compute=flops / (chips * tpu.vpu_flops_f32),
         t_memory=hbm / (chips * tpu.hbm_bw),
@@ -121,19 +141,43 @@ def predict_gflops(plan: BlockPlan, n_steps: int, tpu: TpuSpec = V5E,
 def select_config(spec: StencilSpec, grid_shape, n_steps: int,
                   tpu: TpuSpec = V5E, top_k: int = 3,
                   read_amplification: float = 1.0,
-                  vmem_budget: int | None = None) -> list[BlockPlan]:
+                  vmem_budget: int | None = None,
+                  n_devices: int = 1) -> list[BlockPlan]:
     """The §5.4 pruning step: rank all legal (bx, bt) by predicted time.
 
     Returns the ``top_k`` fastest plans; only these need be compiled and
     measured (the thesis: 'minimize the number of configurations that
-    need to be placed and routed').
+    need to be placed and routed'). With ``n_devices > 1`` the grid is
+    sharded along its leading axis: plans whose deep halo does not fit
+    one shard are illegal, and ranking includes the halo-exchange
+    collective term plus the per-device slab recompute.
     """
     budget = vmem_budget if vmem_budget is not None else tpu.vmem_bytes
-    plans = candidate_plans(spec, grid_shape, vmem_budget=budget)
+    if n_devices == 1:
+        plans = candidate_plans(spec, grid_shape, vmem_budget=budget)
+    else:
+        # Sharded: the VMEM working set is the per-device slab
+        # (shard + 2*halo of the leading axis), not the global grid,
+        # and the deep halo must fit inside one shard.
+        shard = shard_extent(grid_shape[0], n_devices)
+        plans = []
+        for p in candidate_plans(spec, grid_shape,
+                                 vmem_budget=float("inf")):
+            if p.halo > shard:
+                continue
+            slab_shape = (shard + 2 * p.halo,) + tuple(grid_shape[1:])
+            slab = BlockPlan(spec, slab_shape, bx=p.bx, bt=p.bt,
+                             itemsize=p.itemsize)
+            if slab.vmem_bytes() <= budget:
+                plans.append(p)
     if not plans:
-        raise ValueError("no legal plan fits VMEM")
+        raise ValueError("no legal plan fits VMEM"
+                         + (f" with its halo inside a {n_devices}-way shard"
+                            if n_devices > 1 else ""))
     plans.sort(key=lambda p: stencil_roofline(
-        p, n_steps, tpu, read_amplification=read_amplification).t_predicted)
+        p, n_steps, tpu, chips=n_devices,
+        read_amplification=read_amplification,
+        halo_exchange=n_devices > 1).t_predicted)
     return plans[:top_k]
 
 

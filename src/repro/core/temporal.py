@@ -4,7 +4,10 @@ Thin veneer over ``kernels.autotune`` (the §5.4 tuning flow):
 ``autotuned_run`` takes the model prior's top configuration and runs
 with it; ``tune_and_run`` additionally measures the shortlist (the
 thesis's "place and route only the shortlist" step) and keeps the
-empirically fastest.
+empirically fastest. Both grow a mesh path: pass ``n_devices > 1`` to
+tune for — and execute on — the deep-halo sharded runner
+(``distributed/halo.py``), where the search trades halo redundancy
+against exchange frequency.
 """
 from __future__ import annotations
 
@@ -21,27 +24,46 @@ from repro.kernels import autotune, ops
 
 def autotuned_run(x: jax.Array, spec: StencilSpec, n_steps: int,
                   tpu: TpuSpec = V5E, backend: str = "auto",
-                  vmem_budget: int | None = None) -> tuple[jax.Array, BlockPlan]:
-    """Pick the model-optimal plan and run n_steps with it."""
+                  vmem_budget: int | None = None,
+                  n_devices: int = 1) -> tuple[jax.Array, BlockPlan]:
+    """Pick the model-optimal plan and run n_steps with it.
+
+    This path deliberately bypasses the autotuner's disk cache
+    (``use_cache=False``): its contract is to return the *model
+    prior's* choice for the given ``(tpu, vmem_budget, n_devices)``,
+    deterministically. The cache only ever holds *measured* winners, so
+    reading it here would silently substitute a machine-history-
+    dependent answer for the model's — and since model-prior choices
+    are never persisted anyway, writing is moot. Use ``tune_and_run``
+    (or ``autotune.plan`` directly) when measured ground truth and
+    caching are wanted.
+    """
     tuned = autotune.plan(x.shape, spec, dtype=x.dtype, backend=backend,
                           n_steps=n_steps, top_k=1, measure=False,
                           use_cache=False, vmem_budget=vmem_budget,
-                          tpu=tpu)
+                          tpu=tpu, n_devices=n_devices)
     out = ops.stencil_run(x, spec, n_steps, bx=tuned.bx, bt=tuned.bt,
-                          backend=backend, variant=tuned.variant)
+                          backend=backend, variant=tuned.variant,
+                          n_devices=n_devices)
     return out, tuned.block_plan
 
 
 def tune_and_run(x: jax.Array, spec: StencilSpec, n_steps: int,
                  tpu: TpuSpec = V5E, backend: str = "auto", top_k: int = 3,
                  timer: Callable[[], float] = time.perf_counter,
-                 vmem_budget: int | None = None,
+                 vmem_budget: int | None = None, n_devices: int = 1,
                  ) -> tuple[jax.Array, BlockPlan, dict]:
-    """Model-shortlist then measure: returns (result, plan, timings)."""
+    """Model-shortlist then measure: returns (result, plan, timings).
+
+    Bypasses the disk cache (``use_cache=False``) so the shortlist is
+    always re-measured — this is the explicit "re-run the ground-truth
+    race" entry point; cached resolution belongs to ``autotune.plan``.
+    """
     tuned = autotune.plan(x.shape, spec, dtype=x.dtype, backend=backend,
                           n_steps=n_steps, top_k=top_k, measure=True,
                           use_cache=False, vmem_budget=vmem_budget,
-                          tpu=tpu, timer=timer)
+                          tpu=tpu, timer=timer, n_devices=n_devices)
     out = ops.stencil_run(x, spec, n_steps, bx=tuned.bx, bt=tuned.bt,
-                          backend=backend, variant=tuned.variant)
+                          backend=backend, variant=tuned.variant,
+                          n_devices=n_devices)
     return out, tuned.block_plan, tuned.timings

@@ -1,0 +1,225 @@
+"""Multi-device deep-halo stencil execution (shard_map + ppermute).
+
+The thesis's combined spatial+temporal blocking is single-device; this
+module is the scale-out step taken by the multi-FPGA follow-up work on
+high-order stencils (Zohouri et al., arXiv:2002.05983) and the
+structured-mesh solver designs of Kamalakkannan et al.
+(arXiv:2101.01177): partition the grid *spatially* across devices and
+exchange **deep halos** — depth ``r * bt`` — once per fused time block,
+so temporal blocking survives distribution.
+
+Scheme (one sweep = ``bt`` fused steps):
+
+    device i owns leading-axis slice [i*S, (i+1)*S) of the grid
+    (rows for 2D, z-planes for 3D; S = ceil(extent / n))
+
+         neighbor i-1                 neighbor i+1
+        ┌───────────┐                ┌───────────┐
+        │ bottom h  │ ──ppermute──▶  │   top h   │ ──ppermute──▶ ...
+        └───────────┘                └───────────┘
+              │          ┌────────────────┐          │
+              └────────▶ │ h │ shard S │ h│ ◀────────┘
+                         └────────────────┘
+                         run single-device engine on the slab
+                         (bt fused steps), crop the center S
+
+Exactness: the slab result equals the global result wherever the
+dependency cone (``bt`` steps x radius ``r`` = depth ``h``) stays inside
+the slab — precisely the cropped center. Grid edges and shard padding
+are handled by the engine's *leading-axis validity interval*
+(``valid_lo``/``valid_hi``): ghost rows outside the global grid are
+forced to zero at every fused step, which reproduces the Dirichlet-zero
+contract of ``kernels/ref.py`` bit-for-bit (up to float association),
+for any device count and any (shard-unaligned) grid size.
+
+Overlap: with ``overlap=True`` each sweep computes the shard *interior*
+(which needs no halo) on a slab that is ready immediately, while the
+ppermutes for the two edge strips are in flight — the async-collective
+pattern of ``distributed/overlap.py`` (XLA turns the early ppermutes
+into collective-permute-start/done pairs that run under the interior
+compute). The two ``3h``-deep edge strips are then finished from the
+arrived halos. Both schedules are numerically identical; tests assert
+it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro import compat
+from repro.core.blocking import shard_extent
+from repro.core.stencil import StencilSpec
+from repro.kernels import engine
+
+AXIS = "shard"
+
+
+def max_bt(spec: StencilSpec, extent: int, n_devices: int) -> int:
+    """Largest temporal degree whose halo fits one shard (h = r*bt <= S)."""
+    return max(1, shard_extent(extent, n_devices) // spec.radius)
+
+
+def _device_mesh(n_devices: int, devices=None) -> Mesh:
+    devs = list(devices) if devices is not None else jax.devices()
+    if len(devs) < n_devices:
+        raise ValueError(
+            f"n_devices={n_devices} but only {len(devs)} devices visible "
+            f"(hint: XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+    return Mesh(np.array(devs[:n_devices]), (AXIS,))
+
+
+def exchange_halos(xs: jax.Array, h: int, n: int, axis_name: str = AXIS):
+    """ppermute the ``h``-deep boundary slices to both neighbors.
+
+    Returns ``(from_above, from_below)``: the previous device's bottom
+    ``h`` slices and the next device's top ``h`` slices. Edge devices
+    receive zeros (ppermute's behavior for uncovered destinations) —
+    together with the engine's validity interval that IS the global
+    Dirichlet-zero boundary.
+    """
+    down = [(i, i + 1) for i in range(n - 1)]   # my bottom h -> next dev
+    up = [(i, i - 1) for i in range(1, n)]      # my top h    -> prev dev
+    from_above = jax.lax.ppermute(xs[-h:], axis_name, down)
+    from_below = jax.lax.ppermute(xs[:h], axis_name, up)
+    return from_above, from_below
+
+
+def _engine_call(slab, spec, bx, bts, variant, interpret, src, lo, hi):
+    return engine.stencil_call(slab, spec, bx=bx, bt=bts, variant=variant,
+                               interpret=interpret, source=src,
+                               valid_lo=lo, valid_hi=hi)
+
+
+def _sweep(xs, src_halos, spec, *, bx, bts, variant, interpret, idx, n, S,
+           extent, overlap, axis_name):
+    """One blocked sweep (``bts`` fused steps) on this device's shard."""
+    h = spec.halo(bts)
+    sa, sb, ss = src_halos            # source halos (pre-exchanged) + shard
+    row0 = idx * S                    # global coordinate of shard row 0
+
+    if not (overlap and S >= 2 * h):
+        fa, fb = exchange_halos(xs, h, n, axis_name)
+        slab = jnp.concatenate([fa, xs, fb], axis=0)
+        sslab = (jnp.concatenate([sa[-h:], ss, sb[:h]], axis=0)
+                 if ss is not None else None)
+        lo = jnp.clip(h - row0, 0, S + 2 * h)
+        hi = jnp.clip(extent - row0 + h, 0, S + 2 * h)
+        out = _engine_call(slab, spec, bx, bts, variant, interpret,
+                           sslab, lo, hi)
+        return out[h: h + S]
+
+    # Overlapped schedule: kick off the halo ppermutes, compute the
+    # interior (independent of them), then finish the two edge strips.
+    fa, fb = exchange_halos(xs, h, n, axis_name)
+    if S > 2 * h:      # interior rows [h, S-h) need no halo at all
+        hi_own = jnp.clip(extent - row0, 0, S)
+        interior = [_engine_call(xs, spec, bx, bts, variant, interpret,
+                                 ss, 0, hi_own)[h: S - h]]
+    else:              # S == 2h: the two edge strips cover the shard
+        interior = []
+    tslab = jnp.concatenate([fa, xs[: 2 * h]], axis=0)        # rows [-h, 2h)
+    bslab = jnp.concatenate([xs[-2 * h:], fb], axis=0)        # rows [S-2h, S+h)
+    ts = (jnp.concatenate([sa[-h:], ss[: 2 * h]], axis=0)
+          if ss is not None else None)
+    bs = (jnp.concatenate([ss[-2 * h:], sb[:h]], axis=0)
+          if ss is not None else None)
+    lo_t = jnp.clip(h - row0, 0, 3 * h)
+    hi_t = jnp.clip(extent - row0 + h, 0, 3 * h)
+    top = _engine_call(tslab, spec, bx, bts, variant, interpret,
+                       ts, lo_t, hi_t)[h: 2 * h]
+    lo_b = jnp.clip(2 * h - row0 - S, 0, 3 * h)
+    hi_b = jnp.clip(extent - row0 - S + 2 * h, 0, 3 * h)
+    bot = _engine_call(bslab, spec, bx, bts, variant, interpret,
+                       bs, lo_b, hi_b)[h: 2 * h]
+    return jnp.concatenate([top] + interior + [bot], axis=0)
+
+
+def stencil_run_sharded(x: jax.Array, spec: StencilSpec, n_steps: int, *,
+                        n_devices: int, bx: int = 256, bt: int = 1,
+                        variant: str = "revolving", interpret: bool = True,
+                        source: jax.Array | None = None, devices=None,
+                        overlap: bool = True,
+                        axis_name: str = AXIS) -> jax.Array:
+    """``n_steps`` stencil steps with the grid sharded over ``n_devices``.
+
+    Splits the leading axis over a 1D device mesh, exchanges depth-
+    ``r*bt`` halos once per ``bt``-step block, runs the single-device
+    engine on each ``halo+shard+halo`` slab and crops. Numerically
+    identical to ``kernels.ops.stencil_run`` on one device for any
+    ``bt`` (``bt`` is clamped so the halo fits one shard). The
+    ``source`` grid is step-constant, so its halos are exchanged once
+    per call, not once per sweep.
+    """
+    if x.ndim != spec.dims:
+        raise ValueError(f"grid rank {x.ndim} != spec.dims {spec.dims}")
+    if n_devices < 1:
+        raise ValueError(f"n_devices must be >= 1, got {n_devices}")
+    extent = x.shape[0]
+    n = n_devices
+    S = shard_extent(extent, n)
+    if spec.radius > S:
+        # Even bt=1 needs an r-deep halo; the boundary slices a shard
+        # sends its neighbors cannot be deeper than the shard itself.
+        # Silently continuing would mis-assemble the slabs, so refuse.
+        raise ValueError(
+            f"stencil radius {spec.radius} exceeds the {S}-deep shard a "
+            f"{n}-way split of the {extent}-deep leading axis leaves per "
+            f"device; reduce n_devices (<= {extent // spec.radius})")
+    bt = max(1, min(bt, n_steps or 1, max_bt(spec, extent, n)))
+    h_max = spec.halo(bt)
+    full, rem = divmod(n_steps, bt)
+    schedule = [bt] * full + ([rem] if rem else [])
+
+    pad = [(0, S * n - extent)] + [(0, 0)] * (x.ndim - 1)
+    xp = jnp.pad(x, pad)
+    args = (xp,)
+    if source is not None:
+        args += (jnp.pad(source.astype(x.dtype), pad),)
+
+    mesh = _device_mesh(n, devices)
+    runner = _sharded_runner(
+        spec, mesh, key=(spec, xp.shape, str(xp.dtype), bx,
+                         tuple(schedule), variant, interpret, n, S,
+                         extent, overlap, axis_name, source is not None,
+                         tuple(int(d.id) for d in np.asarray(
+                             mesh.devices).flat)),
+        h_max=h_max, schedule=schedule, bx=bx, variant=variant,
+        interpret=interpret, n=n, S=S, extent=extent, overlap=overlap,
+        axis_name=axis_name, n_args=len(args))
+    out = runner(*args)
+    return out[:extent]
+
+
+# jitted shard_map programs memoized per static configuration: without
+# this, every call (each autotuner timing repeat, every step block of a
+# caller's loop) would rebuild the closure and retrace from scratch.
+_RUNNERS: dict = {}
+
+
+def _sharded_runner(spec, mesh, *, key, h_max, schedule, bx, variant,
+                    interpret, n, S, extent, overlap, axis_name, n_args):
+    fn = _RUNNERS.get(key)
+    if fn is not None:
+        return fn
+
+    def body(xs, *rest):
+        idx = jax.lax.axis_index(axis_name)
+        ss = rest[0] if rest else None
+        if ss is not None:
+            sa, sb = exchange_halos(ss, h_max, n, axis_name)
+        else:
+            sa = sb = None
+        for bts in schedule:
+            xs = _sweep(xs, (sa, sb, ss), spec, bx=bx, bts=bts,
+                        variant=variant, interpret=interpret, idx=idx,
+                        n=n, S=S, extent=extent, overlap=overlap,
+                        axis_name=axis_name)
+        return xs
+
+    fn = jax.jit(compat.shard_map(
+        body, mesh=mesh, in_specs=(P(axis_name),) * n_args,
+        out_specs=P(axis_name), check_vma=False))
+    _RUNNERS[key] = fn
+    return fn

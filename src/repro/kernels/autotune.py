@@ -10,11 +10,21 @@ This is the thesis's §5.4 tuning flow made a first-class subsystem:
      empirically fastest per-time-step configuration wins (the thesis's
      "place and route only the shortlist, then measure");
   3. **cache** — *measured* winners persist on disk keyed by
-     ``(spec, shape, dtype, backend, vmem_budget, tpu)`` so the search
-     runs once per problem class per machine (``REPRO_AUTOTUNE_CACHE``
-     overrides the location; default ``~/.cache/repro/autotune.json``).
-     Model-prior choices are never persisted: they are cheap to
-     recompute and must not shadow a later forced measurement.
+     ``(spec, shape, dtype, backend, vmem_budget, tpu, n_devices)`` so
+     the search runs once per problem class per machine
+     (``REPRO_AUTOTUNE_CACHE`` overrides the location; default
+     ``~/.cache/repro/autotune.json``). Model-prior choices are never
+     persisted: they are cheap to recompute and must not shadow a later
+     forced measurement.
+
+The search is **device-count-aware**: with ``n_devices > 1`` the grid
+is sharded along its leading axis by ``distributed/halo.py``, so the
+shortlist drops plans whose deep halo (``r * bt``) exceeds one shard,
+the model ranks with the halo-exchange collective term and the
+per-device slab recompute factor, and measured candidates are timed
+through the sharded runner. Raising ``bt`` buys fewer exchanges at the
+price of deeper (more redundant) halos; the crossover moves with the
+device count, which is why ``n_devices`` is part of the cache key.
 
 ``plan(shape, spec)`` is the single entry point used by
 ``kernels.ops``, the Rodinia apps, and ``benchmarks/rodinia.py``.
@@ -36,7 +46,7 @@ from repro.core.blocking import BlockPlan
 from repro.core.perf_model import TpuSpec, V5E, select_config
 from repro.core.stencil import StencilSpec
 
-_CACHE_VERSION = 1
+_CACHE_VERSION = 2   # v2: cache keys grew the |nd{n_devices} suffix
 # Grids above this cell count are never timed on the host — the model
 # prior picks alone (measuring a 8192^2 interpret-mode sweep on CPU
 # would dwarf the run it is meant to speed up).
@@ -112,10 +122,10 @@ def clear_cache() -> None:
 
 
 def _key(spec: StencilSpec, shape, dtype: str, backend: str,
-         vmem_budget: int, tpu_name: str) -> str:
+         vmem_budget: int, tpu_name: str, n_devices: int = 1) -> str:
     sh = "x".join(str(s) for s in shape)
     return (f"{spec.name}|d{spec.dims}|r{spec.radius}|{sh}|{dtype}|"
-            f"{backend}|vm{vmem_budget}|{tpu_name}")
+            f"{backend}|vm{vmem_budget}|{tpu_name}|nd{n_devices}")
 
 
 # ---------------------------------------------------------------------------
@@ -130,18 +140,21 @@ def _variants_for(spec: StencilSpec, backend: str) -> tuple[str, ...]:
 
 
 def _measure(x, spec, plans, variants, backend, timer,
-             repeats: int = 2):
+             repeats: int = 2, n_devices: int = 1):
     """Time each (plan, variant); return (winner, winner_variant,
-    {(bx, bt): best seconds-per-step})."""
+    {(bx, bt): best seconds-per-step}). With ``n_devices > 1`` each
+    candidate is one sweep of the sharded deep-halo runner (collective
+    cost included); candidates that cannot run — e.g. too few visible
+    devices — just leave the race."""
     from repro.kernels import ops
     timings: Dict[Tuple[int, int], float] = {}
     best = (None, None, float("inf"))
     for p in plans:
         for v in variants:
             def run(p=p, v=v):
-                return ops.stencil_sweep(
-                    x, spec, bx=p.bx, bt=p.bt, backend=backend,
-                    variant=v).block_until_ready()
+                return ops.stencil_run(
+                    x, spec, p.bt, bx=p.bx, bt=p.bt, backend=backend,
+                    variant=v, n_devices=n_devices).block_until_ready()
             try:
                 run()  # warm-up / compile
             except Exception:   # noqa: BLE001 - an illegal candidate
@@ -163,6 +176,7 @@ def plan(shape, spec: StencilSpec, *, dtype="float32",
          backend: str = "auto", n_steps: int = 16, top_k: int = 3,
          measure: bool | None = None, use_cache: bool = True,
          vmem_budget: int | None = None, tpu: TpuSpec = V5E,
+         n_devices: int = 1,
          timer: Callable[[], float] = time.perf_counter) -> TunedPlan:
     """Resolve the best (bx, bt, variant) for one stencil problem.
 
@@ -172,13 +186,18 @@ def plan(shape, spec: StencilSpec, *, dtype="float32",
     wall-clock says nothing about the compiled kernel, so it defaults
     to the model prior. ``False`` takes the model prior's top choice;
     ``True`` forces measurement.
+
+    ``n_devices``: tune for the deep-halo sharded runner instead of a
+    single device — the shortlist keeps only plans whose halo fits one
+    shard, the model prior weighs halo redundancy against exchange
+    frequency, and measurement times the sharded path.
     """
     from repro.kernels import ops
     shape = tuple(int(s) for s in shape)
     dtype = str(jnp.dtype(dtype).name)
     backend = ops.resolve_backend(backend)
     budget = vmem_budget if vmem_budget is not None else tpu.vmem_bytes
-    key = _key(spec, shape, dtype, backend, budget, tpu.name)
+    key = _key(spec, shape, dtype, backend, budget, tpu.name, n_devices)
 
     def _mk(bx, bt, variant, source, timings=None):
         bp = BlockPlan(spec, shape, bx=bx, bt=bt,
@@ -197,7 +216,7 @@ def plan(shape, spec: StencilSpec, *, dtype="float32",
 
     shortlist = select_config(
         spec, shape, n_steps, tpu=tpu, top_k=top_k,
-        vmem_budget=vmem_budget)
+        vmem_budget=vmem_budget, n_devices=n_devices)
     variants = _variants_for(spec, backend)
 
     cells = 1
@@ -209,7 +228,8 @@ def plan(shape, spec: StencilSpec, *, dtype="float32",
     if do_measure:
         x = jnp.zeros(shape, jnp.dtype(dtype))
         winner, w_variant, timings = _measure(
-            x, spec, shortlist, variants, backend, timer)
+            x, spec, shortlist, variants, backend, timer,
+            n_devices=n_devices)
         if winner is not None:
             tuned = _mk(winner.bx, winner.bt, w_variant, "measured",
                         timings)

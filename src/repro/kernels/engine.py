@@ -20,7 +20,15 @@ dimension-*specific* arithmetic is injected as a plugin:
   * ``pallas_call`` assembly: grids, Block/scratch specs, compiler
     params (all experimental-jax symbols come through ``repro.compat``,
     per the README shim policy), padding to lane/sublane tiles and
-    cropping back.
+    cropping back;
+  * the *leading-axis validity interval*: every kernel receives a tiny
+    ``(1, 2)`` int32 operand ``[lo, hi)`` bounding the valid rows (2D)
+    or planes (3D) of the leading axis. Cells outside the interval are
+    forced to zero at *every* fused step — i.e. they behave exactly
+    like out-of-grid reads under the Dirichlet-zero contract. The
+    bounds may be traced scalars, which is what lets the multi-device
+    deep-halo runner (``distributed/halo.py``) mark per-device ghost
+    rows and shard padding as outside-grid under a single SPMD program.
 
 Plugins (see ``stencil2d._apply_star_2d`` / ``stencil3d._apply_star_3d``):
 
@@ -54,14 +62,18 @@ def variants_for(dims: int) -> tuple[str, ...]:
 # Shared in-kernel machinery
 # ---------------------------------------------------------------------------
 
-def window_mask(tile_idx, bx: int, halo: int, rows: int, true_h: int,
-                true_w: int):
-    """Valid-region mask for the [rows, bx + 2*halo] window of tile_idx."""
+def window_mask(tile_idx, bx: int, halo: int, rows: int, true_w: int,
+                row_lo, row_hi):
+    """Valid-region mask for the [rows, bx + 2*halo] window of tile_idx.
+
+    ``row_lo``/``row_hi`` bound the valid rows (possibly traced scalars);
+    rows outside [row_lo, row_hi) are treated as outside the grid.
+    """
     width = bx + 2 * halo
     col0 = tile_idx * bx - halo
     cols = col0 + jax.lax.broadcasted_iota(jnp.int32, (rows, width), 1)
     rr = jax.lax.broadcasted_iota(jnp.int32, (rows, width), 0)
-    return (cols >= 0) & (cols < true_w) & (rr < true_h)
+    return (cols >= 0) & (cols < true_w) & (rr >= row_lo) & (rr < row_hi)
 
 
 def fused_steps(win, mask, spec: StencilSpec, bt: int, apply_fn, src=None):
@@ -85,12 +97,13 @@ def fused_steps(win, mask, spec: StencilSpec, bt: int, apply_fn, src=None):
 # 2D kernel bodies
 # ---------------------------------------------------------------------------
 
-def _kernel_2d_multi(*refs, spec, bx, bt, true_h, true_w, has_src,
-                     apply_fn):
+def _kernel_2d_multi(*refs, spec, bx, bt, true_w, has_src, apply_fn):
     if has_src:
-        xl_ref, xc_ref, xr_ref, sl_ref, sc_ref, sr_ref, o_ref = refs
+        lim_ref, xl_ref, xc_ref, xr_ref, sl_ref, sc_ref, sr_ref, o_ref = refs
     else:
-        (xl_ref, xc_ref, xr_ref, o_ref), src = refs, None
+        lim_ref, xl_ref, xc_ref, xr_ref, o_ref = refs
+    src = None
+    row_lo, row_hi = lim_ref[0, 0], lim_ref[0, 1]
     i = pl.program_id(0)
     halo = spec.halo(bt)
     rows = xc_ref.shape[0]
@@ -100,17 +113,17 @@ def _kernel_2d_multi(*refs, spec, bx, bt, true_h, true_w, has_src,
         scat = jnp.concatenate([sl_ref[...], sc_ref[...], sr_ref[...]],
                                axis=1)
         src = scat[:, bx - halo: 2 * bx + halo]
-    mask = window_mask(i, bx, halo, rows, true_h, true_w)
+    mask = window_mask(i, bx, halo, rows, true_w, row_lo, row_hi)
     win = fused_steps(win, mask, spec, bt, apply_fn, src)
     o_ref[...] = win[:, halo: halo + bx]
 
 
-def _kernel_2d_revolving(*refs, spec, bx, bt, true_h, true_w, has_src,
-                         apply_fn):
+def _kernel_2d_revolving(*refs, spec, bx, bt, true_w, has_src, apply_fn):
     if has_src:
-        x_ref, s_ref, o_ref, buf_ref, sbuf_ref = refs
+        lim_ref, x_ref, s_ref, o_ref, buf_ref, sbuf_ref = refs
     else:
-        (x_ref, o_ref, buf_ref), s_ref, sbuf_ref = refs, None, None
+        (lim_ref, x_ref, o_ref, buf_ref), s_ref, sbuf_ref = refs, None, None
+    row_lo, row_hi = lim_ref[0, 0], lim_ref[0, 1]
     i = pl.program_id(0)
     halo = spec.halo(bt)
     rows = x_ref.shape[0]
@@ -132,7 +145,7 @@ def _kernel_2d_revolving(*refs, spec, bx, bt, true_h, true_w, has_src,
     col0 = i * bx
     cols = col0 + jax.lax.broadcasted_iota(jnp.int32, (rows, bx), 1)
     rr = jax.lax.broadcasted_iota(jnp.int32, (rows, bx), 0)
-    inb = (cols < true_w) & (rr < true_h)
+    inb = (cols < true_w) & (rr >= row_lo) & (rr < row_hi)
     buf_ref[:, 2 * bx:] = jnp.where(inb, x_ref[...], 0)
     if has_src:
         sbuf_ref[:, 2 * bx:] = jnp.where(inb, s_ref[...], 0)
@@ -140,7 +153,7 @@ def _kernel_2d_revolving(*refs, spec, bx, bt, true_h, true_w, has_src,
     # Compute output tile i-1 from the assembled window.
     win = buf_ref[:, bx - halo: 2 * bx + halo]
     src = sbuf_ref[:, bx - halo: 2 * bx + halo] if has_src else None
-    mask = window_mask(i - 1, bx, halo, rows, true_h, true_w)
+    mask = window_mask(i - 1, bx, halo, rows, true_w, row_lo, row_hi)
     win = fused_steps(win, mask, spec, bt, apply_fn, src)
     o_ref[...] = win[:, halo: halo + bx]
 
@@ -154,13 +167,14 @@ def _kernel_2d_revolving(*refs, spec, bx, bt, true_h, true_w, has_src,
 # planes (thesis §5.3, fig. 5-6 b).
 # ---------------------------------------------------------------------------
 
-def _kernel_3d_stream(*refs, spec, bx, bt, true_d, true_h, true_w,
-                      has_src, apply_fn):
+def _kernel_3d_stream(*refs, spec, bx, bt, true_h, true_w, has_src,
+                      apply_fn):
     if has_src:
-        (xl_ref, xc_ref, xr_ref, sl_ref, sc_ref, sr_ref, o_ref,
+        (lim_ref, xl_ref, xc_ref, xr_ref, sl_ref, sc_ref, sr_ref, o_ref,
          win_ref, src_ref) = refs
     else:
-        xl_ref, xc_ref, xr_ref, o_ref, win_ref = refs
+        lim_ref, xl_ref, xc_ref, xr_ref, o_ref, win_ref = refs
+    d_lo, d_hi = lim_ref[0, 0], lim_ref[0, 1]
     i = pl.program_id(0)       # x tile
     k = pl.program_id(1)       # z pipeline step
     r = spec.radius
@@ -176,9 +190,10 @@ def _kernel_3d_stream(*refs, spec, bx, bt, true_d, true_h, true_w,
     # ---- assemble the input plane window for z = k (stage-0 input) ----
     cat = jnp.concatenate([xl_ref[0], xc_ref[0], xr_ref[0]], axis=1)
     plane = cat[:, bx - halo: 2 * bx + halo]
-    xymask = window_mask(i, bx, halo, rows, true_h, true_w)
+    xymask = window_mask(i, bx, halo, rows, true_w, 0, true_h)
     zero = jnp.zeros_like(plane)
-    plane = jnp.where(xymask & (k < true_d), plane, zero)
+    zin = (k >= d_lo) & (k < d_hi)
+    plane = jnp.where(xymask & zin, plane, zero)
 
     if has_src:
         # Rolling source-plane buffer (Hotspot3D power): slot bt*r holds
@@ -186,7 +201,7 @@ def _kernel_3d_stream(*refs, spec, bx, bt, true_d, true_h, true_w,
         # *static* slot bt*r - (s+1)*r.
         scat = jnp.concatenate([sl_ref[0], sc_ref[0], sr_ref[0]], axis=1)
         splane = scat[:, bx - halo: 2 * bx + halo]
-        splane = jnp.where(xymask & (k < true_d), splane, zero)
+        splane = jnp.where(xymask & zin, splane, zero)
         for j in range(bt * r):
             src_ref[j] = src_ref[j + 1]
         src_ref[bt * r] = splane
@@ -201,7 +216,7 @@ def _kernel_3d_stream(*refs, spec, bx, bt, true_d, true_h, true_w,
         updated = apply_fn(win_ref[s], spec)
         if has_src:
             updated = updated + src_ref[bt * r - (s + 1) * r]
-        plane = jnp.where(xymask & (z_out >= 0) & (z_out < true_d),
+        plane = jnp.where(xymask & (z_out >= d_lo) & (z_out < d_hi),
                           updated, zero)
 
     o_ref[0] = plane[:, halo: halo + bx]
@@ -211,8 +226,16 @@ def _kernel_3d_stream(*refs, spec, bx, bt, true_d, true_h, true_w,
 # pallas_call assembly
 # ---------------------------------------------------------------------------
 
+def _limits(lo, hi, true_n: int) -> jax.Array:
+    """The (1, 2) int32 leading-axis validity operand [lo, hi)."""
+    lo = 0 if lo is None else lo
+    hi = true_n if hi is None else hi
+    return jnp.stack([jnp.asarray(lo, jnp.int32),
+                      jnp.asarray(hi, jnp.int32)]).reshape(1, 2)
+
+
 def _run_2d(x, spec, plan: BlockPlan, bx, bt, variant, interpret, source,
-            apply_fn):
+            apply_fn, valid_lo, valid_hi):
     true_h, true_w = x.shape
     hp, wp = plan.padded_rows, plan.padded_width
     xp = jnp.pad(x, ((0, hp - true_h), (0, wp - true_w)))
@@ -222,12 +245,14 @@ def _run_2d(x, spec, plan: BlockPlan, bx, bt, variant, interpret, source,
           if has_src else None)
     rows, nt = plan.padded_rows, plan.n_tiles
     block = (rows, bx)
+    lim = _limits(valid_lo, valid_hi, true_h)
+    lim_spec = pl.BlockSpec((1, 2), lambda i: (0, 0))
     params = tpu_compiler_params(dimension_semantics=("arbitrary",))
 
     if variant == "multioperand":
         kern = functools.partial(_kernel_2d_multi, spec=spec, bx=bx, bt=bt,
-                                 true_h=true_h, true_w=true_w,
-                                 has_src=has_src, apply_fn=apply_fn)
+                                 true_w=true_w, has_src=has_src,
+                                 apply_fn=apply_fn)
         tri_specs = [
             pl.BlockSpec(block, lambda i: (0, jnp.maximum(i - 1, 0))),
             pl.BlockSpec(block, lambda i: (0, i)),
@@ -236,16 +261,16 @@ def _run_2d(x, spec, plan: BlockPlan, bx, bt, variant, interpret, source,
         out = pl.pallas_call(
             kern,
             grid=(nt,),
-            in_specs=tri_specs * (2 if has_src else 1),
+            in_specs=[lim_spec] + tri_specs * (2 if has_src else 1),
             out_specs=pl.BlockSpec(block, lambda i: (0, i)),
             out_shape=jax.ShapeDtypeStruct(xp.shape, xp.dtype),
             compiler_params=params,
             interpret=interpret,
-        )(*((xp, xp, xp) + ((sp, sp, sp) if has_src else ())))
+        )(*((lim, xp, xp, xp) + ((sp, sp, sp) if has_src else ())))
     elif variant == "revolving":
         kern = functools.partial(_kernel_2d_revolving, spec=spec, bx=bx,
-                                 bt=bt, true_h=true_h, true_w=true_w,
-                                 has_src=has_src, apply_fn=apply_fn)
+                                 bt=bt, true_w=true_w, has_src=has_src,
+                                 apply_fn=apply_fn)
         in_spec = pl.BlockSpec(block, lambda i: (0, jnp.minimum(i, nt - 1)))
         scratch = [pltpu.VMEM((rows, 3 * bx), xp.dtype)]
         if has_src:
@@ -253,14 +278,14 @@ def _run_2d(x, spec, plan: BlockPlan, bx, bt, variant, interpret, source,
         out = pl.pallas_call(
             kern,
             grid=(nt + 1,),
-            in_specs=[in_spec] * (2 if has_src else 1),
+            in_specs=[lim_spec] + [in_spec] * (2 if has_src else 1),
             out_specs=pl.BlockSpec(block,
                                    lambda i: (0, jnp.maximum(i - 1, 0))),
             out_shape=jax.ShapeDtypeStruct(xp.shape, xp.dtype),
             scratch_shapes=scratch,
             compiler_params=params,
             interpret=interpret,
-        )(*((xp, sp) if has_src else (xp,)))
+        )(*((lim, xp, sp) if has_src else (lim, xp)))
     else:
         raise ValueError(f"unknown 2D variant {variant!r}; "
                          f"expected one of {VARIANTS_2D}")
@@ -268,7 +293,7 @@ def _run_2d(x, spec, plan: BlockPlan, bx, bt, variant, interpret, source,
 
 
 def _run_3d(x, spec, plan: BlockPlan, bx, bt, variant, interpret, source,
-            apply_fn):
+            apply_fn, valid_lo, valid_hi):
     if variant not in VARIANTS_3D:
         raise ValueError(f"unknown 3D variant {variant!r}; "
                          f"expected one of {VARIANTS_3D}")
@@ -280,9 +305,11 @@ def _run_3d(x, spec, plan: BlockPlan, bx, bt, variant, interpret, source,
     xp = jnp.pad(x, pad3)
     sp = jnp.pad(source.astype(x.dtype), pad3) if has_src else None
     block = (1, rows, bx)
+    lim = _limits(valid_lo, valid_hi, true_d)
+    lim_spec = pl.BlockSpec((1, 2), lambda i, k: (0, 0))
 
     kern = functools.partial(_kernel_3d_stream, spec=spec, bx=bx, bt=bt,
-                             true_d=true_d, true_h=true_h, true_w=true_w,
+                             true_h=true_h, true_w=true_w,
                              has_src=has_src, apply_fn=apply_fn)
     tri_specs = [
         pl.BlockSpec(block, lambda i, k: (
@@ -299,7 +326,7 @@ def _run_3d(x, spec, plan: BlockPlan, bx, bt, variant, interpret, source,
     out = pl.pallas_call(
         kern,
         grid=(nt, true_d + fill),
-        in_specs=tri_specs * (2 if has_src else 1),
+        in_specs=[lim_spec] + tri_specs * (2 if has_src else 1),
         out_specs=pl.BlockSpec(block, lambda i, k: (
             jnp.maximum(k - fill, 0), 0, i)),
         out_shape=jax.ShapeDtypeStruct(xp.shape, xp.dtype),
@@ -307,7 +334,7 @@ def _run_3d(x, spec, plan: BlockPlan, bx, bt, variant, interpret, source,
         compiler_params=tpu_compiler_params(
             dimension_semantics=("arbitrary", "arbitrary")),
         interpret=interpret,
-    )(*((xp, xp, xp, sp, sp, sp) if has_src else (xp, xp, xp)))
+    )(*((lim, xp, xp, xp, sp, sp, sp) if has_src else (lim, xp, xp, xp)))
     return out[:true_d, :true_h, :true_w]
 
 
@@ -317,13 +344,18 @@ def _run_3d(x, spec, plan: BlockPlan, bx, bt, variant, interpret, source,
 def stencil_call(x: jax.Array, spec: StencilSpec, *, bx: int, bt: int,
                  variant: str = "revolving", interpret: bool = True,
                  source: jax.Array | None = None,
-                 apply_fn=None) -> jax.Array:
+                 apply_fn=None, valid_lo=None, valid_hi=None) -> jax.Array:
     """Run ``bt`` fused time steps of ``spec`` over a 2D or 3D grid.
 
     ``source``: optional same-shape per-step additive grid (Hotspot's
     power input); each fused step computes ``g <- stencil(g) + source``.
     ``apply_fn``: the dimension-specific plugin (defaults to the star
     update of the matching stencil module).
+    ``valid_lo``/``valid_hi``: leading-axis validity interval [lo, hi)
+    — rows (2D) / planes (3D) outside it behave as outside the grid
+    (read as zero at every fused step). May be traced scalars; defaults
+    to the full extent. Used by ``distributed/halo.py`` to mark ghost
+    halos and shard padding under one SPMD program.
     """
     if x.ndim != spec.dims:
         raise ValueError(
@@ -333,8 +365,8 @@ def stencil_call(x: jax.Array, spec: StencilSpec, *, bx: int, bt: int,
         if apply_fn is None:
             from repro.kernels.stencil2d import _apply_star_2d as apply_fn
         return _run_2d(x, spec, plan, bx, bt, variant, interpret, source,
-                       apply_fn)
+                       apply_fn, valid_lo, valid_hi)
     if apply_fn is None:
         from repro.kernels.stencil3d import _apply_star_3d as apply_fn
     return _run_3d(x, spec, plan, bx, bt, variant, interpret, source,
-                   apply_fn)
+                   apply_fn, valid_lo, valid_hi)

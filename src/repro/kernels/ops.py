@@ -11,6 +11,13 @@ Backend dispatch:
 Blocking parameters: pass explicit ``bx``/``bt``/``variant``, or leave
 any of them ``None`` to have ``kernels.autotune.plan`` resolve it
 (model prior -> measured ground truth -> disk cache).
+
+Multi-device: pass ``n_devices > 1`` to run through the deep-halo
+sharded runner (``distributed/halo.py``) — the grid is split along its
+leading axis and depth-``r*bt`` halos are exchanged once per fused time
+block. The autotuner resolution becomes device-count-aware. The
+``reference`` backend ignores ``n_devices`` (the oracle is the
+single-device ground truth the sharded path is tested against).
 """
 from __future__ import annotations
 
@@ -36,7 +43,8 @@ def _resolve(backend: str) -> str:
 resolve_backend = _resolve
 
 
-def _resolve_blocking(x, spec, bx, bt, variant, backend, n_steps=None):
+def _resolve_blocking(x, spec, bx, bt, variant, backend, n_steps=None,
+                      n_devices=1):
     """Fill any None among (bx, bt, variant) from the autotuner.
 
     With ``bx`` and ``bt`` both explicit, no tuner runs and a None
@@ -47,6 +55,7 @@ def _resolve_blocking(x, spec, bx, bt, variant, backend, n_steps=None):
         return bx, bt, variant if variant is not None else "revolving"
     from repro.kernels import autotune
     tuned = autotune.plan(x.shape, spec, dtype=x.dtype, backend=backend,
+                          n_devices=n_devices,
                           **({} if n_steps is None
                              else {"n_steps": n_steps}))
     return (bx if bx is not None else tuned.bx,
@@ -75,16 +84,30 @@ def stencil_sweep(x: jax.Array, spec: StencilSpec, bx: int | None = 256,
 def stencil_run(x: jax.Array, spec: StencilSpec, n_steps: int,
                 bx: int | None = 256, bt: int | None = 1,
                 backend: str = "auto", variant: str | None = None,
-                source: jax.Array | None = None) -> jax.Array:
+                source: jax.Array | None = None,
+                n_devices: int | None = None, devices=None,
+                overlap: bool = True) -> jax.Array:
     """``n_steps`` total time steps as ceil(n/bt) blocked sweeps.
 
     The trailing partial sweep runs with the remainder temporal degree so
     the result is exactly ``n_steps`` applications of the stencil.
+
+    ``n_devices > 1`` routes the whole run through the deep-halo
+    sharded runner (one halo exchange per ``bt``-step block; see
+    ``distributed/halo.py``); ``overlap`` selects its interior/edge
+    schedule that hides the exchange under interior compute.
     """
     backend = _resolve(backend)
+    nd = 1 if n_devices is None else n_devices
     bx, bt, variant = _resolve_blocking(x, spec, bx, bt, variant, backend,
-                                        n_steps=n_steps)
+                                        n_steps=n_steps, n_devices=nd)
     bt = min(bt, n_steps) if n_steps else bt
+    if nd > 1 and backend != "reference":
+        from repro.distributed import halo
+        return halo.stencil_run_sharded(
+            x, spec, n_steps, n_devices=nd, bx=bx, bt=bt, variant=variant,
+            interpret=backend == "interpret", source=source,
+            devices=devices, overlap=overlap)
     full, rem = divmod(n_steps, bt)
     for _ in range(full):
         x = stencil_sweep(x, spec, bx=bx, bt=bt, backend=backend,
@@ -97,15 +120,16 @@ def stencil_run(x: jax.Array, spec: StencilSpec, n_steps: int,
 
 def stencil_auto(x: jax.Array, spec: StencilSpec, n_steps: int,
                  backend: str = "auto", source: jax.Array | None = None,
-                 **tune_kw):
+                 n_devices: int | None = None, **tune_kw):
     """Autotuned end-to-end run; returns (result, TunedPlan)."""
     from repro.kernels import autotune
     backend = _resolve(backend)
+    nd = 1 if n_devices is None else n_devices
     tuned = autotune.plan(x.shape, spec, dtype=x.dtype, backend=backend,
-                          n_steps=n_steps, **tune_kw)
+                          n_steps=n_steps, n_devices=nd, **tune_kw)
     out = stencil_run(x, spec, n_steps, bx=tuned.bx, bt=tuned.bt,
                       backend=backend, variant=tuned.variant,
-                      source=source)
+                      source=source, n_devices=nd)
     return out, tuned
 
 

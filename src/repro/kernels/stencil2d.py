@@ -1,15 +1,23 @@
 """2D star-stencil plugin for the unified engine (thesis ch.5, 2D).
 
-All blocking/variant/pallas_call machinery lives in
-``repro.kernels.engine``; this module contributes only the 2D star
-update (the per-window arithmetic) and a thin public wrapper.
+This module is a *plugin*, not an accelerator: all blocking, variant
+dispatch, masking, fused-time-step and ``pallas_call`` machinery lives
+in ``repro.kernels.engine``, which injects the dimension-specific
+arithmetic through its ``apply_fn`` hook. This module contributes
+exactly two things:
 
-TPU mapping notes (DESIGN.md §2/§4): spatial blocking is 1D in x with
-``bx``-column tiles and the full y extent VMEM-resident (the thesis
-streams y through a shift register one cell per cycle; the TPU VPU
-wants whole (8,128) tiles, so we hold the column panel instead);
-temporal blocking fuses ``bt`` steps per HBM pass, shrinking validity
-by ``r`` per step (overlapped blocking, thesis fig. 5-6 a).
+  * ``_apply_star_2d(win, spec) -> win`` — the engine's 2D plugin
+    contract: one stencil time step on a ``[rows, cols]`` window with
+    zero-padded edges (the per-window arithmetic and nothing else);
+  * ``stencil2d(...)`` — a thin public wrapper that calls
+    ``engine.stencil_call`` with that plugin bound.
+
+TPU mapping (see docs/architecture.md): spatial blocking is 1D in x
+with ``bx``-column tiles and the full y extent VMEM-resident (the
+thesis streams y through a shift register one cell per cycle; the TPU
+VPU wants whole (8,128) tiles, so the engine holds the column panel
+instead); temporal blocking fuses ``bt`` steps per HBM pass, shrinking
+validity by ``r`` per step (overlapped blocking, thesis fig. 5-6 a).
 
 Boundary semantics: Dirichlet zero (see kernels/ref.py).
 """

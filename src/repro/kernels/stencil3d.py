@@ -1,15 +1,23 @@
 """3D star-stencil plugin for the unified engine (thesis §5.3, 3D).
 
-All blocking/streaming/pallas_call machinery lives in
-``repro.kernels.engine``; this module contributes only the 3D star
-update at a plane window's center (the per-plane arithmetic) and a
-thin public wrapper.
+This module is a *plugin*, not an accelerator: all blocking, z
+streaming, masking and ``pallas_call`` machinery lives in
+``repro.kernels.engine``, which injects the dimension-specific
+arithmetic through its ``apply_fn`` hook. This module contributes
+exactly two things:
 
-TPU mapping notes (DESIGN.md §4): x is blocked into ``bx``-wide tiles,
-y is fully VMEM-resident per plane, and z is *streamed* front-to-back
-— the thesis's "2.5D blocking: block two spatial dims, stream the
-last" — with temporal blocking as a pipeline of ``bt`` plane stages
-(engine._kernel_3d_stream).
+  * ``_apply_star_3d(window, spec) -> plane`` — the engine's 3D plugin
+    contract: one stencil time step at the center plane of a
+    ``[2r+1, rows, cols]`` plane window (the per-plane arithmetic and
+    nothing else);
+  * ``stencil3d(...)`` — a thin public wrapper that calls
+    ``engine.stencil_call`` with that plugin bound.
+
+TPU mapping (see docs/architecture.md): x is blocked into ``bx``-wide
+tiles, y is fully VMEM-resident per plane, and z is *streamed*
+front-to-back — the thesis's "2.5D blocking: block two spatial dims,
+stream the last" — with temporal blocking as a pipeline of ``bt``
+plane stages (engine._kernel_3d_stream).
 
 Boundary semantics: Dirichlet zero on all six faces (see kernels/ref.py).
 """

@@ -1,0 +1,69 @@
+#!/usr/bin/env python3
+"""Markdown link checker for the docs subsystem (CI `docs` job).
+
+Scans ``README.md`` and ``docs/**/*.md`` for inline markdown links and
+images, and verifies that every *relative* target resolves to a file or
+directory in the repo. External schemes (http/https/mailto) are skipped
+— CI runs offline — and pure-fragment links (``#section``) are ignored;
+fragments on file targets are stripped before the existence check.
+
+Usage:  python tools/check_links.py [repo_root]
+Exit status: 0 = all links resolve; 1 = broken links (listed on stderr).
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+# Inline links/images: [text](target) / ![alt](target). Titles after the
+# target ("[x](y \"title\")") and surrounding whitespace are tolerated.
+_LINK = re.compile(r"!?\[[^\]]*\]\(\s*<?([^)>\s]+)>?(?:\s+\"[^\"]*\")?\s*\)")
+_SKIP = ("http://", "https://", "mailto:", "ftp://")
+
+
+def iter_md_files(root: pathlib.Path):
+    readme = root / "README.md"
+    if readme.exists():
+        yield readme
+    yield from sorted((root / "docs").rglob("*.md"))
+
+
+def check_file(path: pathlib.Path, root: pathlib.Path) -> list[str]:
+    broken = []
+    text = path.read_text(encoding="utf-8")
+    # Strip fenced code blocks: their bracket/paren runs are not links.
+    text = re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+    for m in _LINK.finditer(text):
+        target = m.group(1)
+        if target.startswith(_SKIP) or target.startswith("#"):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        resolved = (path.parent / rel).resolve()
+        if not resolved.exists():
+            broken.append(f"{path.relative_to(root)}: broken link "
+                          f"'{target}' -> {resolved}")
+    return broken
+
+
+def main(argv: list[str]) -> int:
+    root = pathlib.Path(argv[1]) if len(argv) > 1 else \
+        pathlib.Path(__file__).resolve().parent.parent
+    files = list(iter_md_files(root))
+    if not files:
+        print("check_links: no markdown files found", file=sys.stderr)
+        return 1
+    broken = []
+    for f in files:
+        broken += check_file(f, root)
+    for b in broken:
+        print(b, file=sys.stderr)
+    print(f"check_links: {len(files)} files, "
+          f"{len(broken)} broken link(s)")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))
