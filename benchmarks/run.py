@@ -1,18 +1,40 @@
 """Benchmark driver: one module per thesis table/figure.
 
   PYTHONPATH=src python -m benchmarks.run [--only rodinia,stencil,...]
+                                          [--json BENCH_stencil.json]
 
 Prints ``name,us_per_call,derived`` CSV per benchmark, plus (when the
 dry-run cache exists) the LM roofline summary that EXPERIMENTS.md
-§Roofline reads.
+§Roofline reads — and always writes a machine-readable JSON record
+(``BENCH_stencil.json`` by default) with, per row: the suite, the
+resolved blocking config, the best measured time and the modeled
+roofline (where the suite computes one). CI's smoke job parses that
+file, so benchmark code cannot silently rot.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
 
-SUITES = ("rodinia", "stencil", "scaling", "model_accuracy", "projection")
+SUITES = ("smoke", "rodinia", "stencil", "scaling", "model_accuracy",
+          "projection")
+
+
+def _json_row(suite: str, r: dict) -> dict:
+    """The machine-readable form of one benchmark row: suite, config,
+    best time, modeled roofline. Suites attach ``config``/``roofline``
+    when they resolve one (stencil_tables does); rows without them are
+    recorded with nulls so the schema stays uniform."""
+    return {
+        "suite": suite,
+        "name": r["name"],
+        "us_per_call": r["us"],
+        "config": r.get("config"),
+        "roofline": r.get("roofline"),
+        "derived": r["derived"],
+    }
 
 
 def main(argv=None):
@@ -22,6 +44,9 @@ def main(argv=None):
     ap.add_argument("--retune", action="store_true",
                     help="drop the stencil autotuner's on-disk cache so "
                          "every (bx, bt, variant) choice is re-searched")
+    ap.add_argument("--json", default="BENCH_stencil.json",
+                    help="path for the machine-readable record "
+                         "(default: %(default)s; empty string disables)")
     args = ap.parse_args(argv)
     picked = args.only.split(",") if args.only else list(SUITES)
 
@@ -31,10 +56,13 @@ def main(argv=None):
     print(f"# autotune cache: {autotune.cache_path()}", file=sys.stderr)
 
     failures = []
+    records = []
     print("name,us_per_call,derived")
     for suite in picked:
         try:
-            if suite == "rodinia":
+            if suite == "smoke":
+                from benchmarks import smoke as mod
+            elif suite == "rodinia":
                 from benchmarks import rodinia as mod
             elif suite == "stencil":
                 from benchmarks import stencil_tables as mod
@@ -48,6 +76,7 @@ def main(argv=None):
                 raise ValueError(f"unknown suite {suite}")
             for r in mod.run():
                 print(f"{r['name']},{r['us']:.1f},{r['derived']}")
+                records.append(_json_row(suite, r))
         except Exception:  # noqa: BLE001
             traceback.print_exc()
             failures.append(suite)
@@ -65,6 +94,15 @@ def main(argv=None):
                   f"{r['mfu_at_roofline']:.3f}")
     except Exception:  # noqa: BLE001
         print("roofline_cells,0,no dry-run cache yet", file=sys.stderr)
+
+    if args.json:
+        payload = {"generated_by": "benchmarks.run",
+                   "suites": picked, "failures": failures,
+                   "rows": records}
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+        print(f"# wrote {args.json} ({len(records)} rows)",
+              file=sys.stderr)
 
     if failures:
         print(f"FAILED suites: {failures}", file=sys.stderr)

@@ -1,0 +1,89 @@
+"""CI smoke suite: one tiny run per Rodinia app on the interpret
+backend, with a correctness assert per app.
+
+This exists so benchmark code cannot silently rot: every app's blocked
+tier executes end-to-end (through the same ``ops.stencil_run`` /
+engine path the real suites use) on problems small enough for CI, and
+a parity check fails loudly if a refactor breaks an app while the
+heavyweight suites aren't being run. Wall-clock numbers are reported
+but meaningless at these sizes — the *pass/fail* is the product.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.apps import hotspot, hotspot3d, lud, nw, pathfinder, problems, srad
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    jax.block_until_ready(out)
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def run() -> list[dict]:
+    rows = []
+
+    t, p = problems.hotspot(KEY, 16, 256)
+    want = hotspot.hotspot_reference(t, p, 3)
+    got, us = _timed(lambda: hotspot.hotspot_blocked(
+        t, p, 3, bt=2, bx=128, backend="interpret"))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
+    rows.append({"name": "smoke_hotspot", "us": us,
+                 "derived": "blocked==reference (16x256, 3 steps)"})
+
+    t3, p3 = problems.hotspot3d(KEY, 4, 8, 128)
+    want = hotspot3d.hotspot3d_reference(t3, p3, 2)
+    got, us = _timed(lambda: hotspot3d.hotspot3d_blocked(
+        t3, p3, 2, bt=2, bx=128, backend="interpret"))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
+    rows.append({"name": "smoke_hotspot3d", "us": us,
+                 "derived": "blocked==reference (4x8x128, 2 steps)"})
+
+    img = problems.srad(KEY, 16, 128)
+    want = srad.srad_fused(img, 2)
+    got, us = _timed(lambda: srad.srad_blocked(
+        img, 2, bt=1, bx=128, backend="interpret"))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+    rows.append({"name": "smoke_srad", "us": us,
+                 "derived": "IR engine==fused (16x128, 2 iters)"})
+
+    w = problems.pathfinder(KEY, 20, 64)
+    want = pathfinder.pathfinder_fused(w)
+    got, us = _timed(lambda: pathfinder.pathfinder_blocked(w, block=4))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    rows.append({"name": "smoke_pathfinder", "us": us,
+                 "derived": "blocked==fused (20x64)"})
+
+    m = problems.nw(KEY, 24)
+    want = nw.nw_reference(m, penalty=10)
+    got, us = _timed(lambda: nw.nw_wavefront(m, penalty=10))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    rows.append({"name": "smoke_nw", "us": us,
+                 "derived": "wavefront==reference (n=24)"})
+
+    a = problems.lud(KEY, 32)
+    want = lud.lud_unblocked(a)
+    got, us = _timed(lambda: lud.lud_blocked(a, bsize=16))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    rows.append({"name": "smoke_lud", "us": us,
+                 "derived": "blocked==unblocked (n=32)"})
+
+    assert jnp.isfinite(jnp.asarray([r["us"] for r in rows])).all()
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r['name']},{r['us']:.1f},{r['derived']}")

@@ -57,6 +57,14 @@ def run(validate: bool = True) -> list[dict]:
                 "gflops": gflop, "gcells": gcell,
                 "plan": (plan.bx, plan.bt),
                 "dominant": terms.dominant,
+                # machine-readable record for benchmarks/run.py --json
+                "config": {"bx": plan.bx, "bt": plan.bt,
+                           "redundancy": plan.redundancy},
+                "roofline": {"t_predicted_us": terms.t_predicted * 1e6,
+                             "gcells_per_s": gcell,
+                             "gflops_per_s": gflop,
+                             "dominant": terms.dominant,
+                             "max_abs_err_vs_oracle": err},
             })
     return rows
 

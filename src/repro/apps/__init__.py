@@ -1,6 +1,8 @@
 """Rodinia benchmark ports (thesis ch.4), each with the thesis's
 optimization ladder: a direct/reference port and the advanced rewrite.
 """
-from repro.apps import hotspot, hotspot3d, lud, nw, pathfinder, srad
+from repro.apps import (hotspot, hotspot3d, lud, nw, pathfinder, problems,
+                        srad)
 
-__all__ = ["hotspot", "hotspot3d", "lud", "nw", "pathfinder", "srad"]
+__all__ = ["hotspot", "hotspot3d", "lud", "nw", "pathfinder", "problems",
+           "srad"]

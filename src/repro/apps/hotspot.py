@@ -6,28 +6,28 @@ Update rule (Rodinia, simplified constants folded):
                            + (T[y-1,x]+T[y+1,x]-2T)/Ry
                            + (Tamb - T)/Rz + P[y,x] )
 
-which is an affine star stencil: a linear 5-point stencil plus a
-per-step additive source ``dt/Cap * (P + Tamb/Rz)``. Boundary handling:
-Rodinia clamps out-of-bound neighbors to the border cell; we use the
-ch.5 template's Dirichlet-zero convention on a grid padded by one cell
-of replicated border — numerically identical in the interior and
-self-consistent with the kernels' oracle.
+which in stencil-IR terms is a linear 5-point star with Rodinia's
+*clamp* boundary (out-of-bound neighbors read the border cell — the
+original hotspot.c indexing) plus the power grid as a ``source``-role
+aux operand added every step. Nothing here is a special case anymore:
+``spec_of`` declares the whole update and both tiers below consume it
+through the ordinary IR entry points.
 
-Three ports, mirroring the thesis's optimization ladder:
+Two ports, mirroring the thesis's optimization ladder:
   * ``hotspot_reference``  — one jitted sweep per time step through the
     pure-jnp oracle (one HBM round-trip per step — the *None/Basic* tier);
   * ``hotspot_blocked``    — the ch.5 accelerator: Pallas kernel with
-    spatial (1D-x) + temporal (bt) blocking and the power grid as the
-    kernel's source operand (the *Advanced* tier).
+    spatial (1D-x) + temporal (bt) blocking through ``ops.stencil_run``
+    (the *Advanced* tier).
 """
 from __future__ import annotations
 
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 
-from repro.core.stencil import StencilSpec
+from repro.apps import problems
+from repro.core.stencil import AuxOperand, StencilSpec
 from repro.kernels import ops, ref
 
 
@@ -43,6 +43,8 @@ class HotspotParams:
 
 
 def spec_of(p: HotspotParams) -> StencilSpec:
+    """The full Hotspot update as a stencil-IR spec: clamp-boundary
+    5-point star + the power term as a source operand."""
     cx = p.dt / (p.cap * p.rx)
     cy = p.dt / (p.cap * p.ry)
     cz = p.dt / (p.cap * p.rz)
@@ -50,6 +52,8 @@ def spec_of(p: HotspotParams) -> StencilSpec:
     aw = ((cy, 0.0, cy),     # y axis
           (cx, 0.0, cx))     # x axis
     return StencilSpec(dims=2, radius=1, center=center, axis_weights=aw,
+                       boundary="clamp",
+                       aux=(AuxOperand("power", role="source"),),
                        name="hotspot2d")
 
 
@@ -61,9 +65,9 @@ def hotspot_reference(temp: jax.Array, power: jax.Array, n_steps: int,
                       p: HotspotParams = HotspotParams()) -> jax.Array:
     """One oracle sweep per step (per-step HBM round trip)."""
     spec = spec_of(p)
-    src = source_of(power, p)
+    aux = {"power": source_of(power, p)}
     for _ in range(n_steps):
-        temp = ref.stencil_multistep(temp, spec, 1, src)
+        temp = ref.stencil_multistep(temp, spec, 1, aux=aux)
     return temp
 
 
@@ -72,23 +76,21 @@ def hotspot_blocked(temp: jax.Array, power: jax.Array, n_steps: int,
                     p: HotspotParams = HotspotParams(),
                     backend: str = "auto",
                     n_devices: int | None = None) -> jax.Array:
-    """Spatial+temporal-blocked Pallas port (ch.5 template + source).
+    """Spatial+temporal-blocked port through the unified engine.
 
     ``bt``/``bx`` default to the autotuner's choice
     (``kernels.autotune.plan``); pass explicit values to pin them.
     ``n_devices > 1`` shards the temperature and power grids row-wise
     over the deep-halo runner (``distributed/halo.py``); the tuner's
     (bx, bt) choice then weighs halo depth against exchange frequency.
+    Clamp boundaries apply at true grid edges only — shard-interior
+    edges keep exchanging ghost rows.
     """
     spec = spec_of(p)
-    src = source_of(power, p)
     return ops.stencil_run(temp, spec, n_steps, bx=bx, bt=bt,
-                           backend=backend, source=src,
+                           backend=backend,
+                           aux={"power": source_of(power, p)},
                            n_devices=n_devices)
 
 
-def random_problem(key, h: int, w: int):
-    k1, k2 = jax.random.split(key)
-    temp = 70.0 + 10.0 * jax.random.uniform(k1, (h, w), jnp.float32)
-    power = 0.1 * jax.random.uniform(k2, (h, w), jnp.float32)
-    return temp, power
+random_problem = problems.hotspot

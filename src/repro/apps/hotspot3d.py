@@ -1,19 +1,20 @@
 """Rodinia Hotspot3D — 3D thermal simulation (thesis §4.3.1.3).
 
-First-order 7-point affine stencil + per-step power source; same
-structure as apps/hotspot.py lifted to 3D. The blocked port exercises
-the ch.5 3D accelerator: 2.5D spatial blocking (block x, resident y,
-streamed z) with plane-pipelined temporal blocking and the rolling
-source-plane buffer.
+First-order 7-point star with Rodinia's clamp boundary + the per-step
+power source as a ``source``-role aux operand; the same IR shape as
+``apps/hotspot.py`` lifted to 3D. The blocked port exercises the ch.5
+3D accelerator: 2.5D spatial blocking (block x, resident y, streamed z)
+with plane-pipelined temporal blocking and the rolling source-plane
+buffer — all driven by the spec, no app-local kernel code.
 """
 from __future__ import annotations
 
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 
-from repro.core.stencil import StencilSpec
+from repro.apps import problems
+from repro.core.stencil import AuxOperand, StencilSpec
 from repro.kernels import ops, ref
 
 
@@ -36,6 +37,8 @@ def spec_of(p: Hotspot3DParams) -> StencilSpec:
           (cy, 0.0, cy),     # y axis
           (cx, 0.0, cx))     # x axis
     return StencilSpec(dims=3, radius=1, center=center, axis_weights=aw,
+                       boundary="clamp",
+                       aux=(AuxOperand("power", role="source"),),
                        name="hotspot3d")
 
 
@@ -46,9 +49,9 @@ def source_of(power: jax.Array, p: Hotspot3DParams) -> jax.Array:
 def hotspot3d_reference(temp: jax.Array, power: jax.Array, n_steps: int,
                         p: Hotspot3DParams = Hotspot3DParams()) -> jax.Array:
     spec = spec_of(p)
-    src = source_of(power, p)
+    aux = {"power": source_of(power, p)}
     for _ in range(n_steps):
-        temp = ref.stencil_multistep(temp, spec, 1, src)
+        temp = ref.stencil_multistep(temp, spec, 1, aux=aux)
     return temp
 
 
@@ -61,16 +64,13 @@ def hotspot3d_blocked(temp: jax.Array, power: jax.Array, n_steps: int,
     choice (``kernels.autotune.plan``). ``n_devices > 1`` shards the
     grids along z over the deep-halo runner (``distributed/halo.py``) —
     each device streams its own z-slab while depth-``r*bt`` plane halos
-    are exchanged once per fused block."""
+    are exchanged once per fused block; clamp boundaries apply at the
+    volume's true faces only."""
     spec = spec_of(p)
-    src = source_of(power, p)
     return ops.stencil_run(temp, spec, n_steps, bx=bx, bt=bt,
-                           backend=backend, source=src,
+                           backend=backend,
+                           aux={"power": source_of(power, p)},
                            n_devices=n_devices)
 
 
-def random_problem(key, d: int, h: int, w: int):
-    k1, k2 = jax.random.split(key)
-    temp = 70.0 + 10.0 * jax.random.uniform(k1, (d, h, w), jnp.float32)
-    power = 0.1 * jax.random.uniform(k2, (d, h, w), jnp.float32)
-    return temp, power
+random_problem = problems.hotspot3d

@@ -24,6 +24,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.apps import problems
+
 
 @jax.jit
 def lud_unblocked(a: jax.Array) -> jax.Array:
@@ -100,7 +102,4 @@ def unpack(lu: jax.Array):
     return l, u
 
 
-def random_problem(key, n: int):
-    """Diagonally dominant SPD-ish matrix (no-pivoting safe)."""
-    a = jax.random.uniform(key, (n, n), jnp.float32)
-    return a + n * jnp.eye(n, dtype=jnp.float32)
+random_problem = problems.lud

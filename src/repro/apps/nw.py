@@ -23,6 +23,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.apps import problems
+
 
 def _init_scores(n: int, penalty: int, dtype=jnp.int32):
     """Boundary scores: M[i,0] = -i*p, M[0,j] = -j*p."""
@@ -117,6 +119,4 @@ def nw_wavefront(ref_mat: jax.Array, penalty: int = 10) -> jax.Array:
     return out
 
 
-def random_problem(key, n: int):
-    """Random substitution matrix like Rodinia's (ints in [-10, 10])."""
-    return jax.random.randint(key, (n, n), -10, 11, jnp.int32)
+random_problem = problems.nw

@@ -20,6 +20,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.apps import problems
+
 _BIG = jnp.asarray(2 ** 30, jnp.int32)
 
 
@@ -100,5 +102,4 @@ def _pathfinder_blocked(wall: jax.Array, block: int) -> jax.Array:
     return cost
 
 
-def random_problem(key, rows: int, cols: int):
-    return jax.random.randint(key, (rows, cols), 0, 10, jnp.int32)
+random_problem = problems.pathfinder

@@ -1,0 +1,49 @@
+"""Shared random problem generators for the Rodinia apps.
+
+One definition per benchmark input distribution, used by the app
+modules (which re-export them as ``random_problem`` for back-compat),
+the test suite and ``benchmarks/``. Keeping them in one place means a
+distribution tweak (e.g. SRAD's positivity constraint) cannot drift
+between what tests validate and what benchmarks time.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def hotspot(key, h: int, w: int):
+    """Rodinia Hotspot: (temperature, power) grids at hotspot.c's scale."""
+    k1, k2 = jax.random.split(key)
+    temp = 70.0 + 10.0 * jax.random.uniform(k1, (h, w), jnp.float32)
+    power = 0.1 * jax.random.uniform(k2, (h, w), jnp.float32)
+    return temp, power
+
+
+def hotspot3d(key, d: int, h: int, w: int):
+    """Rodinia Hotspot3D: (temperature, power) volumes."""
+    k1, k2 = jax.random.split(key)
+    temp = 70.0 + 10.0 * jax.random.uniform(k1, (d, h, w), jnp.float32)
+    power = 0.1 * jax.random.uniform(k2, (d, h, w), jnp.float32)
+    return temp, power
+
+
+def srad(key, h: int, w: int):
+    """Positive image (SRAD divides by J), like Rodinia's exp(img)."""
+    return jnp.exp(jax.random.normal(key, (h, w), jnp.float32) * 0.1)
+
+
+def pathfinder(key, rows: int, cols: int):
+    """Random wall costs (ints in [0, 10))."""
+    return jax.random.randint(key, (rows, cols), 0, 10, jnp.int32)
+
+
+def nw(key, n: int):
+    """Random substitution matrix like Rodinia's (ints in [-10, 10])."""
+    return jax.random.randint(key, (n, n), -10, 11, jnp.int32)
+
+
+def lud(key, n: int):
+    """Diagonally dominant SPD-ish matrix (no-pivoting safe)."""
+    a = jax.random.uniform(key, (n, n), jnp.float32)
+    return a + n * jnp.eye(n, dtype=jnp.float32)

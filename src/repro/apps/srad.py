@@ -15,7 +15,25 @@ Ports mirror the thesis's ladder:
     redundant global traffic);
   * ``srad_fused``      — the thesis's advanced rewrite: one jitted
     kernel per iteration; reduction + both passes fused, no
-    intermediate HBM traffic, ``lax.fori_loop`` over iterations.
+    intermediate HBM traffic, ``lax.fori_loop`` over iterations;
+  * ``srad_blocked``    — the IR lowering: pass 1 + pass 2 fused into
+    ONE radius-2, clamp-boundary stencil-IR step (``srad_spec``) run
+    through ``ops.stencil_run`` — the same engine/autotuner/halo stack
+    as every other stencil. No SRAD-local Pallas or boundary code
+    remains: clamped neighbor reads are the IR's ``shift(...,
+    "clamp")`` taps and the engine owns all windowing/boundary fill.
+
+Why one engine step per iteration: each iteration *starts* with a
+global reduction (q0^2 over the whole of J), so iterations cannot fuse
+inside a blocked kernel — no window can know the next step's global
+variance. ``srad_blocked`` therefore computes q0^2 between sweeps
+(cheap, jnp) and feeds it to the engine as the IR's per-step scalar;
+the temporal-fusion win is that the two stencil passes and their five
+intermediate grids (c, dN, dS, dW, dE) never touch HBM. A ``bt``
+deeper than one engine sweep is accepted and clamped per-call (results
+are exact for any requested ``bt``); ``n_devices > 1`` shards each
+sweep through the deep-halo runner with the q0 reduction staying on
+the replicated global image.
 """
 from __future__ import annotations
 
@@ -24,19 +42,23 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.apps import problems
+from repro.core.stencil import StencilSpec, shift
+from repro.kernels import ops
 
-def _clamped_shift(x, axis, off):
-    """Replicate-boundary neighbor fetch (Rodinia's clamped indices)."""
-    n = x.shape[axis]
-    idx = jnp.clip(jnp.arange(n) + off, 0, n - 1)
-    return jnp.take(x, idx, axis=axis)
+
+def _clamp_shift(x, axis, off):
+    """Replicate-boundary neighbor fetch (Rodinia's clamped indices) —
+    the IR's clamp tap; at true grid edges the engine pre-fills windows
+    so this is exact there, and the oracle applies it to the full grid."""
+    return shift(x, axis, off, "clamp")
 
 
 def _pass1(j_img, q0sqr):
-    dn = _clamped_shift(j_img, 0, -1) - j_img
-    ds = _clamped_shift(j_img, 0, 1) - j_img
-    dw = _clamped_shift(j_img, 1, -1) - j_img
-    de = _clamped_shift(j_img, 1, 1) - j_img
+    dn = _clamp_shift(j_img, 0, -1) - j_img
+    ds = _clamp_shift(j_img, 0, 1) - j_img
+    dw = _clamp_shift(j_img, 1, -1) - j_img
+    de = _clamp_shift(j_img, 1, 1) - j_img
     g2 = (dn * dn + ds * ds + dw * dw + de * de) / (j_img * j_img)
     l_ = (dn + ds + dw + de) / j_img
     num = 0.5 * g2 - (1.0 / 16.0) * l_ * l_
@@ -48,8 +70,8 @@ def _pass1(j_img, q0sqr):
 
 
 def _pass2(j_img, c, dn, ds, dw, de, lam):
-    cs = _clamped_shift(c, 0, 1)     # south neighbor's coefficient
-    ce = _clamped_shift(c, 1, 1)     # east neighbor's coefficient
+    cs = _clamp_shift(c, 0, 1)     # south neighbor's coefficient
+    ce = _clamp_shift(c, 1, 1)     # east neighbor's coefficient
     div = c * dn + cs * ds + c * dw + ce * de
     return j_img + 0.25 * lam * div
 
@@ -88,42 +110,58 @@ def srad_fused(j_img: jax.Array, n_iter: int, lam: float = 0.5) -> jax.Array:
     return jax.lax.fori_loop(0, n_iter, body, j_img)
 
 
-# --- blocked ("planner-chunked") tier ---------------------------------------
+# --- IR-lowered ("unified engine") tier -------------------------------------
 
-# Planning proxy for the autotuner: SRAD's two passes are radius-1
-# 5-point stencils over J; the planner's temporal degree bounds how many
-# iterations fuse into one dispatched kernel (the pyramid/chunk choice).
-# Results are bit-identical to ``srad_fused`` — fori_loop composition is
-# exact — the knob trades dispatch count against compiled-loop length.
-def _plan_spec():
-    from repro.core.stencil import StencilSpec
-    return StencilSpec(dims=2, radius=1, center=1.0,
-                       axis_weights=((0.25, 0.0, 0.25),
-                                     (0.25, 0.0, 0.25)),
-                       name="srad5pt")
+def _srad_update(fields, spec):
+    """One full SRAD iteration (pass 1 + pass 2) as an IR custom update.
+
+    Runs on whatever field the caller hands it: the oracle's full grid
+    or one of the engine's windows. The dependency cone is radius 2
+    (pass 2 taps c at S/E, and c taps J at radius 1), matching
+    ``srad_spec``'s declared radius. Scalars: [q0^2, lambda].
+    """
+    j_img = fields["x"]
+    q0sqr, lam = fields["scalars"][0], fields["scalars"][1]
+    c, dn, ds, dw, de = _pass1(j_img, q0sqr)
+    return _pass2(j_img, c, dn, ds, dw, de, lam)
 
 
-def planned_chunk(j_img: jax.Array) -> int:
-    """The autotuner's iteration-chunk size for this image: the
-    planner's temporal degree ``bt`` (kernels.autotune.plan)."""
-    from repro.kernels import autotune
-    return autotune.plan(j_img.shape, _plan_spec(), dtype=j_img.dtype,
-                         backend="reference", measure=False).bt
+def srad_spec() -> StencilSpec:
+    """The SRAD iteration as a stencil-IR spec: radius-2 clamp-boundary
+    custom update with per-step scalars (q0^2, lambda)."""
+    return StencilSpec(dims=2, radius=2, boundary="clamp",
+                       update=_srad_update, n_scalars=2, name="srad_iter")
 
 
 def srad_blocked(j_img: jax.Array, n_iter: int, lam: float = 0.5,
-                 chunk: int | None = None) -> jax.Array:
-    """Fused SRAD dispatched in autotuned temporal chunks."""
-    if chunk is None:
-        chunk = planned_chunk(j_img)
-    done = 0
-    while done < n_iter:
-        step = min(chunk, n_iter - done)
-        j_img = srad_fused(j_img, step, lam)
-        done += step
+                 bt: int | None = None, bx: int | None = None,
+                 backend: str = "auto",
+                 n_devices: int | None = None) -> jax.Array:
+    """SRAD through the unified engine: one blocked sweep per iteration.
+
+    ``bx``/``bt`` default to the autotuner's choice; any requested
+    ``bt`` is exact (the per-iteration global reduction caps the fused
+    depth at one iteration per sweep — see the module docstring).
+    ``n_devices > 1`` shards every sweep through the deep-halo runner
+    (``distributed/halo.py``); clamp boundaries apply at true image
+    edges only, never at shard edges.
+    """
+    spec = srad_spec()
+    lam32 = jnp.asarray(lam, jnp.float32)
+    # Resolve (bx, bt, variant) ONCE: the spec and image shape are
+    # loop-invariant, so per-iteration re-resolution (and a possible
+    # mid-loop measurement race) would be pure overhead.
+    resolved = ops.resolve_backend(backend)
+    nd = 1 if n_devices is None else n_devices
+    bx, bt, variant = ops.resolve_blocking(j_img, spec, bx, bt, None,
+                                           resolved, n_devices=nd)
+    for _ in range(n_iter):
+        q0 = _q0sqr(j_img).astype(jnp.float32)
+        scal = jnp.stack([q0, lam32]).reshape(1, 2)
+        j_img = ops.stencil_run(j_img, spec, 1, bx=bx, bt=bt,
+                                variant=variant, backend=resolved,
+                                scalars=scal, n_devices=n_devices)
     return j_img
 
 
-def random_problem(key, h: int, w: int):
-    """Positive image (SRAD divides by J), like Rodinia's exp(img)."""
-    return jnp.exp(jax.random.normal(key, (h, w), jnp.float32) * 0.1)
+random_problem = problems.srad

@@ -1,5 +1,7 @@
 """Core: the paper's contribution — blocked stencil acceleration + models."""
-from repro.core.stencil import StencilSpec, diffusion, hotspot2d, hotspot3d
+from repro.core.stencil import (AuxOperand, StencilSpec, box_spec,
+                                diffusion, hotspot2d, hotspot3d, shift,
+                                shift_nd, star_as_box)
 from repro.core.blocking import BlockPlan, candidate_plans
 from repro.core.perf_model import (TpuSpec, V5E, V5P_PROJECTION,
                                    RooflineTerms, stencil_roofline,
@@ -8,6 +10,7 @@ from repro.core.perf_model import (TpuSpec, V5E, V5P_PROJECTION,
                                    model_flops_train, model_flops_decode)
 
 __all__ = [
+    "AuxOperand", "box_spec", "shift", "shift_nd", "star_as_box",
     "StencilSpec", "diffusion", "hotspot2d", "hotspot3d", "BlockPlan",
     "candidate_plans", "TpuSpec", "V5E", "V5P_PROJECTION", "RooflineTerms",
     "stencil_roofline", "select_config", "predict_gflops",

@@ -128,15 +128,28 @@ class BlockPlan:
     def useful_flops_per_sweep(self) -> float:
         return self.flops_per_sweep(include_redundancy=False)
 
+    @property
+    def n_aux(self) -> int:
+        """Operand *streams* the engine runs alongside the main grid:
+        one per coeff operand, plus one for all source operands
+        together (the engine pre-sums sources into a single additive
+        grid — see engine.stencil_call)."""
+        n_src = sum(op.role == "source" for op in self.spec.aux)
+        return (len(self.spec.aux) - n_src) + min(n_src, 1)
+
     def hbm_bytes_per_sweep(self, read_amplification: float = 1.0) -> float:
-        """HBM traffic for one pass: one read + one write of the grid.
+        """HBM traffic for one pass: one read of every input operand
+        (the grid + each aux operand, all streamed tile-by-tile) + one
+        write of the grid.
 
         ``read_amplification`` models kernel variants: the simple
         3-neighbor-operand kernel reads each tile 3x (amp=3); the
         revolving-buffer kernel (the thesis's shift register analog)
-        reads each tile once (amp=1).
+        reads each tile once (amp=1). Aux operands stream through the
+        same BlockSpecs, so the amplification applies to them too.
         """
-        return self.cells * self.itemsize * (read_amplification + 1.0)
+        reads = read_amplification * (1.0 + self.n_aux)
+        return self.cells * self.itemsize * (reads + 1.0)
 
     @property
     def leading(self) -> int:
@@ -157,11 +170,16 @@ class BlockPlan:
     def vmem_bytes(self) -> int:
         """Per-core VMEM working set of the Pallas kernel."""
         if self.spec.dims == 2:
-            # 3 input tiles + window + output tile (all full-height).
-            cols = 3 * self.bx + self.window_width + self.bx
+            # Per streamed operand (grid + each aux): 3 input tiles +
+            # a window; plus the output tile (all full-height).
+            per_operand = 3 * self.bx + self.window_width
+            cols = per_operand * (1 + self.n_aux) + self.bx
             return self.padded_rows * cols * self.itemsize
-        # 3D: bt stage windows of (2r+1) planes + 3 input planes + output.
+        # 3D: bt stage windows of (2r+1) planes + 3 input planes +
+        # output, plus a (bt*r + 1)-deep rolling plane buffer per aux
+        # operand (engine._kernel_3d_stream).
         planes = self.bt * (2 * self.spec.radius + 1) + 4
+        planes += self.n_aux * (self.bt * self.spec.radius + 1)
         return planes * self.padded_rows * self.window_width * self.itemsize
 
     def sweeps(self, n_steps: int) -> int:

@@ -1,61 +1,224 @@
-"""Star-shaped stencil specifications (thesis ch.5).
+"""The stencil IR (thesis ch.5, generalized per the high-order follow-up).
 
-A ``StencilSpec`` describes a 2D or 3D *star-shaped* stencil of radius
-``r`` (thesis: "first to fourth-order"): the output at cell ``x`` is
+A ``StencilSpec`` is a small intermediate representation of one explicit
+structured-mesh update, rich enough that "any explicit solver" is a
+config for the one blocked engine (``kernels/engine.py``) rather than a
+new kernel — the direction of Zohouri et al.'s high-order work
+(arXiv:2002.05983) and Kamalakkannan et al.'s solver generator
+(arXiv:2101.01177). A spec fixes:
+
+* **tap layout** — ``star`` (the thesis's first- to fourth-order
+  benchmarks: per-axis weight rows in ``axis_weights``) or ``box`` (a
+  general ``(2r+1,)*dims`` weight tensor in ``box_weights``, diagonal
+  taps included), or a ``custom`` per-cell ``update`` callable for
+  nonlinear / variable-coefficient updates (SRAD's diffusion step);
+* **boundary mode** — ``"dirichlet0"`` (reads outside the grid return
+  0, the thesis's fixed-halo convention) or ``"clamp"``
+  (edge-replicate, Rodinia's clamped indexing — what SRAD and Hotspot
+  actually use). The mode applies at *true grid edges only*: the
+  multi-device runner keeps exchanging ghost cells across shard edges;
+* **auxiliary operands** — named per-cell input grids with a role:
+  ``"source"`` (added to the cell after every update step — Hotspot's
+  power term) or ``"coeff"`` (a step-constant coefficient field the
+  ``update`` reads, with its own boundary behavior — variable-
+  coefficient updates). Every operand is windowed/halo-exchanged by
+  the engine exactly like the main grid;
+* **per-step scalars** — ``n_scalars`` runtime scalars per fused time
+  step (SRAD's per-iteration ``q0^2`` from its global reduction).
+
+For star layouts the update at cell ``x`` is
 
     out[x] = c_center * in[x]
            + sum_axis sum_{o in [-r..r], o != 0} w[axis, r+o] * in[x + o*e_axis]
+           + sum_{source operands} s[x]
 
-Boundary semantics are Dirichlet-zero: reads outside the grid return 0.
-This matches the fixed-halo convention the thesis uses for its Diffusion
-2D/3D benchmark kernels (Table 5-2) and makes temporal blocking exactly
-reproducible: the tiled/temporally-blocked kernels and the naive
-reference agree bitwise up to float association.
+and the temporally-blocked kernels agree with the naive reference
+bitwise up to float association for either boundary mode.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Callable, Optional, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
+
+BOUNDARIES = ("dirichlet0", "clamp")
+AUX_ROLES = ("source", "coeff")
+
+
+# ---------------------------------------------------------------------------
+# Boundary-aware neighbor reads — the one shared definition of what a
+# tap means. The oracle applies these to the whole grid (so the array
+# edge IS the grid boundary); the engine's plugins apply them to
+# windows whose out-of-grid cells were pre-filled by the engine, so the
+# array edge is only ever the (cropped-away) window rim.
+# ---------------------------------------------------------------------------
+
+def shift(x: jax.Array, axis: int, offset: int,
+          boundary: str = "dirichlet0") -> jax.Array:
+    """x shifted so out[i] = x[i + offset] along ``axis``.
+
+    Out-of-range reads follow ``boundary``: zero-filled for
+    ``dirichlet0``, edge-replicated for ``clamp``.
+    """
+    if offset == 0:
+        return x
+    r = abs(offset)
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (r, r)
+    mode = "edge" if boundary == "clamp" else "constant"
+    padded = jnp.pad(x, pad, mode=mode)
+    idx = [slice(None)] * x.ndim
+    idx[axis] = slice(r + offset, r + offset + x.shape[axis])
+    return padded[tuple(idx)]
+
+
+def shift_nd(x: jax.Array, offsets, boundary: str = "dirichlet0") -> jax.Array:
+    """Multi-axis ``shift`` (box taps). Per-axis composition is exact
+    for both boundary modes (corner reads clamp/zero per axis)."""
+    out = x
+    for axis, off in enumerate(offsets):
+        if off:
+            out = shift(out, axis, off, boundary)
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class AuxOperand:
+    """A named per-cell input grid that rides along with the main grid.
+
+    ``role``:
+      * ``"source"`` — added to every cell after each update step (the
+        Hotspot power term). Center-tap only, so its boundary mode is
+        irrelevant (out-of-grid cells are zeroed).
+      * ``"coeff"`` — a step-constant coefficient field handed to the
+        spec's ``update`` callable; may be tapped at neighbor offsets,
+        so it carries a boundary mode (``None`` inherits the spec's).
+    """
+
+    name: str
+    role: str = "source"
+    boundary: Optional[str] = None
+
+    def __post_init__(self):
+        if self.role not in AUX_ROLES:
+            raise ValueError(f"aux role must be one of {AUX_ROLES}, "
+                             f"got {self.role!r}")
+        if self.boundary is not None and self.boundary not in BOUNDARIES:
+            raise ValueError(f"aux boundary must be None or one of "
+                             f"{BOUNDARIES}, got {self.boundary!r}")
+
+    def boundary_of(self, spec: "StencilSpec") -> str:
+        return self.boundary if self.boundary is not None else spec.boundary
 
 
 @dataclasses.dataclass(frozen=True)
 class StencilSpec:
-    """A star-shaped stencil of radius ``radius`` in ``dims`` dimensions.
+    """One structured-mesh update in ``dims`` dimensions, radius ``r``.
 
-    axis_weights[a, radius + o] is the coefficient of the neighbor at
-    offset ``o`` along axis ``a``. The center column (o == 0) of
-    ``axis_weights`` must be zero — the center coefficient is held once
-    in ``center`` so it is not multiply counted across axes.
+    Exactly one of the three layouts is active:
+      * star   — ``axis_weights[a, r + o]`` weights the neighbor at
+        offset ``o`` along axis ``a``; the center column must be zero
+        (the center coefficient is held once in ``center``);
+      * box    — ``box_weights`` is a full ``(2r+1,)*dims`` tensor
+        (center included; ``center`` is derived from it);
+      * custom — ``update(fields, spec)`` computes one step per cell.
+        ``fields`` maps ``"x"`` to the main grid/window, every coeff
+        operand name to its grid/window, and (if ``n_scalars > 0``)
+        ``"scalars"`` to that step's ``(n_scalars,)`` vector. Neighbor
+        reads inside ``update`` must go through :func:`shift` /
+        :func:`shift_nd` with the spec's boundary mode and must stay
+        within ``radius``. Custom updates are 2D-only for now (the 3D
+        engine streams planes; its plugin contract differs).
     """
 
     dims: int
     radius: int
-    center: float
-    axis_weights: Tuple[Tuple[float, ...], ...]
+    center: float = 0.0
+    axis_weights: Optional[Tuple[Tuple[float, ...], ...]] = None
     name: str = "stencil"
+    boundary: str = "dirichlet0"
+    box_weights: Optional[tuple] = None
+    aux: Tuple[AuxOperand, ...] = ()
+    n_scalars: int = 0
+    update: Optional[Callable] = None
 
     def __post_init__(self):
         if self.dims not in (2, 3):
             raise ValueError(f"dims must be 2 or 3, got {self.dims}")
         if not 1 <= self.radius <= 4:
             raise ValueError(f"radius must be in 1..4, got {self.radius}")
-        aw = np.asarray(self.axis_weights, dtype=np.float64)
-        if aw.shape != (self.dims, 2 * self.radius + 1):
+        if self.boundary not in BOUNDARIES:
+            raise ValueError(f"boundary must be one of {BOUNDARIES}, "
+                             f"got {self.boundary!r}")
+        n_layouts = sum(p is not None
+                        for p in (self.axis_weights, self.box_weights,
+                                  self.update))
+        if n_layouts != 1:
             raise ValueError(
-                f"axis_weights must have shape {(self.dims, 2*self.radius+1)}, "
-                f"got {aw.shape}")
-        if np.any(aw[:, self.radius] != 0.0):
-            raise ValueError("center column of axis_weights must be 0 "
-                             "(use `center` instead)")
+                "exactly one of axis_weights (star), box_weights (box) or "
+                f"update (custom) must be set; got {n_layouts}")
+        if self.axis_weights is not None:
+            aw = np.asarray(self.axis_weights, dtype=np.float64)
+            if aw.shape != (self.dims, 2 * self.radius + 1):
+                raise ValueError(
+                    f"axis_weights must have shape "
+                    f"{(self.dims, 2*self.radius+1)}, got {aw.shape}")
+            if np.any(aw[:, self.radius] != 0.0):
+                raise ValueError("center column of axis_weights must be 0 "
+                                 "(use `center` instead)")
+        if self.box_weights is not None:
+            bw = np.asarray(self.box_weights, dtype=np.float64)
+            want = (2 * self.radius + 1,) * self.dims
+            if bw.shape != want:
+                raise ValueError(
+                    f"box_weights must have shape {want}, got {bw.shape}")
+            # `center` is derived from the tensor so the two can never
+            # disagree (flops/points accounting reads the tensor).
+            ctr = float(bw[(self.radius,) * self.dims])
+            object.__setattr__(self, "center", ctr)
+        if self.update is not None and self.dims != 2:
+            raise ValueError("custom `update` specs are 2D-only for now")
+        names = [op.name for op in self.aux]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate aux operand names: {names}")
+        if any(n in ("x", "scalars") for n in names):
+            raise ValueError('aux operand names "x" and "scalars" are '
+                             'reserved')
+        if any(op.role == "coeff" for op in self.aux) and self.update is None:
+            raise ValueError("coeff aux operands require a custom `update` "
+                             "(linear layouts have no use for them)")
+        if self.n_scalars and self.update is None:
+            raise ValueError("n_scalars > 0 requires a custom `update`")
+        if self.n_scalars < 0:
+            raise ValueError("n_scalars must be >= 0")
+
+    # ---- layout ---------------------------------------------------------
+
+    @property
+    def layout(self) -> str:
+        if self.update is not None:
+            return "custom"
+        return "box" if self.box_weights is not None else "star"
 
     # ---- derived quantities used by the performance model & benchmarks ----
 
     @property
     def points(self) -> int:
-        """Number of taps (thesis: '2*dims*r + 1'-point star)."""
-        return 2 * self.dims * self.radius + 1
+        """Number of taps per cell update.
+
+        Star: the thesis's ``2*dims*r + 1``-point count. Box: nonzero
+        entries of the weight tensor. Custom: the full ``(2r+1)^dims``
+        dependency cone (a conservative proxy for the model).
+        """
+        if self.layout == "star":
+            return 2 * self.dims * self.radius + 1
+        if self.layout == "box":
+            return int(np.count_nonzero(
+                np.asarray(self.box_weights, dtype=np.float64)))
+        return (2 * self.radius + 1) ** self.dims
 
     @property
     def flops_per_cell(self) -> int:
@@ -70,23 +233,36 @@ class StencilSpec:
     def weights(self) -> np.ndarray:
         return np.asarray(self.axis_weights, dtype=np.float32)
 
+    @property
+    def box(self) -> np.ndarray:
+        return np.asarray(self.box_weights, dtype=np.float32)
+
+    @property
+    def source_operands(self) -> Tuple[AuxOperand, ...]:
+        return tuple(op for op in self.aux if op.role == "source")
+
+    @property
+    def coeff_operands(self) -> Tuple[AuxOperand, ...]:
+        return tuple(op for op in self.aux if op.role == "coeff")
+
     def halo(self, bt: int) -> int:
         """Halo width consumed by ``bt`` fused time steps (thesis §5.3.2)."""
         return bt * self.radius
 
 
 # ---------------------------------------------------------------------------
-# Factories for the stencils evaluated in the thesis (Tables 5-2, 5-6, 5-7).
+# Factories for the stencils evaluated in the thesis (Tables 5-2, 5-6, 5-7)
+# plus IR-level helpers.
 # ---------------------------------------------------------------------------
 
-def diffusion(dims: int, radius: int = 1) -> StencilSpec:
+def diffusion(dims: int, radius: int = 1,
+              boundary: str = "dirichlet0") -> StencilSpec:
     """High-order diffusion stencil (thesis Table 5-7, 'Diffusion 2D/3D').
 
     Symmetric star: every tap at distance d along any axis has weight
     1/(points-1) * (1/d) normalized so all weights (incl. center) sum to 1
     — a stable diffusion operator for any radius.
     """
-    n_neighbors = 2 * dims * radius
     raw = np.zeros((dims, 2 * radius + 1), dtype=np.float64)
     for a in range(dims):
         for o in range(1, radius + 1):
@@ -95,16 +271,19 @@ def diffusion(dims: int, radius: int = 1) -> StencilSpec:
     total = raw.sum()
     center = 0.4
     raw *= (1.0 - center) / total
+    suffix = "" if boundary == "dirichlet0" else "_clamp"
     return StencilSpec(dims=dims, radius=radius, center=center,
                        axis_weights=tuple(map(tuple, raw)),
-                       name=f"diffusion{dims}d_r{radius}")
+                       boundary=boundary,
+                       name=f"diffusion{dims}d_r{radius}{suffix}")
 
 
 def hotspot2d(sdc: float = 0.1, r_amb: float = 0.05) -> StencilSpec:
     """Hotspot-like 5-point stencil (thesis §4.3.1.2) without the power term.
 
-    The full Rodinia Hotspot (with the power grid) lives in
-    ``repro.apps.hotspot``; this spec captures its temperature stencil.
+    The full Rodinia Hotspot (with the power grid as a source operand)
+    lives in ``repro.apps.hotspot``; this spec captures its temperature
+    stencil under the ch.5 template's Dirichlet-zero convention.
     """
     w = sdc
     aw = np.zeros((2, 3), dtype=np.float64)
@@ -122,6 +301,49 @@ def hotspot3d() -> StencilSpec:
     aw[:, 2] = 0.12
     return StencilSpec(dims=3, radius=1, center=1.0 - 6 * 0.12 - 0.02,
                        axis_weights=tuple(map(tuple, aw)), name="hotspot3d")
+
+
+def _nested_tuple(a) -> tuple:
+    """A numpy tensor as fully-nested (hashable) tuples."""
+    if isinstance(a, np.ndarray) and a.ndim > 1:
+        return tuple(_nested_tuple(row) for row in a)
+    return tuple(float(v) for v in a)
+
+
+def box_spec(weights, boundary: str = "dirichlet0",
+             name: str = "box") -> StencilSpec:
+    """A general box stencil from a ``(2r+1,)*dims`` weight tensor."""
+    bw = np.asarray(weights, dtype=np.float64)
+    if bw.ndim not in (2, 3) or len(set(bw.shape)) != 1 or bw.shape[0] % 2 == 0:
+        raise ValueError(
+            f"box weights must be a (2r+1,)*dims tensor, got {bw.shape}")
+    radius = bw.shape[0] // 2
+    return StencilSpec(dims=bw.ndim, radius=radius, center=0.0,
+                       box_weights=_nested_tuple(bw),
+                       boundary=boundary, name=name)
+
+
+def star_as_box(spec: StencilSpec) -> StencilSpec:
+    """The same stencil as ``spec`` re-expressed as a box weight tensor
+    (star taps embedded on the axes) — layout parity made testable."""
+    if spec.layout != "star":
+        raise ValueError("star_as_box needs a star-layout spec")
+    r, d = spec.radius, spec.dims
+    bw = np.zeros((2 * r + 1,) * d, dtype=np.float64)
+    ctr = (r,) * d
+    bw[ctr] = spec.center
+    aw = np.asarray(spec.axis_weights, dtype=np.float64)
+    for a in range(d):
+        for o in range(-r, r + 1):
+            if o == 0:
+                continue
+            idx = list(ctr)
+            idx[a] = r + o
+            bw[tuple(idx)] += aw[a, r + o]
+    return StencilSpec(dims=d, radius=r, center=0.0,
+                       box_weights=_nested_tuple(bw),
+                       boundary=spec.boundary, aux=spec.aux,
+                       name=f"{spec.name}_as_box")
 
 
 ALL_BENCH_SPECS = tuple(

@@ -23,14 +23,25 @@ Scheme (one sweep = ``bt`` fused steps):
                          run single-device engine on the slab
                          (bt fused steps), crop the center S
 
+Every *operand* shards the same way: the main grid, the legacy
+``source`` grid, and each aux operand declared by the spec (Hotspot's
+power term, variable-coefficient fields) is split along the leading
+axis and has its (step-constant) halos exchanged once per call.
+Per-step scalars (custom updates) are replicated to every device.
+
 Exactness: the slab result equals the global result wherever the
 dependency cone (``bt`` steps x radius ``r`` = depth ``h``) stays inside
 the slab — precisely the cropped center. Grid edges and shard padding
 are handled by the engine's *leading-axis validity interval*
-(``valid_lo``/``valid_hi``): ghost rows outside the global grid are
-forced to zero at every fused step, which reproduces the Dirichlet-zero
-contract of ``kernels/ref.py`` bit-for-bit (up to float association),
-for any device count and any (shard-unaligned) grid size.
+(``valid_lo``/``valid_hi``): ghost rows outside the global grid behave
+as outside-grid at every fused step — zeroed under ``dirichlet0``,
+edge-replicated under ``clamp``. Crucially, the boundary mode therefore
+applies at **true grid edges only**: rows a device receives from its
+neighbors sit *inside* the validity interval, so shard-interior edges
+are never clamped or zeroed — they keep their exchanged ghost data.
+This reproduces the ``kernels/ref.py`` contract bit-for-bit (up to
+float association) for any device count and any (shard-unaligned) grid
+size, in either boundary mode.
 
 Overlap: with ``overlap=True`` each sweep computes the shard *interior*
 (which needs no halo) on a slab that is ready immediately, while the
@@ -55,6 +66,9 @@ from repro.kernels import engine
 
 AXIS = "shard"
 
+# Sentinel name for the legacy (spec-undeclared) source operand.
+_LEGACY_SRC = "__source__"
+
 
 def max_bt(spec: StencilSpec, extent: int, n_devices: int) -> int:
     """Largest temporal degree whose halo fits one shard (h = r*bt <= S)."""
@@ -76,8 +90,8 @@ def exchange_halos(xs: jax.Array, h: int, n: int, axis_name: str = AXIS):
     Returns ``(from_above, from_below)``: the previous device's bottom
     ``h`` slices and the next device's top ``h`` slices. Edge devices
     receive zeros (ppermute's behavior for uncovered destinations) —
-    together with the engine's validity interval that IS the global
-    Dirichlet-zero boundary.
+    those rows sit outside the engine's validity interval, so the
+    boundary mode (zero / clamp) is what actually applies there.
     """
     down = [(i, i + 1) for i in range(n - 1)]   # my bottom h -> next dev
     up = [(i, i - 1) for i in range(1, n)]      # my top h    -> prev dev
@@ -86,28 +100,45 @@ def exchange_halos(xs: jax.Array, h: int, n: int, axis_name: str = AXIS):
     return from_above, from_below
 
 
-def _engine_call(slab, spec, bx, bts, variant, interpret, src, lo, hi):
+def _engine_call(slab, spec, bx, bts, variant, interpret, extras, scal,
+                 lo, hi):
+    """Run the single-device engine on one slab; ``extras`` maps
+    operand names (aux names + the legacy-source sentinel) to slabs."""
+    extras = dict(extras)
+    src = extras.pop(_LEGACY_SRC, None)
     return engine.stencil_call(slab, spec, bx=bx, bt=bts, variant=variant,
                                interpret=interpret, source=src,
+                               aux=extras or None, scalars=scal,
                                valid_lo=lo, valid_hi=hi)
 
 
-def _sweep(xs, src_halos, spec, *, bx, bts, variant, interpret, idx, n, S,
-           extent, overlap, axis_name):
-    """One blocked sweep (``bts`` fused steps) on this device's shard."""
+def _sweep(xs, spec, *, bx, bts, variant, interpret, idx, n, S, extent,
+           overlap, axis_name, extras, scal):
+    """One blocked sweep (``bts`` fused steps) on this device's shard.
+
+    ``extras``: list of ``(name, from_above, from_below, shard)`` for
+    every step-constant operand (halos pre-exchanged at max depth).
+    ``scal``: this sweep's ``(bts, n_scalars)`` slice, or None.
+    """
     h = spec.halo(bts)
-    sa, sb, ss = src_halos            # source halos (pre-exchanged) + shard
     row0 = idx * S                    # global coordinate of shard row 0
+
+    def slabs(lo_sl, hi_sl):
+        """Operand slabs spanning [lo_sl, hi_sl) in halo+shard+halo
+        coordinates (0 = h rows above the shard top)."""
+        out = {}
+        for name, ea, eb, es in extras:
+            full = jnp.concatenate([ea[-h:], es, eb[:h]], axis=0)
+            out[name] = full[lo_sl:hi_sl]
+        return out
 
     if not (overlap and S >= 2 * h):
         fa, fb = exchange_halos(xs, h, n, axis_name)
         slab = jnp.concatenate([fa, xs, fb], axis=0)
-        sslab = (jnp.concatenate([sa[-h:], ss, sb[:h]], axis=0)
-                 if ss is not None else None)
         lo = jnp.clip(h - row0, 0, S + 2 * h)
         hi = jnp.clip(extent - row0 + h, 0, S + 2 * h)
         out = _engine_call(slab, spec, bx, bts, variant, interpret,
-                           sslab, lo, hi)
+                           slabs(0, S + 2 * h), scal, lo, hi)
         return out[h: h + S]
 
     # Overlapped schedule: kick off the halo ppermutes, compute the
@@ -116,30 +147,28 @@ def _sweep(xs, src_halos, spec, *, bx, bts, variant, interpret, idx, n, S,
     if S > 2 * h:      # interior rows [h, S-h) need no halo at all
         hi_own = jnp.clip(extent - row0, 0, S)
         interior = [_engine_call(xs, spec, bx, bts, variant, interpret,
-                                 ss, 0, hi_own)[h: S - h]]
+                                 {name: es for name, _, _, es in extras},
+                                 scal, 0, hi_own)[h: S - h]]
     else:              # S == 2h: the two edge strips cover the shard
         interior = []
     tslab = jnp.concatenate([fa, xs[: 2 * h]], axis=0)        # rows [-h, 2h)
     bslab = jnp.concatenate([xs[-2 * h:], fb], axis=0)        # rows [S-2h, S+h)
-    ts = (jnp.concatenate([sa[-h:], ss[: 2 * h]], axis=0)
-          if ss is not None else None)
-    bs = (jnp.concatenate([ss[-2 * h:], sb[:h]], axis=0)
-          if ss is not None else None)
     lo_t = jnp.clip(h - row0, 0, 3 * h)
     hi_t = jnp.clip(extent - row0 + h, 0, 3 * h)
     top = _engine_call(tslab, spec, bx, bts, variant, interpret,
-                       ts, lo_t, hi_t)[h: 2 * h]
+                       slabs(0, 3 * h), scal, lo_t, hi_t)[h: 2 * h]
     lo_b = jnp.clip(2 * h - row0 - S, 0, 3 * h)
     hi_b = jnp.clip(extent - row0 - S + 2 * h, 0, 3 * h)
     bot = _engine_call(bslab, spec, bx, bts, variant, interpret,
-                       bs, lo_b, hi_b)[h: 2 * h]
+                       slabs(S - h, S + 2 * h), scal, lo_b, hi_b)[h: 2 * h]
     return jnp.concatenate([top] + interior + [bot], axis=0)
 
 
 def stencil_run_sharded(x: jax.Array, spec: StencilSpec, n_steps: int, *,
                         n_devices: int, bx: int = 256, bt: int = 1,
                         variant: str = "revolving", interpret: bool = True,
-                        source: jax.Array | None = None, devices=None,
+                        source: jax.Array | None = None, aux=None,
+                        scalars: jax.Array | None = None, devices=None,
                         overlap: bool = True,
                         axis_name: str = AXIS) -> jax.Array:
     """``n_steps`` stencil steps with the grid sharded over ``n_devices``.
@@ -148,9 +177,11 @@ def stencil_run_sharded(x: jax.Array, spec: StencilSpec, n_steps: int, *,
     ``r*bt`` halos once per ``bt``-step block, runs the single-device
     engine on each ``halo+shard+halo`` slab and crops. Numerically
     identical to ``kernels.ops.stencil_run`` on one device for any
-    ``bt`` (``bt`` is clamped so the halo fits one shard). The
-    ``source`` grid is step-constant, so its halos are exchanged once
-    per call, not once per sweep.
+    ``bt`` (``bt`` is clamped so the halo fits one shard). ``source``
+    and every ``aux`` operand are step-constant, so their halos are
+    exchanged once per call, not once per sweep; ``scalars`` (``
+    (n_steps, n_scalars)``, custom updates) are replicated and sliced
+    per sweep.
     """
     if x.ndim != spec.dims:
         raise ValueError(f"grid rank {x.ndim} != spec.dims {spec.dims}")
@@ -172,22 +203,55 @@ def stencil_run_sharded(x: jax.Array, spec: StencilSpec, n_steps: int, *,
     full, rem = divmod(n_steps, bt)
     schedule = [bt] * full + ([rem] if rem else [])
 
+    # Mirror engine.stencil_call's operand validation: a typo'd or
+    # undeclared aux name must fail loudly here too, not silently drop
+    # an operand from the sharded computation.
+    aux = dict(aux) if aux else {}
+    declared = [op.name for op in spec.aux]
+    unknown = [nm for nm in aux if nm not in declared]
+    if unknown:
+        raise ValueError(f"unknown aux operands {unknown} for spec "
+                         f"{spec.name!r} (declared: {declared})")
+    for nm, arr in aux.items():
+        if arr.shape != x.shape:
+            raise ValueError(f"aux operand {nm!r} shape {arr.shape} != "
+                             f"grid shape {x.shape}")
+    extra_names = []
+    extra_arrays = []
+    if source is not None:
+        extra_names.append(_LEGACY_SRC)
+        extra_arrays.append(source)
+    for op in spec.aux:
+        if op.name not in aux:
+            raise ValueError(f"spec {spec.name!r} requires aux operands "
+                             f"{declared}")
+        extra_names.append(op.name)
+        extra_arrays.append(aux[op.name])
+    extra_names = tuple(extra_names)
+
+    if scalars is not None:
+        scalars = jnp.asarray(scalars, jnp.float32).reshape(n_steps, -1)
+
     pad = [(0, S * n - extent)] + [(0, 0)] * (x.ndim - 1)
     xp = jnp.pad(x, pad)
-    args = (xp,)
-    if source is not None:
-        args += (jnp.pad(source.astype(x.dtype), pad),)
+    args = (xp,) + tuple(jnp.pad(a.astype(x.dtype), pad)
+                         for a in extra_arrays)
+    if scalars is not None:
+        args += (scalars,)
 
     mesh = _device_mesh(n, devices)
     runner = _sharded_runner(
         spec, mesh, key=(spec, xp.shape, str(xp.dtype), bx,
                          tuple(schedule), variant, interpret, n, S,
-                         extent, overlap, axis_name, source is not None,
+                         extent, overlap, axis_name, extra_names,
+                         scalars is not None,
+                         None if scalars is None else scalars.shape,
                          tuple(int(d.id) for d in np.asarray(
                              mesh.devices).flat)),
         h_max=h_max, schedule=schedule, bx=bx, variant=variant,
         interpret=interpret, n=n, S=S, extent=extent, overlap=overlap,
-        axis_name=axis_name, n_args=len(args))
+        axis_name=axis_name, extra_names=extra_names,
+        has_scalars=scalars is not None)
     out = runner(*args)
     return out[:extent]
 
@@ -199,27 +263,37 @@ _RUNNERS: dict = {}
 
 
 def _sharded_runner(spec, mesh, *, key, h_max, schedule, bx, variant,
-                    interpret, n, S, extent, overlap, axis_name, n_args):
+                    interpret, n, S, extent, overlap, axis_name,
+                    extra_names, has_scalars):
     fn = _RUNNERS.get(key)
     if fn is not None:
         return fn
+    n_extras = len(extra_names)
 
     def body(xs, *rest):
         idx = jax.lax.axis_index(axis_name)
-        ss = rest[0] if rest else None
-        if ss is not None:
-            sa, sb = exchange_halos(ss, h_max, n, axis_name)
-        else:
-            sa = sb = None
+        shards = rest[:n_extras]
+        scal = rest[n_extras] if has_scalars else None
+        extras = []
+        for name, es in zip(extra_names, shards):
+            ea, eb = exchange_halos(es, h_max, n, axis_name)
+            extras.append((name, ea, eb, es))
+        off = 0
         for bts in schedule:
-            xs = _sweep(xs, (sa, sb, ss), spec, bx=bx, bts=bts,
-                        variant=variant, interpret=interpret, idx=idx,
-                        n=n, S=S, extent=extent, overlap=overlap,
-                        axis_name=axis_name)
+            xs = _sweep(xs, spec, bx=bx, bts=bts, variant=variant,
+                        interpret=interpret, idx=idx, n=n, S=S,
+                        extent=extent, overlap=overlap,
+                        axis_name=axis_name, extras=extras,
+                        scal=(scal[off: off + bts]
+                              if scal is not None else None))
+            off += bts
         return xs
 
+    in_specs = (P(axis_name),) * (1 + n_extras)
+    if has_scalars:
+        in_specs += (P(),)
     fn = jax.jit(compat.shard_map(
-        body, mesh=mesh, in_specs=(P(axis_name),) * n_args,
+        body, mesh=mesh, in_specs=in_specs,
         out_specs=P(axis_name), check_vma=False))
     _RUNNERS[key] = fn
     return fn

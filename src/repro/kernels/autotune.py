@@ -46,7 +46,8 @@ from repro.core.blocking import BlockPlan
 from repro.core.perf_model import TpuSpec, V5E, select_config
 from repro.core.stencil import StencilSpec
 
-_CACHE_VERSION = 2   # v2: cache keys grew the |nd{n_devices} suffix
+_CACHE_VERSION = 3   # v3: cache keys grew the IR fields (boundary, tap
+# layout, aux-operand signature, n_scalars); v2 added |nd{n_devices}
 # Grids above this cell count are never timed on the host — the model
 # prior picks alone (measuring a 8192^2 interpret-mode sweep on CPU
 # would dwarf the run it is meant to speed up).
@@ -124,7 +125,14 @@ def clear_cache() -> None:
 def _key(spec: StencilSpec, shape, dtype: str, backend: str,
          vmem_budget: int, tpu_name: str, n_devices: int = 1) -> str:
     sh = "x".join(str(s) for s in shape)
-    return (f"{spec.name}|d{spec.dims}|r{spec.radius}|{sh}|{dtype}|"
+    # IR fields: boundary mode and tap layout change the kernel's work
+    # per cell; the aux-operand signature and per-step scalar count
+    # change its operand streaming — a tuned answer transfers to none
+    # of them (docs/autotuning.md has the full schema).
+    aux_sig = ",".join(f"{op.role[0]}" for op in spec.aux) or "-"
+    ir = (f"b{spec.boundary}|L{spec.layout}|ax{aux_sig}|"
+          f"sc{spec.n_scalars}")
+    return (f"{spec.name}|d{spec.dims}|r{spec.radius}|{ir}|{sh}|{dtype}|"
             f"{backend}|vm{vmem_budget}|{tpu_name}|nd{n_devices}")
 
 
@@ -149,12 +157,19 @@ def _measure(x, spec, plans, variants, backend, timer,
     from repro.kernels import ops
     timings: Dict[Tuple[int, int], float] = {}
     best = (None, None, float("inf"))
+    # Specs that declare operands still race: synthesize zero aux grids
+    # and unit scalars of the declared shapes (timing does not care
+    # about the values, only the streaming and arithmetic they cost).
+    aux = {op.name: jnp.zeros_like(x) for op in spec.aux} or None
     for p in plans:
         for v in variants:
             def run(p=p, v=v):
+                scal = (jnp.ones((p.bt, spec.n_scalars), jnp.float32)
+                        if spec.n_scalars else None)
                 return ops.stencil_run(
                     x, spec, p.bt, bx=p.bx, bt=p.bt, backend=backend,
-                    variant=v, n_devices=n_devices).block_until_ready()
+                    variant=v, aux=aux, scalars=scal,
+                    n_devices=n_devices).block_until_ready()
             try:
                 run()  # warm-up / compile
             except Exception:   # noqa: BLE001 - an illegal candidate

@@ -3,9 +3,21 @@
 One engine owns everything the 2D and 3D accelerators share — the
 dimension-*specific* arithmetic is injected as a plugin:
 
-  * window masking (Dirichlet-zero validity over the padded window),
+  * boundary fill (re-imposing the true-grid boundary on the padded
+    window every fused step): ``dirichlet0`` zeroes out-of-grid cells,
+    ``clamp`` replicates the nearest in-grid cell (Rodinia's clamped
+    indexing). Either way the fill happens at *true grid edges only*
+    — the leading-axis validity interval (below) is what tells a
+    sharded slab where the true grid ends, so shard-interior edges
+    keep their exchanged ghost data;
   * the fused-time-step loop (``bt`` in-VMEM steps per HBM pass, halo
     shrinking by ``r`` per step — overlapped blocking, thesis fig. 5-6),
+    with per-step scalars threaded to custom updates;
+  * auxiliary-operand plumbing: ``source``-role operands are pre-summed
+    on the host into one additive grid that is windowed alongside the
+    main grid (every variant); ``coeff``-role operands each get their
+    own window (and, for the revolving variant, their own revolving
+    scratch), boundary-filled once per sweep and handed to the plugin;
   * variant dispatch:
       - ``multioperand`` ("basic"): the input is passed three times with
         left/center/right BlockSpec index maps — 3x HBM read
@@ -24,20 +36,26 @@ dimension-*specific* arithmetic is injected as a plugin:
   * the *leading-axis validity interval*: every kernel receives a tiny
     ``(1, 2)`` int32 operand ``[lo, hi)`` bounding the valid rows (2D)
     or planes (3D) of the leading axis. Cells outside the interval are
-    forced to zero at *every* fused step — i.e. they behave exactly
-    like out-of-grid reads under the Dirichlet-zero contract. The
-    bounds may be traced scalars, which is what lets the multi-device
-    deep-halo runner (``distributed/halo.py``) mark per-device ghost
-    rows and shard padding as outside-grid under a single SPMD program.
+    treated as outside the grid at *every* fused step — zeroed under
+    ``dirichlet0``, replicated-from-the-interval-edge under ``clamp``.
+    The bounds may be traced scalars, which is what lets the
+    multi-device deep-halo runner (``distributed/halo.py``) mark
+    per-device ghost rows and shard padding as outside-grid under a
+    single SPMD program.
 
-Plugins (see ``stencil2d._apply_star_2d`` / ``stencil3d._apply_star_3d``):
+Plugins (see ``stencil2d._apply_2d`` / ``stencil3d._apply_3d``):
 
-  2D: ``apply_fn(win[rows, cols], spec) -> [rows, cols]`` — one time
-      step on a window, zero-padded edges;
-  3D: ``apply_fn(window[2r+1, rows, cols], spec) -> [rows, cols]`` —
-      one time step at the window's center plane.
+  2D: ``apply_fn(win[rows, cols], spec, coeff, scalars) -> [rows, cols]``
+      — one time step on a window whose true-grid boundary was just
+      re-imposed; ``coeff`` maps coeff-operand names to windows;
+  3D: ``apply_fn(window[2r+1, rows, cols], spec, coeff, scalars) ->
+      [rows, cols]`` — one time step at the window's center plane. The
+      engine owns the z boundary: under ``clamp`` it re-indexes the
+      plane window so out-of-grid z taps replicate the nearest valid
+      plane; under ``dirichlet0`` out-of-grid planes are zeroed.
 
-Boundary semantics: Dirichlet zero (see kernels/ref.py).
+Boundary semantics per ``spec.boundary`` (see kernels/ref.py and
+docs/stencil_ir.md).
 """
 from __future__ import annotations
 
@@ -76,53 +94,125 @@ def window_mask(tile_idx, bx: int, halo: int, rows: int, true_w: int,
     return (cols >= 0) & (cols < true_w) & (rr >= row_lo) & (rr < row_hi)
 
 
-def fused_steps(win, mask, spec: StencilSpec, bt: int, apply_fn, src=None):
-    """``bt`` fused steps on a window; ``src`` is an optional per-step
-    additive source window (Hotspot power grid, thesis §4.3.1.2)."""
-    zero = jnp.zeros_like(win)
-    win = jnp.where(mask, win, zero)
-    if src is not None:
-        src = jnp.where(mask, src, zero)
+def boundary_fill(win, boundary: str, tile_idx, bx: int, halo: int,
+                  true_w: int, row_lo, row_hi):
+    """Re-impose the true-grid boundary on a [rows, width] window.
 
-    def body(_, g):
-        out = apply_fn(g, spec)
+    ``dirichlet0``: out-of-grid cells read 0. ``clamp``: out-of-grid
+    cells read the nearest in-grid cell (edge replicate) — implemented
+    as a row/column re-index with indices clipped into the valid
+    interval, so it works with traced ``row_lo``/``row_hi`` (sharded
+    slabs clamp at *global* grid edges only, never at shard edges).
+    """
+    rows, width = win.shape
+    if boundary == "clamp":
+        col0 = tile_idx * bx - halo
+        ri = jnp.clip(jnp.arange(rows, dtype=jnp.int32), row_lo,
+                      jnp.maximum(row_hi - 1, row_lo))
+        ci = jnp.clip(jnp.arange(width, dtype=jnp.int32) + col0,
+                      0, true_w - 1) - col0
+        return jnp.take(jnp.take(win, ri, axis=0, mode="clip"),
+                        ci, axis=1, mode="clip")
+    mask = window_mask(tile_idx, bx, halo, rows, true_w, row_lo, row_hi)
+    return jnp.where(mask, win, jnp.zeros_like(win))
+
+
+def fused_steps(win, spec: StencilSpec, bt: int, apply_fn, fill,
+                src=None, coeff=None, scalars=None):
+    """``bt`` fused steps on a window.
+
+    ``fill``: the boundary-fill closure for this window's position —
+    applied to the input and to every step's output, so out-of-grid
+    cells behave per ``spec.boundary`` at *every* step. ``src``: the
+    pre-filled sum of source-role windows (added after each step).
+    ``coeff``: pre-filled step-constant coefficient windows by name.
+    ``scalars``: ``(bt, n_scalars)`` per-step values for custom updates.
+    """
+    win = fill(win)
+
+    def body(t, g):
+        srow = scalars[t] if scalars is not None else None
+        out = apply_fn(g, spec, coeff, srow)
         if src is not None:
             out = out + src
-        return jnp.where(mask, out, zero)
+        return fill(out)
 
     return jax.lax.fori_loop(0, bt, body, win)
+
+
+def _z_clamped_window(window, z_out, d_lo, d_hi, r: int):
+    """Plane window with z taps re-indexed so planes outside
+    [d_lo, d_hi) replicate the nearest valid plane (clamp-z). Built
+    from statically-unrolled selects (no gather) so it lowers cleanly.
+    """
+    hi = jnp.maximum(d_hi - 1, d_lo)
+    planes = []
+    for j in range(2 * r + 1):
+        slot = jnp.clip(z_out - r + j, d_lo, hi) - z_out + r
+        acc = jnp.zeros_like(window[0])
+        for m in range(2 * r + 1):
+            acc = jnp.where(slot == m, window[m], acc)
+        planes.append(acc)
+    return jnp.stack(planes)
 
 
 # ---------------------------------------------------------------------------
 # 2D kernel bodies
 # ---------------------------------------------------------------------------
 
-def _kernel_2d_multi(*refs, spec, bx, bt, true_w, has_src, apply_fn):
-    if has_src:
-        lim_ref, xl_ref, xc_ref, xr_ref, sl_ref, sc_ref, sr_ref, o_ref = refs
-    else:
-        lim_ref, xl_ref, xc_ref, xr_ref, o_ref = refs
-    src = None
+def _unpack_2d(refs, has_scal: bool, n_per: int, has_src: bool,
+               n_coeff: int):
+    """Split the flat pallas ref list into named groups; ``n_per`` is
+    refs per streamed operand (3 for multioperand, 1 for revolving)."""
+    it = iter(refs)
+    lim = next(it)
+    scal = next(it) if has_scal else None
+    xg = tuple(next(it) for _ in range(n_per))
+    sg = tuple(next(it) for _ in range(n_per)) if has_src else None
+    cgs = [tuple(next(it) for _ in range(n_per)) for _ in range(n_coeff)]
+    out = next(it)
+    return lim, scal, xg, sg, cgs, out, it
+
+
+def _kernel_2d_multi(*refs, spec, bx, bt, true_w, has_src, coeff_meta,
+                     has_scal, apply_fn):
+    lim_ref, scal_ref, xg, sg, cgs, o_ref, _ = _unpack_2d(
+        refs, has_scal, 3, has_src, len(coeff_meta))
     row_lo, row_hi = lim_ref[0, 0], lim_ref[0, 1]
     i = pl.program_id(0)
     halo = spec.halo(bt)
-    rows = xc_ref.shape[0]
-    cat = jnp.concatenate([xl_ref[...], xc_ref[...], xr_ref[...]], axis=1)
-    win = cat[:, bx - halo: 2 * bx + halo]
-    if has_src:
-        scat = jnp.concatenate([sl_ref[...], sc_ref[...], sr_ref[...]],
-                               axis=1)
-        src = scat[:, bx - halo: 2 * bx + halo]
-    mask = window_mask(i, bx, halo, rows, true_w, row_lo, row_hi)
-    win = fused_steps(win, mask, spec, bt, apply_fn, src)
+    rows = xg[1].shape[0]
+
+    def window(tri):
+        cat = jnp.concatenate([tri[0][...], tri[1][...], tri[2][...]],
+                              axis=1)
+        return cat[:, bx - halo: 2 * bx + halo]
+
+    def fill_for(boundary):
+        return lambda w: boundary_fill(w, boundary, i, bx, halo, true_w,
+                                       row_lo, row_hi)
+
+    fill = fill_for(spec.boundary)
+    src = fill_for("dirichlet0")(window(sg)) if has_src else None
+    coeff = {name: fill_for(bnd)(window(tri))
+             for (name, bnd), tri in zip(coeff_meta, cgs)}
+    scal = scal_ref[...] if has_scal else None
+    win = fused_steps(window(xg), spec, bt, apply_fn, fill,
+                      src=src, coeff=coeff or None, scalars=scal)
     o_ref[...] = win[:, halo: halo + bx]
 
 
-def _kernel_2d_revolving(*refs, spec, bx, bt, true_w, has_src, apply_fn):
+def _kernel_2d_revolving(*refs, spec, bx, bt, true_w, has_src, coeff_meta,
+                         has_scal, apply_fn):
+    n_coeff = len(coeff_meta)
+    lim_ref, scal_ref, (x_ref,), sg, cgs, o_ref, it = _unpack_2d(
+        refs, has_scal, 1, has_src, n_coeff)
+    s_ref = sg[0] if has_src else None
+    c_refs = [tri[0] for tri in cgs]
+    bufs = [next(it)]                       # main revolving scratch
     if has_src:
-        lim_ref, x_ref, s_ref, o_ref, buf_ref, sbuf_ref = refs
-    else:
-        (lim_ref, x_ref, o_ref, buf_ref), s_ref, sbuf_ref = refs, None, None
+        bufs.append(next(it))
+    bufs += [next(it) for _ in range(n_coeff)]
     row_lo, row_hi = lim_ref[0, 0], lim_ref[0, 1]
     i = pl.program_id(0)
     halo = spec.halo(bt)
@@ -130,31 +220,41 @@ def _kernel_2d_revolving(*refs, spec, bx, bt, true_w, has_src, apply_fn):
 
     @pl.when(i == 0)
     def _init():
-        buf_ref[...] = jnp.zeros_like(buf_ref)
-        if has_src:
-            sbuf_ref[...] = jnp.zeros_like(sbuf_ref)
+        for b in bufs:
+            b[...] = jnp.zeros_like(b)
 
-    # Shift the revolving buffer left by one tile...
+    # Shift the revolving buffers left by one tile...
     @pl.when(i > 0)
     def _shift():
-        buf_ref[:, : 2 * bx] = buf_ref[:, bx:]
-        if has_src:
-            sbuf_ref[:, : 2 * bx] = sbuf_ref[:, bx:]
+        for b in bufs:
+            b[:, : 2 * bx] = b[:, bx:]
 
-    # ...and stream in tile i (zero if past the right edge of the grid).
+    # ...and stream in tile i (zero if past the right edge of the grid
+    # — the boundary fill recovers clamped values from in-grid cells).
     col0 = i * bx
     cols = col0 + jax.lax.broadcasted_iota(jnp.int32, (rows, bx), 1)
     rr = jax.lax.broadcasted_iota(jnp.int32, (rows, bx), 0)
     inb = (cols < true_w) & (rr >= row_lo) & (rr < row_hi)
-    buf_ref[:, 2 * bx:] = jnp.where(inb, x_ref[...], 0)
-    if has_src:
-        sbuf_ref[:, 2 * bx:] = jnp.where(inb, s_ref[...], 0)
+    streams = [x_ref] + ([s_ref] if has_src else []) + c_refs
+    for b, r_in in zip(bufs, streams):
+        b[:, 2 * bx:] = jnp.where(inb, r_in[...], 0)
 
-    # Compute output tile i-1 from the assembled window.
-    win = buf_ref[:, bx - halo: 2 * bx + halo]
-    src = sbuf_ref[:, bx - halo: 2 * bx + halo] if has_src else None
-    mask = window_mask(i - 1, bx, halo, rows, true_w, row_lo, row_hi)
-    win = fused_steps(win, mask, spec, bt, apply_fn, src)
+    # Compute output tile i-1 from the assembled windows.
+    def window(b):
+        return b[:, bx - halo: 2 * bx + halo]
+
+    def fill_for(boundary):
+        return lambda w: boundary_fill(w, boundary, i - 1, bx, halo,
+                                       true_w, row_lo, row_hi)
+
+    fill = fill_for(spec.boundary)
+    src = fill_for("dirichlet0")(window(bufs[1])) if has_src else None
+    cbufs = bufs[1 + int(has_src):]
+    coeff = {name: fill_for(bnd)(window(b))
+             for (name, bnd), b in zip(coeff_meta, cbufs)}
+    scal = scal_ref[...] if has_scal else None
+    win = fused_steps(window(bufs[0]), spec, bt, apply_fn, fill,
+                      src=src, coeff=coeff or None, scalars=scal)
     o_ref[...] = win[:, halo: halo + bx]
 
 
@@ -164,7 +264,8 @@ def _kernel_2d_revolving(*refs, spec, bx, bt, true_w, has_src, apply_fn):
 # after ``s+1`` time steps; at z-grid-step ``k`` it consumes the stage
 # ``s-1`` window and emits plane ``k - (s+1)*r`` — the FPGA pipeline in
 # which each temporal stage lags its producer by ``r`` shift-register
-# planes (thesis §5.3, fig. 5-6 b).
+# planes (thesis §5.3, fig. 5-6 b). Coefficient operands and per-step
+# scalars (custom updates) are 2D-only; ``core.stencil`` enforces that.
 # ---------------------------------------------------------------------------
 
 def _kernel_3d_stream(*refs, spec, bx, bt, true_h, true_w, has_src,
@@ -180,6 +281,7 @@ def _kernel_3d_stream(*refs, spec, bx, bt, true_h, true_w, has_src,
     r = spec.radius
     halo = spec.halo(bt)
     rows = xc_ref.shape[1]
+    clamp = spec.boundary == "clamp"
 
     @pl.when(k == 0)
     def _init():
@@ -187,18 +289,30 @@ def _kernel_3d_stream(*refs, spec, bx, bt, true_h, true_w, has_src,
         if has_src:
             src_ref[...] = jnp.zeros_like(src_ref)
 
+    def fill_xy(plane):
+        # In-plane boundary (y rows / x cols are never sharded, so the
+        # bounds are static); the z boundary is owned by the pipeline.
+        return boundary_fill(plane, spec.boundary, i, bx, halo, true_w,
+                             0, true_h)
+
     # ---- assemble the input plane window for z = k (stage-0 input) ----
     cat = jnp.concatenate([xl_ref[0], xc_ref[0], xr_ref[0]], axis=1)
     plane = cat[:, bx - halo: 2 * bx + halo]
     xymask = window_mask(i, bx, halo, rows, true_w, 0, true_h)
     zero = jnp.zeros_like(plane)
     zin = (k >= d_lo) & (k < d_hi)
-    plane = jnp.where(xymask & zin, plane, zero)
+    if clamp:
+        # Clamp in xy; out-of-grid z planes may hold anything — the
+        # per-stage z re-index below never reads them.
+        plane = fill_xy(plane)
+    else:
+        plane = jnp.where(xymask & zin, plane, zero)
 
     if has_src:
         # Rolling source-plane buffer (Hotspot3D power): slot bt*r holds
         # plane k; stage s reads its output plane's source at the
-        # *static* slot bt*r - (s+1)*r.
+        # *static* slot bt*r - (s+1)*r. Sources are center-tap only, so
+        # they are zero-filled outside the grid in either boundary mode.
         scat = jnp.concatenate([sl_ref[0], sc_ref[0], sr_ref[0]], axis=1)
         splane = scat[:, bx - halo: 2 * bx + halo]
         splane = jnp.where(xymask & zin, splane, zero)
@@ -213,11 +327,17 @@ def _kernel_3d_stream(*refs, spec, bx, bt, true_h, true_w, has_src,
             win_ref[s, j] = win_ref[s, j + 1]
         win_ref[s, 2 * r] = plane
         z_out = k - (s + 1) * r
-        updated = apply_fn(win_ref[s], spec)
+        stage_win = win_ref[s][...]
+        if clamp:
+            stage_win = _z_clamped_window(stage_win, z_out, d_lo, d_hi, r)
+        updated = apply_fn(stage_win, spec, None, None)
         if has_src:
             updated = updated + src_ref[bt * r - (s + 1) * r]
-        plane = jnp.where(xymask & (z_out >= d_lo) & (z_out < d_hi),
-                          updated, zero)
+        if clamp:
+            plane = fill_xy(updated)
+        else:
+            plane = jnp.where(xymask & (z_out >= d_lo) & (z_out < d_hi),
+                              updated, zero)
 
     o_ref[0] = plane[:, halo: halo + bx]
 
@@ -235,24 +355,35 @@ def _limits(lo, hi, true_n: int) -> jax.Array:
 
 
 def _run_2d(x, spec, plan: BlockPlan, bx, bt, variant, interpret, source,
-            apply_fn, valid_lo, valid_hi):
+            coeffs, scalars, apply_fn, valid_lo, valid_hi):
     true_h, true_w = x.shape
     hp, wp = plan.padded_rows, plan.padded_width
-    xp = jnp.pad(x, ((0, hp - true_h), (0, wp - true_w)))
+    pad2 = ((0, hp - true_h), (0, wp - true_w))
+    xp = jnp.pad(x, pad2)
     has_src = source is not None
-    sp = (jnp.pad(source.astype(x.dtype),
-                  ((0, hp - true_h), (0, wp - true_w)))
-          if has_src else None)
+    sp = jnp.pad(source.astype(x.dtype), pad2) if has_src else None
+    cps = [jnp.pad(c.astype(x.dtype), pad2) for c in coeffs]
+    coeff_meta = tuple((op.name, op.boundary_of(spec))
+                       for op in spec.coeff_operands)
+    has_scal = scalars is not None
     rows, nt = plan.padded_rows, plan.n_tiles
     block = (rows, bx)
     lim = _limits(valid_lo, valid_hi, true_h)
     lim_spec = pl.BlockSpec((1, 2), lambda i: (0, 0))
+    head_specs = [lim_spec]
+    head_args = [lim]
+    if has_scal:
+        head_specs.append(pl.BlockSpec(scalars.shape, lambda i: (0, 0)))
+        head_args.append(scalars)
     params = tpu_compiler_params(dimension_semantics=("arbitrary",))
+    kern_kw = dict(spec=spec, bx=bx, bt=bt, true_w=true_w,
+                   has_src=has_src, coeff_meta=coeff_meta,
+                   has_scal=has_scal, apply_fn=apply_fn)
+    n_streamed = 1 + int(has_src) + len(cps)
+    streamed = [xp] + ([sp] if has_src else []) + cps
 
     if variant == "multioperand":
-        kern = functools.partial(_kernel_2d_multi, spec=spec, bx=bx, bt=bt,
-                                 true_w=true_w, has_src=has_src,
-                                 apply_fn=apply_fn)
+        kern = functools.partial(_kernel_2d_multi, **kern_kw)
         tri_specs = [
             pl.BlockSpec(block, lambda i: (0, jnp.maximum(i - 1, 0))),
             pl.BlockSpec(block, lambda i: (0, i)),
@@ -261,31 +392,28 @@ def _run_2d(x, spec, plan: BlockPlan, bx, bt, variant, interpret, source,
         out = pl.pallas_call(
             kern,
             grid=(nt,),
-            in_specs=[lim_spec] + tri_specs * (2 if has_src else 1),
+            in_specs=head_specs + tri_specs * n_streamed,
             out_specs=pl.BlockSpec(block, lambda i: (0, i)),
             out_shape=jax.ShapeDtypeStruct(xp.shape, xp.dtype),
             compiler_params=params,
             interpret=interpret,
-        )(*((lim, xp, xp, xp) + ((sp, sp, sp) if has_src else ())))
+        )(*(head_args + [a for a in streamed for _ in range(3)]))
     elif variant == "revolving":
-        kern = functools.partial(_kernel_2d_revolving, spec=spec, bx=bx,
-                                 bt=bt, true_w=true_w, has_src=has_src,
-                                 apply_fn=apply_fn)
+        kern = functools.partial(_kernel_2d_revolving, **kern_kw)
         in_spec = pl.BlockSpec(block, lambda i: (0, jnp.minimum(i, nt - 1)))
-        scratch = [pltpu.VMEM((rows, 3 * bx), xp.dtype)]
-        if has_src:
-            scratch.append(pltpu.VMEM((rows, 3 * bx), xp.dtype))
+        scratch = [pltpu.VMEM((rows, 3 * bx), xp.dtype)
+                   for _ in range(n_streamed)]
         out = pl.pallas_call(
             kern,
             grid=(nt + 1,),
-            in_specs=[lim_spec] + [in_spec] * (2 if has_src else 1),
+            in_specs=head_specs + [in_spec] * n_streamed,
             out_specs=pl.BlockSpec(block,
                                    lambda i: (0, jnp.maximum(i - 1, 0))),
             out_shape=jax.ShapeDtypeStruct(xp.shape, xp.dtype),
             scratch_shapes=scratch,
             compiler_params=params,
             interpret=interpret,
-        )(*((lim, xp, sp) if has_src else (lim, xp)))
+        )(*(head_args + streamed))
     else:
         raise ValueError(f"unknown 2D variant {variant!r}; "
                          f"expected one of {VARIANTS_2D}")
@@ -343,30 +471,71 @@ def _run_3d(x, spec, plan: BlockPlan, bx, bt, variant, interpret, source,
                                     "interpret", "apply_fn"))
 def stencil_call(x: jax.Array, spec: StencilSpec, *, bx: int, bt: int,
                  variant: str = "revolving", interpret: bool = True,
-                 source: jax.Array | None = None,
+                 source: jax.Array | None = None, aux=None,
+                 scalars: jax.Array | None = None,
                  apply_fn=None, valid_lo=None, valid_hi=None) -> jax.Array:
     """Run ``bt`` fused time steps of ``spec`` over a 2D or 3D grid.
 
-    ``source``: optional same-shape per-step additive grid (Hotspot's
-    power input); each fused step computes ``g <- stencil(g) + source``.
-    ``apply_fn``: the dimension-specific plugin (defaults to the star
-    update of the matching stencil module).
+    ``aux``: dict mapping every operand declared in ``spec.aux`` to a
+    same-shape grid. All source-role operands (plus the legacy
+    ``source`` kwarg, kept for specs that don't declare operands) are
+    summed into one additive grid; each step computes
+    ``g <- update(g) + sources``. Coeff-role operands are windowed,
+    boundary-filled once, and handed to the plugin / custom update.
+    ``scalars``: ``(bt, spec.n_scalars)`` per-step values (custom
+    updates only — SRAD's per-iteration ``q0^2``).
+    ``apply_fn``: the dimension-specific plugin (defaults to the IR
+    apply of the matching stencil module).
     ``valid_lo``/``valid_hi``: leading-axis validity interval [lo, hi)
     — rows (2D) / planes (3D) outside it behave as outside the grid
-    (read as zero at every fused step). May be traced scalars; defaults
-    to the full extent. Used by ``distributed/halo.py`` to mark ghost
-    halos and shard padding under one SPMD program.
+    at every fused step (zero or edge-replicate per ``spec.boundary``).
+    May be traced scalars; defaults to the full extent. Used by
+    ``distributed/halo.py`` to mark ghost halos and shard padding
+    under one SPMD program.
     """
     if x.ndim != spec.dims:
         raise ValueError(
             f"grid rank {x.ndim} != spec.dims {spec.dims}")
+    aux = dict(aux) if aux else {}
+    names = [op.name for op in spec.aux]
+    missing = [n for n in names if n not in aux]
+    if missing:
+        raise ValueError(f"spec {spec.name!r} requires aux operands "
+                         f"{missing}")
+    extra = [n for n in aux if n not in names]
+    if extra:
+        raise ValueError(f"unknown aux operands {extra} for spec "
+                         f"{spec.name!r} (declared: {names})")
+    for n, a in aux.items():
+        if a.shape != x.shape:
+            raise ValueError(f"aux operand {n!r} shape {a.shape} != grid "
+                             f"shape {x.shape}")
+    srcs = [aux[op.name] for op in spec.source_operands]
+    if source is not None:
+        srcs.append(source)
+    combined_src = None
+    if srcs:
+        combined_src = srcs[0]
+        for s in srcs[1:]:
+            combined_src = combined_src + s
+    coeffs = [aux[op.name] for op in spec.coeff_operands]
+    if spec.n_scalars:
+        if scalars is None:
+            raise ValueError(f"spec {spec.name!r} requires scalars of "
+                             f"shape ({bt}, {spec.n_scalars})")
+        scalars = jnp.asarray(scalars, jnp.float32).reshape(
+            bt, spec.n_scalars)
+    elif scalars is not None:
+        raise ValueError("scalars passed but spec.n_scalars == 0")
+
     plan = BlockPlan(spec, x.shape, bx=bx, bt=bt, itemsize=x.dtype.itemsize)
     if spec.dims == 2:
         if apply_fn is None:
-            from repro.kernels.stencil2d import _apply_star_2d as apply_fn
-        return _run_2d(x, spec, plan, bx, bt, variant, interpret, source,
-                       apply_fn, valid_lo, valid_hi)
+            from repro.kernels.stencil2d import _apply_2d as apply_fn
+        return _run_2d(x, spec, plan, bx, bt, variant, interpret,
+                       combined_src, coeffs, scalars, apply_fn,
+                       valid_lo, valid_hi)
     if apply_fn is None:
-        from repro.kernels.stencil3d import _apply_star_3d as apply_fn
-    return _run_3d(x, spec, plan, bx, bt, variant, interpret, source,
-                   apply_fn, valid_lo, valid_hi)
+        from repro.kernels.stencil3d import _apply_3d as apply_fn
+    return _run_3d(x, spec, plan, bx, bt, variant, interpret,
+                   combined_src, apply_fn, valid_lo, valid_hi)

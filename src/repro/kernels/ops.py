@@ -8,16 +8,27 @@ Backend dispatch:
                        thesis's "NDRange-like" data-parallel formulation;
   * ``"auto"``       — pallas on TPU, interpret elsewhere.
 
-Blocking parameters: pass explicit ``bx``/``bt``/``variant``, or leave
-any of them ``None`` to have ``kernels.autotune.plan`` resolve it
-(model prior -> measured ground truth -> disk cache).
+Blocking parameters: **one resolution rule for every entry point**
+(``stencil_sweep``, ``stencil_run``, ``stencil_auto``): pass explicit
+``bx``/``bt``/``variant``, or leave any of them ``None`` (the default)
+to have ``kernels.autotune.plan`` resolve it (model prior -> measured
+ground truth -> disk cache), device-count-aware. ``stencil_sweep`` used
+to hard-default ``bx=256, bt=1`` and ignore ``n_devices``; it now
+resolves and shards exactly like ``stencil_run``.
+
+IR operands: ``aux`` maps every operand declared in ``spec.aux`` to a
+same-shape grid; ``scalars`` carries per-step values for custom
+updates (shape ``(bt, n_scalars)`` for one sweep, ``(n_steps,
+n_scalars)`` for a run). The legacy ``source`` kwarg remains as an
+undeclared source-role operand.
 
 Multi-device: pass ``n_devices > 1`` to run through the deep-halo
-sharded runner (``distributed/halo.py``) — the grid is split along its
-leading axis and depth-``r*bt`` halos are exchanged once per fused time
-block. The autotuner resolution becomes device-count-aware. The
-``reference`` backend ignores ``n_devices`` (the oracle is the
-single-device ground truth the sharded path is tested against).
+sharded runner (``distributed/halo.py``) — the grid (and every aux
+operand) is split along its leading axis and depth-``r*bt`` halos are
+exchanged once per fused time block. The autotuner resolution becomes
+device-count-aware. The ``reference`` backend ignores ``n_devices``
+(the oracle is the single-device ground truth the sharded path is
+tested against).
 """
 from __future__ import annotations
 
@@ -50,6 +61,8 @@ def _resolve_blocking(x, spec, bx, bt, variant, backend, n_steps=None,
     With ``bx`` and ``bt`` both explicit, no tuner runs and a None
     variant just takes the engine default — the tuner's variant choice
     is only meaningful alongside the (bx, bt) it was measured with.
+    This is the single resolution path shared by ``stencil_sweep``,
+    ``stencil_run`` and (via ``autotune.plan``) ``stencil_auto``.
     """
     if bx is not None and bt is not None:
         return bx, bt, variant if variant is not None else "revolving"
@@ -63,34 +76,60 @@ def _resolve_blocking(x, spec, bx, bt, variant, backend, n_steps=None,
             variant if variant is not None else tuned.variant)
 
 
-def stencil_sweep(x: jax.Array, spec: StencilSpec, bx: int | None = 256,
-                  bt: int | None = 1, backend: str = "auto",
+# Public name: apps that drive many stencil_run calls over one problem
+# (e.g. srad_blocked's per-iteration sweeps) resolve once up front and
+# pass the result explicitly instead of re-resolving per call.
+resolve_blocking = _resolve_blocking
+
+
+def stencil_sweep(x: jax.Array, spec: StencilSpec, bx: int | None = None,
+                  bt: int | None = None, backend: str = "auto",
                   variant: str | None = None,
-                  source: jax.Array | None = None) -> jax.Array:
+                  source: jax.Array | None = None, aux=None,
+                  scalars: jax.Array | None = None,
+                  n_devices: int | None = None, devices=None,
+                  overlap: bool = True) -> jax.Array:
     """One blocked pass = ``bt`` fused time steps over the whole grid.
 
-    ``source``: optional per-step additive grid (Hotspot power input).
+    ``bx``/``bt``/``variant`` default to the autotuner's (device-count-
+    aware) choice, exactly like ``stencil_run``. ``scalars``: ``(bt,
+    n_scalars)`` per-step values for custom updates. ``n_devices > 1``
+    runs the sweep through the deep-halo sharded runner (one halo
+    exchange for this block).
     """
     backend = _resolve(backend)
-    bx, bt, variant = _resolve_blocking(x, spec, bx, bt, variant, backend)
+    nd = 1 if n_devices is None else n_devices
+    bx, bt, variant = _resolve_blocking(x, spec, bx, bt, variant, backend,
+                                        n_devices=nd)
     if backend == "reference":
-        return _ref.stencil_multistep(x, spec, bt, source)
+        return _ref.stencil_multistep(x, spec, bt, source, aux=aux,
+                                      scalars=scalars)
     interpret = backend == "interpret"
+    if nd > 1:
+        from repro.distributed import halo
+        return halo.stencil_run_sharded(
+            x, spec, bt, n_devices=nd, bx=bx, bt=bt, variant=variant,
+            interpret=interpret, source=source, aux=aux, scalars=scalars,
+            devices=devices, overlap=overlap)
     fn = _stencil2d if spec.dims == 2 else _stencil3d
     return fn(x, spec, bx=bx, bt=bt, variant=variant,
-              interpret=interpret, source=source)
+              interpret=interpret, source=source, aux=aux, scalars=scalars)
 
 
 def stencil_run(x: jax.Array, spec: StencilSpec, n_steps: int,
-                bx: int | None = 256, bt: int | None = 1,
+                bx: int | None = None, bt: int | None = None,
                 backend: str = "auto", variant: str | None = None,
-                source: jax.Array | None = None,
+                source: jax.Array | None = None, aux=None,
+                scalars: jax.Array | None = None,
                 n_devices: int | None = None, devices=None,
                 overlap: bool = True) -> jax.Array:
     """``n_steps`` total time steps as ceil(n/bt) blocked sweeps.
 
     The trailing partial sweep runs with the remainder temporal degree so
     the result is exactly ``n_steps`` applications of the stencil.
+    ``bx``/``bt``/``variant`` resolve through the autotuner when None
+    (the same rule as ``stencil_sweep``). ``scalars``: ``(n_steps,
+    n_scalars)`` per-step values, sliced per sweep.
 
     ``n_devices > 1`` routes the whole run through the deep-halo
     sharded runner (one halo exchange per ``bt``-step block; see
@@ -102,24 +141,34 @@ def stencil_run(x: jax.Array, spec: StencilSpec, n_steps: int,
     bx, bt, variant = _resolve_blocking(x, spec, bx, bt, variant, backend,
                                         n_steps=n_steps, n_devices=nd)
     bt = min(bt, n_steps) if n_steps else bt
+    if scalars is not None:
+        import jax.numpy as jnp
+        scalars = jnp.asarray(scalars, jnp.float32).reshape(n_steps, -1)
     if nd > 1 and backend != "reference":
         from repro.distributed import halo
         return halo.stencil_run_sharded(
             x, spec, n_steps, n_devices=nd, bx=bx, bt=bt, variant=variant,
-            interpret=backend == "interpret", source=source,
-            devices=devices, overlap=overlap)
+            interpret=backend == "interpret", source=source, aux=aux,
+            scalars=scalars, devices=devices, overlap=overlap)
     full, rem = divmod(n_steps, bt)
+    done = 0
     for _ in range(full):
         x = stencil_sweep(x, spec, bx=bx, bt=bt, backend=backend,
-                          variant=variant, source=source)
+                          variant=variant, source=source, aux=aux,
+                          scalars=(scalars[done:done + bt]
+                                   if scalars is not None else None))
+        done += bt
     if rem:
         x = stencil_sweep(x, spec, bx=bx, bt=rem, backend=backend,
-                          variant=variant, source=source)
+                          variant=variant, source=source, aux=aux,
+                          scalars=(scalars[done:done + rem]
+                                   if scalars is not None else None))
     return x
 
 
 def stencil_auto(x: jax.Array, spec: StencilSpec, n_steps: int,
                  backend: str = "auto", source: jax.Array | None = None,
+                 aux=None, scalars: jax.Array | None = None,
                  n_devices: int | None = None, **tune_kw):
     """Autotuned end-to-end run; returns (result, TunedPlan)."""
     from repro.kernels import autotune
@@ -129,7 +178,8 @@ def stencil_auto(x: jax.Array, spec: StencilSpec, n_steps: int,
                           n_steps=n_steps, n_devices=nd, **tune_kw)
     out = stencil_run(x, spec, n_steps, bx=tuned.bx, bt=tuned.bt,
                       backend=backend, variant=tuned.variant,
-                      source=source, n_devices=nd)
+                      source=source, aux=aux, scalars=scalars,
+                      n_devices=nd)
     return out, tuned
 
 

@@ -1,8 +1,11 @@
 """Pure-jnp oracles for every kernel in this package.
 
-Semantics contract (shared with the Pallas kernels): star stencil of
-``StencilSpec`` with Dirichlet-zero boundaries — reads outside the grid
-return 0 at *every* time step.
+Semantics contract (shared with the Pallas kernels): the stencil IR of
+``core.stencil.StencilSpec`` — star or box tap layouts, or a custom
+per-cell ``update``; ``"dirichlet0"`` (reads outside the grid return 0
+at *every* time step) or ``"clamp"`` (edge-replicate) boundaries;
+``"source"``-role aux operands added after every step; ``"coeff"``-role
+operands and per-step scalars fed to the custom update.
 """
 from __future__ import annotations
 
@@ -11,52 +14,96 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.stencil import StencilSpec
+from repro.core.stencil import StencilSpec, shift, shift_nd
+
+_shift = shift   # back-compat alias (pre-IR name)
 
 
-def _shift(x: jax.Array, axis: int, offset: int) -> jax.Array:
-    """x shifted so out[i] = x[i + offset] along ``axis``, zero-filled."""
-    r = abs(offset)
-    if r == 0:
-        return x
-    pad = [(0, 0)] * x.ndim
-    pad[axis] = (r, r)
-    padded = jnp.pad(x, pad)
-    idx = [slice(None)] * x.ndim
-    idx[axis] = slice(r + offset, r + offset + x.shape[axis])
-    return padded[tuple(idx)]
+def _box_offsets(spec: StencilSpec):
+    """(offsets, weight) pairs of the nonzero box taps."""
+    import itertools
+    import numpy as np
+    bw = np.asarray(spec.box_weights, dtype=np.float64)
+    r = spec.radius
+    out = []
+    for idx in itertools.product(range(2 * r + 1), repeat=spec.dims):
+        w = float(bw[idx])
+        if w != 0.0:
+            out.append((tuple(i - r for i in idx), w))
+    return out
 
 
-def stencil_step(x: jax.Array, spec: StencilSpec) -> jax.Array:
-    """One time step of the star stencil (any rank matching spec.dims)."""
+def stencil_step(x: jax.Array, spec: StencilSpec, aux=None,
+                 scalars_t=None) -> jax.Array:
+    """One time step of ``spec`` (any rank matching spec.dims).
+
+    ``aux``: dict mapping every spec.aux operand name to a same-shape
+    grid. ``scalars_t``: this step's ``(n_scalars,)`` vector (custom
+    updates only). Source-role operands are added after the update.
+    """
     if x.ndim != spec.dims:
         raise ValueError(f"rank {x.ndim} != spec.dims {spec.dims}")
-    w = spec.weights
-    acc = jnp.asarray(spec.center, x.dtype) * x
-    r = spec.radius
-    for a in range(spec.dims):
-        for o in range(-r, r + 1):
-            coeff = float(w[a, r + o])
-            if o == 0 or coeff == 0.0:
-                continue
-            acc = acc + jnp.asarray(coeff, x.dtype) * _shift(x, a, o)
+    aux = aux or {}
+    missing = [op.name for op in spec.aux if op.name not in aux]
+    if missing:
+        raise ValueError(f"spec {spec.name!r} requires aux operands "
+                         f"{missing}")
+
+    if spec.update is not None:
+        fields = {"x": x}
+        for op in spec.coeff_operands:
+            fields[op.name] = aux[op.name]
+        if spec.n_scalars:
+            if scalars_t is None:
+                raise ValueError(f"spec {spec.name!r} requires "
+                                 f"{spec.n_scalars} per-step scalars")
+            fields["scalars"] = scalars_t
+        acc = spec.update(fields, spec)
+    elif spec.layout == "box":
+        acc = jnp.zeros_like(x)
+        for offsets, w in _box_offsets(spec):
+            acc = acc + jnp.asarray(w, x.dtype) * shift_nd(
+                x, offsets, spec.boundary)
+    else:
+        w = spec.weights
+        acc = jnp.asarray(spec.center, x.dtype) * x
+        r = spec.radius
+        for a in range(spec.dims):
+            for o in range(-r, r + 1):
+                coeff = float(w[a, r + o])
+                if o == 0 or coeff == 0.0:
+                    continue
+                acc = acc + jnp.asarray(coeff, x.dtype) * shift(
+                    x, a, o, spec.boundary)
+
+    for op in spec.source_operands:
+        acc = acc + aux[op.name]
     return acc
 
 
 @functools.partial(jax.jit, static_argnames=("spec", "n_steps"))
 def stencil_multistep(x: jax.Array, spec: StencilSpec, n_steps: int,
-                      source: jax.Array | None = None) -> jax.Array:
+                      source: jax.Array | None = None, aux=None,
+                      scalars: jax.Array | None = None) -> jax.Array:
     """``n_steps`` time steps (the oracle for temporally-blocked kernels).
 
-    ``source`` (optional, same shape as x): a per-step additive grid —
-    the Hotspot "power" input (thesis §4.3.1.2). Each step computes
-    ``g <- stencil(g) + source``.
+    ``source`` (optional, same shape as x): a legacy per-step additive
+    grid — equivalent to an undeclared source-role aux operand (kept so
+    pre-IR call sites and specs without ``aux`` still work). ``aux``:
+    the spec's declared operands by name. ``scalars``: ``(n_steps,
+    n_scalars)`` per-step scalar values for custom updates.
     """
-    if source is None:
-        return jax.lax.fori_loop(
-            0, n_steps, lambda _, g: stencil_step(g, spec), x)
-    return jax.lax.fori_loop(
-        0, n_steps, lambda _, g: stencil_step(g, spec) + source, x)
+    if scalars is not None:
+        scalars = jnp.asarray(scalars, jnp.float32).reshape(n_steps, -1)
+
+    def body(t, g):
+        out = stencil_step(g, spec, aux,
+                           scalars[t] if scalars is not None else None)
+        if source is not None:
+            out = out + source
+        return out
+
+    return jax.lax.fori_loop(0, n_steps, body, x)
 
 
 # ---------------------------------------------------------------------------
