@@ -18,8 +18,8 @@ import json
 import sys
 import traceback
 
-SUITES = ("smoke", "rodinia", "stencil", "scaling", "model_accuracy",
-          "projection")
+SUITES = ("smoke", "rodinia", "stencil", "scaling", "serving",
+          "model_accuracy", "projection")
 
 
 def _json_row(suite: str, r: dict) -> dict:
@@ -68,6 +68,8 @@ def main(argv=None):
                 from benchmarks import stencil_tables as mod
             elif suite == "scaling":
                 from benchmarks import scaling as mod
+            elif suite == "serving":
+                from benchmarks import serving as mod
             elif suite == "model_accuracy":
                 from benchmarks import model_accuracy as mod
             elif suite == "projection":

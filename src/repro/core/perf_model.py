@@ -36,6 +36,11 @@ class TpuSpec:
     vmem_bytes: int = 96 * 2 ** 20
     hbm_bytes: int = 16 * 2 ** 30
     tdp_watts: float = 170.0             # modeled only (DESIGN.md §8)
+    # Host-side cost of launching one kernel (dispatch + queueing).
+    # This is what batching amortizes: B problems per launch pay it
+    # once, so small-grid occupancy rises with B (the serving
+    # front-end's whole reason to exist).
+    dispatch_overhead_s: float = 5e-6
 
 
 V5E = TpuSpec()
@@ -58,6 +63,10 @@ class RooflineTerms:
     flops: float
     hbm_bytes: float
     collective_bytes: float
+    # Modeled dispatch time (launches x per-launch overhead). Not part
+    # of t_predicted (that stays the pure roofline max); it feeds the
+    # occupancy term below and the batch-aware tuner ranking.
+    t_dispatch: float = 0.0
 
     @property
     def t_predicted(self) -> float:
@@ -78,6 +87,14 @@ class RooflineTerms:
             self.t_collective == t) else 1.0
 
     @property
+    def device_busy_fraction(self) -> float:
+        """Modeled fraction of wall-clock the device spends computing
+        rather than waiting on dispatch — the occupancy a batched
+        launch raises on small grids (1.0 = pipeline never drains)."""
+        t = self.t_predicted
+        return 0.0 if t == 0 else t / (t + self.t_dispatch)
+
+    @property
     def exposed_collective_fraction(self) -> float:
         """Modeled fraction of run time spent in *exposed* (un-hidden)
         communication, assuming perfect overlap of collectives with the
@@ -92,7 +109,8 @@ class RooflineTerms:
 
 def stencil_roofline(plan: BlockPlan, n_steps: int, tpu: TpuSpec = V5E,
                      chips: int = 1, read_amplification: float = 1.0,
-                     halo_exchange: bool = False) -> RooflineTerms:
+                     halo_exchange: bool = False,
+                     batch: int = 1) -> RooflineTerms:
     """Roofline terms for running ``n_steps`` of a stencil under ``plan``.
 
     ``halo_exchange``: when the grid is sharded over ``chips`` along its
@@ -104,22 +122,28 @@ def stencil_roofline(plan: BlockPlan, n_steps: int, tpu: TpuSpec = V5E,
     redundancy) but cuts the number of exchanges — the tradeoff the
     device-aware tuner resolves. Stencils are VPU work on TPU, so the
     compute roof is vpu_flops_f32.
+
+    ``batch``: ``B`` independent problems per dispatch (the engine's
+    leading batch axis). The work terms scale by ``B``; the number of
+    *launches* does not — that asymmetry is the modeled occupancy win
+    (``RooflineTerms.device_busy_fraction``) batching buys small grids.
     """
     sweeps = plan.sweeps(n_steps)
-    flops = plan.flops_per_sweep() * sweeps
-    hbm = plan.hbm_bytes_per_sweep(read_amplification) * sweeps
+    flops = batch * plan.flops_per_sweep() * sweeps
+    hbm = batch * plan.hbm_bytes_per_sweep(read_amplification) * sweeps
     coll = 0.0
     if halo_exchange and chips > 1:
         shard = shard_extent(plan.leading, chips)
         slab = (shard + 2 * plan.halo) / shard  # per-device recompute
         flops *= slab
         hbm *= slab
-        coll = plan.halo_bytes_per_exchange() * sweeps
+        coll = batch * plan.halo_bytes_per_exchange() * sweeps
     return RooflineTerms(
         t_compute=flops / (chips * tpu.vpu_flops_f32),
         t_memory=hbm / (chips * tpu.hbm_bw),
         t_collective=coll / tpu.ici_bw if coll else 0.0,
-        flops=flops, hbm_bytes=hbm, collective_bytes=coll)
+        flops=flops, hbm_bytes=hbm, collective_bytes=coll,
+        t_dispatch=sweeps * tpu.dispatch_overhead_s)
 
 
 def predict_gcells_per_s(plan: BlockPlan, n_steps: int, tpu: TpuSpec = V5E,
@@ -142,7 +166,7 @@ def select_config(spec: StencilSpec, grid_shape, n_steps: int,
                   tpu: TpuSpec = V5E, top_k: int = 3,
                   read_amplification: float = 1.0,
                   vmem_budget: int | None = None,
-                  n_devices: int = 1) -> list[BlockPlan]:
+                  n_devices: int = 1, batch: int = 1) -> list[BlockPlan]:
     """The §5.4 pruning step: rank all legal (bx, bt) by predicted time.
 
     Returns the ``top_k`` fastest plans; only these need be compiled and
@@ -150,7 +174,11 @@ def select_config(spec: StencilSpec, grid_shape, n_steps: int,
     need to be placed and routed'). With ``n_devices > 1`` the grid is
     sharded along its leading axis: plans whose deep halo does not fit
     one shard are illegal, and ranking includes the halo-exchange
-    collective term plus the per-device slab recompute.
+    collective term plus the per-device slab recompute. ``batch``
+    scales the work terms (B problems per dispatch) and the ranking
+    charges each plan its modeled dispatch time, so on small grids —
+    where launches, not the roofline, dominate — deeper ``bt`` (fewer
+    launches) wins on merit.
     """
     budget = vmem_budget if vmem_budget is not None else tpu.vmem_bytes
     if n_devices == 1:
@@ -174,10 +202,13 @@ def select_config(spec: StencilSpec, grid_shape, n_steps: int,
         raise ValueError("no legal plan fits VMEM"
                          + (f" with its halo inside a {n_devices}-way shard"
                             if n_devices > 1 else ""))
-    plans.sort(key=lambda p: stencil_roofline(
-        p, n_steps, tpu, chips=n_devices,
-        read_amplification=read_amplification,
-        halo_exchange=n_devices > 1).t_predicted)
+    def _rank(p: BlockPlan) -> float:
+        terms = stencil_roofline(p, n_steps, tpu, chips=n_devices,
+                                 read_amplification=read_amplification,
+                                 halo_exchange=n_devices > 1, batch=batch)
+        return terms.t_predicted + terms.t_dispatch
+
+    plans.sort(key=_rank)
     return plans[:top_k]
 
 

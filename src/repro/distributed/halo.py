@@ -51,6 +51,23 @@ into collective-permute-start/done pairs that run under the interior
 compute). The two ``3h``-deep edge strips are then finished from the
 arrived halos. Both schedules are numerically identical; tests assert
 it.
+
+Batched grids (``x: [B, *grid]``, the engine's leading batch axis) add
+a second partitioning choice, and the runner always prefers the
+cheaper one:
+
+  * **batch-axis sharding** — when ``B % n_devices == 0`` every device
+    owns ``B / n`` *whole* problems and runs the single-device batched
+    engine on them: no halos, no ppermutes, no redundant slab compute,
+    perfect scaling. This is why the serving front-end buckets to
+    device-divisible batch sizes;
+  * **grid sharding** — otherwise the grid's leading axis (array axis
+    1) is sharded exactly as in the unbatched case: every device holds
+    the full batch of its slab rows/planes, and the deep-halo exchange
+    carries ``B`` boundary slices per neighbor.
+
+``shard_strategy`` names the choice; tests pin both the preference and
+the parity of each path against a loop of single-problem runs.
 """
 from __future__ import annotations
 
@@ -75,6 +92,28 @@ def max_bt(spec: StencilSpec, extent: int, n_devices: int) -> int:
     return max(1, shard_extent(extent, n_devices) // spec.radius)
 
 
+def shard_strategy(shape, spec: StencilSpec, n_devices: int) -> str:
+    """How ``stencil_run_sharded`` will partition ``shape``.
+
+    ``"batch"`` when a leading batch axis divides the device count
+    evenly — whole problems per device, no halo exchange at all — else
+    ``"grid"`` (leading *grid* axis sharded with deep halos). The
+    preference is strict: batch-axis sharding is never slower, so a
+    divisible batch always takes it.
+    """
+    batched = len(shape) == spec.dims + 1
+    if batched and n_devices > 1 and shape[0] % n_devices == 0:
+        return "batch"
+    return "grid"
+
+
+def _sl(a, lo, hi, ax: int):
+    """``a[lo:hi]`` along axis ``ax`` (None bounds = open end)."""
+    idx = [slice(None)] * a.ndim
+    idx[ax] = slice(lo, hi)
+    return a[tuple(idx)]
+
+
 def _device_mesh(n_devices: int, devices=None) -> Mesh:
     devs = list(devices) if devices is not None else jax.devices()
     if len(devs) < n_devices:
@@ -84,7 +123,8 @@ def _device_mesh(n_devices: int, devices=None) -> Mesh:
     return Mesh(np.array(devs[:n_devices]), (AXIS,))
 
 
-def exchange_halos(xs: jax.Array, h: int, n: int, axis_name: str = AXIS):
+def exchange_halos(xs: jax.Array, h: int, n: int, axis_name: str = AXIS,
+                   ax: int = 0):
     """ppermute the ``h``-deep boundary slices to both neighbors.
 
     Returns ``(from_above, from_below)``: the previous device's bottom
@@ -92,11 +132,13 @@ def exchange_halos(xs: jax.Array, h: int, n: int, axis_name: str = AXIS):
     receive zeros (ppermute's behavior for uncovered destinations) —
     those rows sit outside the engine's validity interval, so the
     boundary mode (zero / clamp) is what actually applies there.
+    ``ax``: the sharded axis within each array (1 for batched grids,
+    whose axis 0 is the batch riding along whole).
     """
     down = [(i, i + 1) for i in range(n - 1)]   # my bottom h -> next dev
     up = [(i, i - 1) for i in range(1, n)]      # my top h    -> prev dev
-    from_above = jax.lax.ppermute(xs[-h:], axis_name, down)
-    from_below = jax.lax.ppermute(xs[:h], axis_name, up)
+    from_above = jax.lax.ppermute(_sl(xs, -h, None, ax), axis_name, down)
+    from_below = jax.lax.ppermute(_sl(xs, None, h, ax), axis_name, up)
     return from_above, from_below
 
 
@@ -113,12 +155,16 @@ def _engine_call(slab, spec, bx, bts, variant, interpret, extras, scal,
 
 
 def _sweep(xs, spec, *, bx, bts, variant, interpret, idx, n, S, extent,
-           overlap, axis_name, extras, scal):
+           overlap, axis_name, extras, scal, ax=0):
     """One blocked sweep (``bts`` fused steps) on this device's shard.
 
     ``extras``: list of ``(name, from_above, from_below, shard)`` for
     every step-constant operand (halos pre-exchanged at max depth).
-    ``scal``: this sweep's ``(bts, n_scalars)`` slice, or None.
+    ``scal``: this sweep's ``(bts, n_scalars)`` slice (or ``(B, bts,
+    n_scalars)`` per-problem rows), or None. ``ax``: the sharded axis
+    within each array — 0 for plain grids, 1 for ``[B, *grid]`` batches
+    (the validity interval the engine receives is about the *grid*
+    leading axis either way, which is exactly axis ``ax``).
     """
     h = spec.halo(bts)
     row0 = idx * S                    # global coordinate of shard row 0
@@ -128,40 +174,46 @@ def _sweep(xs, spec, *, bx, bts, variant, interpret, idx, n, S, extent,
         coordinates (0 = h rows above the shard top)."""
         out = {}
         for name, ea, eb, es in extras:
-            full = jnp.concatenate([ea[-h:], es, eb[:h]], axis=0)
-            out[name] = full[lo_sl:hi_sl]
+            full = jnp.concatenate(
+                [_sl(ea, -h, None, ax), es, _sl(eb, None, h, ax)], axis=ax)
+            out[name] = _sl(full, lo_sl, hi_sl, ax)
         return out
 
     if not (overlap and S >= 2 * h):
-        fa, fb = exchange_halos(xs, h, n, axis_name)
-        slab = jnp.concatenate([fa, xs, fb], axis=0)
+        fa, fb = exchange_halos(xs, h, n, axis_name, ax)
+        slab = jnp.concatenate([fa, xs, fb], axis=ax)
         lo = jnp.clip(h - row0, 0, S + 2 * h)
         hi = jnp.clip(extent - row0 + h, 0, S + 2 * h)
         out = _engine_call(slab, spec, bx, bts, variant, interpret,
                            slabs(0, S + 2 * h), scal, lo, hi)
-        return out[h: h + S]
+        return _sl(out, h, h + S, ax)
 
     # Overlapped schedule: kick off the halo ppermutes, compute the
     # interior (independent of them), then finish the two edge strips.
-    fa, fb = exchange_halos(xs, h, n, axis_name)
+    fa, fb = exchange_halos(xs, h, n, axis_name, ax)
     if S > 2 * h:      # interior rows [h, S-h) need no halo at all
         hi_own = jnp.clip(extent - row0, 0, S)
-        interior = [_engine_call(xs, spec, bx, bts, variant, interpret,
-                                 {name: es for name, _, _, es in extras},
-                                 scal, 0, hi_own)[h: S - h]]
+        interior = [_sl(_engine_call(
+            xs, spec, bx, bts, variant, interpret,
+            {name: es for name, _, _, es in extras},
+            scal, 0, hi_own), h, S - h, ax)]
     else:              # S == 2h: the two edge strips cover the shard
         interior = []
-    tslab = jnp.concatenate([fa, xs[: 2 * h]], axis=0)        # rows [-h, 2h)
-    bslab = jnp.concatenate([xs[-2 * h:], fb], axis=0)        # rows [S-2h, S+h)
+    tslab = jnp.concatenate([fa, _sl(xs, None, 2 * h, ax)],
+                            axis=ax)                      # rows [-h, 2h)
+    bslab = jnp.concatenate([_sl(xs, -2 * h, None, ax), fb],
+                            axis=ax)                      # rows [S-2h, S+h)
     lo_t = jnp.clip(h - row0, 0, 3 * h)
     hi_t = jnp.clip(extent - row0 + h, 0, 3 * h)
-    top = _engine_call(tslab, spec, bx, bts, variant, interpret,
-                       slabs(0, 3 * h), scal, lo_t, hi_t)[h: 2 * h]
+    top = _sl(_engine_call(tslab, spec, bx, bts, variant, interpret,
+                           slabs(0, 3 * h), scal, lo_t, hi_t),
+              h, 2 * h, ax)
     lo_b = jnp.clip(2 * h - row0 - S, 0, 3 * h)
     hi_b = jnp.clip(extent - row0 - S + 2 * h, 0, 3 * h)
-    bot = _engine_call(bslab, spec, bx, bts, variant, interpret,
-                       slabs(S - h, S + 2 * h), scal, lo_b, hi_b)[h: 2 * h]
-    return jnp.concatenate([top] + interior + [bot], axis=0)
+    bot = _sl(_engine_call(bslab, spec, bx, bts, variant, interpret,
+                           slabs(S - h, S + 2 * h), scal, lo_b, hi_b),
+              h, 2 * h, ax)
+    return jnp.concatenate([top] + interior + [bot], axis=ax)
 
 
 def stencil_run_sharded(x: jax.Array, spec: StencilSpec, n_steps: int, *,
@@ -182,23 +234,40 @@ def stencil_run_sharded(x: jax.Array, spec: StencilSpec, n_steps: int, *,
     exchanged once per call, not once per sweep; ``scalars`` (``
     (n_steps, n_scalars)``, custom updates) are replicated and sliced
     per sweep.
+
+    A ``[B, *grid]`` batch prefers **batch-axis sharding** (whole
+    problems per device, no halo traffic) whenever ``B % n_devices ==
+    0`` and falls back to sharding the grid's leading axis — array
+    axis 1 — otherwise (module docstring; ``shard_strategy`` names the
+    choice). Per-problem scalars ``(B, n_steps, k)`` shard with the
+    batch in the first case and replicate in the second.
     """
-    if x.ndim != spec.dims:
-        raise ValueError(f"grid rank {x.ndim} != spec.dims {spec.dims}")
+    if x.ndim not in (spec.dims, spec.dims + 1):
+        raise ValueError(f"grid rank {x.ndim} != spec.dims {spec.dims} "
+                         f"(or {spec.dims + 1} with a leading batch axis)")
     if n_devices < 1:
         raise ValueError(f"n_devices must be >= 1, got {n_devices}")
-    extent = x.shape[0]
+    batched = x.ndim == spec.dims + 1
+    strategy = shard_strategy(x.shape, spec, n_devices)
+    ga = 1 if batched else 0          # the grid's leading axis
+    extent = x.shape[ga]
     n = n_devices
-    S = shard_extent(extent, n)
-    if spec.radius > S:
-        # Even bt=1 needs an r-deep halo; the boundary slices a shard
-        # sends its neighbors cannot be deeper than the shard itself.
-        # Silently continuing would mis-assemble the slabs, so refuse.
-        raise ValueError(
-            f"stencil radius {spec.radius} exceeds the {S}-deep shard a "
-            f"{n}-way split of the {extent}-deep leading axis leaves per "
-            f"device; reduce n_devices (<= {extent // spec.radius})")
-    bt = max(1, min(bt, n_steps or 1, max_bt(spec, extent, n)))
+    if strategy == "batch":
+        S = extent                    # every device sees whole problems
+    else:
+        S = shard_extent(extent, n)
+        if spec.radius > S:
+            # Even bt=1 needs an r-deep halo; the boundary slices a
+            # shard sends its neighbors cannot be deeper than the shard
+            # itself. Silently continuing would mis-assemble the slabs,
+            # so refuse.
+            raise ValueError(
+                f"stencil radius {spec.radius} exceeds the {S}-deep "
+                f"shard a {n}-way split of the {extent}-deep leading "
+                f"axis leaves per device; reduce n_devices "
+                f"(<= {extent // spec.radius})")
+        bt = min(bt, max_bt(spec, extent, n))
+    bt = max(1, min(bt, n_steps or 1))
     h_max = spec.halo(bt)
     full, rem = divmod(n_steps, bt)
     schedule = [bt] * full + ([rem] if rem else [])
@@ -230,11 +299,22 @@ def stencil_run_sharded(x: jax.Array, spec: StencilSpec, n_steps: int, *,
     extra_names = tuple(extra_names)
 
     if scalars is not None:
-        scalars = jnp.asarray(scalars, jnp.float32).reshape(n_steps, -1)
+        scalars = jnp.asarray(scalars, jnp.float32)
+        if batched and scalars.ndim == 3:
+            scalars = scalars.reshape(x.shape[0], n_steps, -1)
+        else:
+            scalars = scalars.reshape(n_steps, -1)
+    per_problem_scal = scalars is not None and scalars.ndim == 3
 
-    pad = [(0, S * n - extent)] + [(0, 0)] * (x.ndim - 1)
-    xp = jnp.pad(x, pad)
-    args = (xp,) + tuple(jnp.pad(a.astype(x.dtype), pad)
+    if strategy == "batch":
+        pad = None                    # B % n == 0: nothing to pad
+        xp = x
+    else:
+        pad = [(0, 0)] * x.ndim
+        pad[ga] = (0, S * n - extent)
+        xp = jnp.pad(x, pad)
+    args = (xp,) + tuple(a.astype(x.dtype) if pad is None
+                         else jnp.pad(a.astype(x.dtype), pad)
                          for a in extra_arrays)
     if scalars is not None:
         args += (scalars,)
@@ -246,14 +326,18 @@ def stencil_run_sharded(x: jax.Array, spec: StencilSpec, n_steps: int, *,
                          extent, overlap, axis_name, extra_names,
                          scalars is not None,
                          None if scalars is None else scalars.shape,
+                         strategy, ga,
                          tuple(int(d.id) for d in np.asarray(
                              mesh.devices).flat)),
         h_max=h_max, schedule=schedule, bx=bx, variant=variant,
         interpret=interpret, n=n, S=S, extent=extent, overlap=overlap,
         axis_name=axis_name, extra_names=extra_names,
-        has_scalars=scalars is not None)
+        has_scalars=scalars is not None,
+        per_problem_scal=per_problem_scal, strategy=strategy, ga=ga)
     out = runner(*args)
-    return out[:extent]
+    if strategy == "batch":
+        return out
+    return _sl(out, None, extent, ga)
 
 
 # jitted shard_map programs memoized per static configuration: without
@@ -264,36 +348,69 @@ _RUNNERS: dict = {}
 
 def _sharded_runner(spec, mesh, *, key, h_max, schedule, bx, variant,
                     interpret, n, S, extent, overlap, axis_name,
-                    extra_names, has_scalars):
+                    extra_names, has_scalars, per_problem_scal=False,
+                    strategy="grid", ga=0):
     fn = _RUNNERS.get(key)
     if fn is not None:
         return fn
     n_extras = len(extra_names)
+    # Shared/per-problem scalar slicing must match the single-device
+    # path exactly, so reuse its helper rather than re-deriving it.
+    from repro.kernels.ops import _tslice as _tsl
 
-    def body(xs, *rest):
-        idx = jax.lax.axis_index(axis_name)
-        shards = rest[:n_extras]
-        scal = rest[n_extras] if has_scalars else None
-        extras = []
-        for name, es in zip(extra_names, shards):
-            ea, eb = exchange_halos(es, h_max, n, axis_name)
-            extras.append((name, ea, eb, es))
-        off = 0
-        for bts in schedule:
-            xs = _sweep(xs, spec, bx=bx, bts=bts, variant=variant,
-                        interpret=interpret, idx=idx, n=n, S=S,
-                        extent=extent, overlap=overlap,
-                        axis_name=axis_name, extras=extras,
-                        scal=(scal[off: off + bts]
-                              if scal is not None else None))
-            off += bts
-        return xs
+    if strategy == "batch":
+        # Whole problems per device: run the single-device *batched*
+        # engine on this device's B/n problems. No halos, no
+        # ppermutes, no redundant slab compute — the default validity
+        # interval already covers the full (unsharded) grid.
+        def body(xs, *rest):
+            scal = rest[n_extras] if has_scalars else None
+            extras_d = dict(zip(extra_names, rest[:n_extras]))
+            off = 0
+            for bts in schedule:
+                xs = _engine_call(
+                    xs, spec, bx, bts, variant, interpret, extras_d,
+                    _tsl(scal, off, off + bts) if scal is not None
+                    else None, None, None)
+                off += bts
+            return xs
 
-    in_specs = (P(axis_name),) * (1 + n_extras)
-    if has_scalars:
-        in_specs += (P(),)
+        in_specs = (P(axis_name),) * (1 + n_extras)
+        if has_scalars:
+            # Per-problem scalar rows shard with their problems;
+            # shared scalars replicate.
+            in_specs += (P(axis_name) if per_problem_scal else P(),)
+        out_spec = P(axis_name)
+    else:
+        def body(xs, *rest):
+            idx = jax.lax.axis_index(axis_name)
+            shards = rest[:n_extras]
+            scal = rest[n_extras] if has_scalars else None
+            extras = []
+            for name, es in zip(extra_names, shards):
+                ea, eb = exchange_halos(es, h_max, n, axis_name, ga)
+                extras.append((name, ea, eb, es))
+            off = 0
+            for bts in schedule:
+                xs = _sweep(xs, spec, bx=bx, bts=bts, variant=variant,
+                            interpret=interpret, idx=idx, n=n, S=S,
+                            extent=extent, overlap=overlap,
+                            axis_name=axis_name, extras=extras,
+                            scal=(_tsl(scal, off, off + bts)
+                                  if scal is not None else None), ax=ga)
+                off += bts
+            return xs
+
+        # The sharded axis is the grid's leading axis: array axis ga
+        # (batched grids keep their whole batch on every device).
+        shard_p = P(*([None] * ga + [axis_name]))
+        in_specs = (shard_p,) * (1 + n_extras)
+        if has_scalars:
+            in_specs += (P(),)
+        out_spec = shard_p
+
     fn = jax.jit(compat.shard_map(
         body, mesh=mesh, in_specs=in_specs,
-        out_specs=P(axis_name), check_vma=False))
+        out_specs=out_spec, check_vma=False))
     _RUNNERS[key] = fn
     return fn

@@ -46,8 +46,11 @@ from repro.core.blocking import BlockPlan
 from repro.core.perf_model import TpuSpec, V5E, select_config
 from repro.core.stencil import StencilSpec
 
-_CACHE_VERSION = 3   # v3: cache keys grew the IR fields (boundary, tap
-# layout, aux-operand signature, n_scalars); v2 added |nd{n_devices}
+_CACHE_VERSION = 4   # v4: cache keys grew the batch size (|B{n}) and
+# winners may be measured under a batched plan; v3 added the IR fields
+# (boundary, tap layout, aux-operand signature, n_scalars); v2 added
+# |nd{n_devices}. A version mismatch drops the whole file — a v3 entry
+# must never be *misread* as an answer for a batched problem.
 # Grids above this cell count are never timed on the host — the model
 # prior picks alone (measuring a 8192^2 interpret-mode sweep on CPU
 # would dwarf the run it is meant to speed up).
@@ -123,17 +126,22 @@ def clear_cache() -> None:
 
 
 def _key(spec: StencilSpec, shape, dtype: str, backend: str,
-         vmem_budget: int, tpu_name: str, n_devices: int = 1) -> str:
+         vmem_budget: int, tpu_name: str, n_devices: int = 1,
+         batch: int = 1) -> str:
     sh = "x".join(str(s) for s in shape)
     # IR fields: boundary mode and tap layout change the kernel's work
     # per cell; the aux-operand signature and per-step scalar count
     # change its operand streaming — a tuned answer transfers to none
-    # of them (docs/autotuning.md has the full schema).
+    # of them (docs/autotuning.md has the full schema). ``shape`` is
+    # the *grid* shape; the batch size rides separately (|B{n}) because
+    # a B-problem dispatch amortizes launches differently than a grid
+    # B-times taller.
     aux_sig = ",".join(f"{op.role[0]}" for op in spec.aux) or "-"
     ir = (f"b{spec.boundary}|L{spec.layout}|ax{aux_sig}|"
           f"sc{spec.n_scalars}")
     return (f"{spec.name}|d{spec.dims}|r{spec.radius}|{ir}|{sh}|{dtype}|"
-            f"{backend}|vm{vmem_budget}|{tpu_name}|nd{n_devices}")
+            f"{backend}|vm{vmem_budget}|{tpu_name}|B{batch}|"
+            f"nd{n_devices}")
 
 
 # ---------------------------------------------------------------------------
@@ -206,16 +214,32 @@ def plan(shape, spec: StencilSpec, *, dtype="float32",
     single device — the shortlist keeps only plans whose halo fits one
     shard, the model prior weighs halo redundancy against exchange
     frequency, and measurement times the sharded path.
+
+    ``shape`` of rank ``spec.dims + 1`` is a ``[B, *grid]`` batch: the
+    block plan covers one problem (the batch is an outer grid
+    dimension, so (bx, bt) legality is per-problem), B joins the cache
+    key, the model ranks with B-scaled work + amortized dispatch, and
+    measurement times the actual batched dispatch. When the batch
+    divides the device count the sharded runner splits the batch axis
+    (whole problems per device, no halo traffic), so the model prices
+    the per-device slice without a collective term.
     """
     from repro.kernels import ops
     shape = tuple(int(s) for s in shape)
+    if len(shape) not in (spec.dims, spec.dims + 1):
+        raise ValueError(
+            f"shape {shape} matches neither spec.dims {spec.dims} nor "
+            f"{spec.dims + 1} (a [B, *grid] batch)")
+    batch = shape[0] if len(shape) == spec.dims + 1 else None
+    grid = shape[1:] if batch is not None else shape
     dtype = str(jnp.dtype(dtype).name)
     backend = ops.resolve_backend(backend)
     budget = vmem_budget if vmem_budget is not None else tpu.vmem_bytes
-    key = _key(spec, shape, dtype, backend, budget, tpu.name, n_devices)
+    key = _key(spec, grid, dtype, backend, budget, tpu.name, n_devices,
+               batch or 1)
 
     def _mk(bx, bt, variant, source, timings=None):
-        bp = BlockPlan(spec, shape, bx=bx, bt=bt,
+        bp = BlockPlan(spec, grid, bx=bx, bt=bt,
                        itemsize=jnp.dtype(dtype).itemsize)
         return TunedPlan(bx=bx, bt=bt, variant=variant, source=source,
                          block_plan=bp, timings=timings or {})
@@ -229,9 +253,15 @@ def plan(shape, spec: StencilSpec, *, dtype="float32",
                                 and hit.get("source") != "measured"):
         return _mk(hit["bx"], hit["bt"], hit["variant"], "cache")
 
+    # Batch-axis sharding (B % nd == 0): each device owns whole
+    # problems, so plans are ranked per-device — no halo constraint,
+    # no collective term, B/nd problems per dispatch.
+    eff_nd, eff_batch = n_devices, batch or 1
+    if batch is not None and n_devices > 1 and batch % n_devices == 0:
+        eff_nd, eff_batch = 1, batch // n_devices
     shortlist = select_config(
-        spec, shape, n_steps, tpu=tpu, top_k=top_k,
-        vmem_budget=vmem_budget, n_devices=n_devices)
+        spec, grid, n_steps, tpu=tpu, top_k=top_k,
+        vmem_budget=vmem_budget, n_devices=eff_nd, batch=eff_batch)
     variants = _variants_for(spec, backend)
 
     cells = 1

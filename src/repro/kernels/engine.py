@@ -41,7 +41,18 @@ dimension-*specific* arithmetic is injected as a plugin:
     The bounds may be traced scalars, which is what lets the
     multi-device deep-halo runner (``distributed/halo.py``) mark
     per-device ghost rows and shard padding as outside-grid under a
-    single SPMD program.
+    single SPMD program;
+  * the **batch axis**: a grid of shape ``[B, *grid]`` runs all ``B``
+    independent problems in one ``pallas_call`` — the batch is lowered
+    as the *outermost* grid dimension, so the (bx, bt) plan, VMEM
+    working set and per-slab boundary/validity logic are exactly the
+    single-problem ones and each batch slab's arithmetic is
+    instruction-identical to a solo run (tests assert bitwise equality
+    against a Python loop). The revolving scratches re-initialize at
+    tile 0 of every batch row, so one compilation serves the whole
+    batch and problems can never read each other's cells.
+    ``stencil_call_vmap`` keeps a ``jax.vmap``-over-the-engine fallback
+    as a differential oracle for this lowering.
 
 Plugins (see ``stencil2d._apply_2d`` / ``stencil3d._apply_3d``):
 
@@ -174,17 +185,26 @@ def _unpack_2d(refs, has_scal: bool, n_per: int, has_src: bool,
     return lim, scal, xg, sg, cgs, out, it
 
 
+def _reader(batched: bool):
+    """Ref -> [rows, cols] block view: batched blocks carry a leading
+    size-1 batch dim that the kernel body never needs to see."""
+    if batched:
+        return lambda ref: ref[0]
+    return lambda ref: ref[...]
+
+
 def _kernel_2d_multi(*refs, spec, bx, bt, true_w, has_src, coeff_meta,
-                     has_scal, apply_fn):
+                     has_scal, apply_fn, batched=False):
     lim_ref, scal_ref, xg, sg, cgs, o_ref, _ = _unpack_2d(
         refs, has_scal, 3, has_src, len(coeff_meta))
+    rd = _reader(batched)
     row_lo, row_hi = lim_ref[0, 0], lim_ref[0, 1]
-    i = pl.program_id(0)
+    i = pl.program_id(1 if batched else 0)
     halo = spec.halo(bt)
-    rows = xg[1].shape[0]
+    rows = xg[1].shape[-2]
 
     def window(tri):
-        cat = jnp.concatenate([tri[0][...], tri[1][...], tri[2][...]],
+        cat = jnp.concatenate([rd(tri[0]), rd(tri[1]), rd(tri[2])],
                               axis=1)
         return cat[:, bx - halo: 2 * bx + halo]
 
@@ -196,17 +216,21 @@ def _kernel_2d_multi(*refs, spec, bx, bt, true_w, has_src, coeff_meta,
     src = fill_for("dirichlet0")(window(sg)) if has_src else None
     coeff = {name: fill_for(bnd)(window(tri))
              for (name, bnd), tri in zip(coeff_meta, cgs)}
-    scal = scal_ref[...] if has_scal else None
+    scal = rd(scal_ref) if has_scal else None
     win = fused_steps(window(xg), spec, bt, apply_fn, fill,
                       src=src, coeff=coeff or None, scalars=scal)
-    o_ref[...] = win[:, halo: halo + bx]
+    if batched:
+        o_ref[0] = win[:, halo: halo + bx]
+    else:
+        o_ref[...] = win[:, halo: halo + bx]
 
 
 def _kernel_2d_revolving(*refs, spec, bx, bt, true_w, has_src, coeff_meta,
-                         has_scal, apply_fn):
+                         has_scal, apply_fn, batched=False):
     n_coeff = len(coeff_meta)
     lim_ref, scal_ref, (x_ref,), sg, cgs, o_ref, it = _unpack_2d(
         refs, has_scal, 1, has_src, n_coeff)
+    rd = _reader(batched)
     s_ref = sg[0] if has_src else None
     c_refs = [tri[0] for tri in cgs]
     bufs = [next(it)]                       # main revolving scratch
@@ -214,9 +238,12 @@ def _kernel_2d_revolving(*refs, spec, bx, bt, true_w, has_src, coeff_meta,
         bufs.append(next(it))
     bufs += [next(it) for _ in range(n_coeff)]
     row_lo, row_hi = lim_ref[0, 0], lim_ref[0, 1]
-    i = pl.program_id(0)
+    # The batch axis is the *outer* grid dimension, so tiles run
+    # 0..nt per batch row and the i == 0 init below re-arms the
+    # revolving scratches for every problem — slabs can't leak.
+    i = pl.program_id(1 if batched else 0)
     halo = spec.halo(bt)
-    rows = x_ref.shape[0]
+    rows = x_ref.shape[-2]
 
     @pl.when(i == 0)
     def _init():
@@ -237,7 +264,7 @@ def _kernel_2d_revolving(*refs, spec, bx, bt, true_w, has_src, coeff_meta,
     inb = (cols < true_w) & (rr >= row_lo) & (rr < row_hi)
     streams = [x_ref] + ([s_ref] if has_src else []) + c_refs
     for b, r_in in zip(bufs, streams):
-        b[:, 2 * bx:] = jnp.where(inb, r_in[...], 0)
+        b[:, 2 * bx:] = jnp.where(inb, rd(r_in), 0)
 
     # Compute output tile i-1 from the assembled windows.
     def window(b):
@@ -252,10 +279,13 @@ def _kernel_2d_revolving(*refs, spec, bx, bt, true_w, has_src, coeff_meta,
     cbufs = bufs[1 + int(has_src):]
     coeff = {name: fill_for(bnd)(window(b))
              for (name, bnd), b in zip(coeff_meta, cbufs)}
-    scal = scal_ref[...] if has_scal else None
+    scal = rd(scal_ref) if has_scal else None
     win = fused_steps(window(bufs[0]), spec, bt, apply_fn, fill,
                       src=src, coeff=coeff or None, scalars=scal)
-    o_ref[...] = win[:, halo: halo + bx]
+    if batched:
+        o_ref[0] = win[:, halo: halo + bx]
+    else:
+        o_ref[...] = win[:, halo: halo + bx]
 
 
 # ---------------------------------------------------------------------------
@@ -269,18 +299,23 @@ def _kernel_2d_revolving(*refs, spec, bx, bt, true_w, has_src, coeff_meta,
 # ---------------------------------------------------------------------------
 
 def _kernel_3d_stream(*refs, spec, bx, bt, true_h, true_w, has_src,
-                      apply_fn):
+                      apply_fn, batched=False):
     if has_src:
         (lim_ref, xl_ref, xc_ref, xr_ref, sl_ref, sc_ref, sr_ref, o_ref,
          win_ref, src_ref) = refs
     else:
         lim_ref, xl_ref, xc_ref, xr_ref, o_ref, win_ref = refs
+    # Batched blocks are (1, 1, rows, bx): drop the batch dim so the
+    # plane pipeline below is identical to the single-problem one. The
+    # batch axis is the outermost grid dim, so k restarts (and the
+    # rolling windows re-zero at k == 0) for every (batch, x-tile).
+    rd = (lambda ref: ref[0, 0]) if batched else (lambda ref: ref[0])
     d_lo, d_hi = lim_ref[0, 0], lim_ref[0, 1]
-    i = pl.program_id(0)       # x tile
-    k = pl.program_id(1)       # z pipeline step
+    i = pl.program_id(1 if batched else 0)       # x tile
+    k = pl.program_id(2 if batched else 1)       # z pipeline step
     r = spec.radius
     halo = spec.halo(bt)
-    rows = xc_ref.shape[1]
+    rows = xc_ref.shape[-2]
     clamp = spec.boundary == "clamp"
 
     @pl.when(k == 0)
@@ -296,7 +331,7 @@ def _kernel_3d_stream(*refs, spec, bx, bt, true_h, true_w, has_src,
                              0, true_h)
 
     # ---- assemble the input plane window for z = k (stage-0 input) ----
-    cat = jnp.concatenate([xl_ref[0], xc_ref[0], xr_ref[0]], axis=1)
+    cat = jnp.concatenate([rd(xl_ref), rd(xc_ref), rd(xr_ref)], axis=1)
     plane = cat[:, bx - halo: 2 * bx + halo]
     xymask = window_mask(i, bx, halo, rows, true_w, 0, true_h)
     zero = jnp.zeros_like(plane)
@@ -313,7 +348,7 @@ def _kernel_3d_stream(*refs, spec, bx, bt, true_h, true_w, has_src,
         # plane k; stage s reads its output plane's source at the
         # *static* slot bt*r - (s+1)*r. Sources are center-tap only, so
         # they are zero-filled outside the grid in either boundary mode.
-        scat = jnp.concatenate([sl_ref[0], sc_ref[0], sr_ref[0]], axis=1)
+        scat = jnp.concatenate([rd(sl_ref), rd(sc_ref), rd(sr_ref)], axis=1)
         splane = scat[:, bx - halo: 2 * bx + halo]
         splane = jnp.where(xymask & zin, splane, zero)
         for j in range(bt * r):
@@ -339,7 +374,10 @@ def _kernel_3d_stream(*refs, spec, bx, bt, true_h, true_w, has_src,
             plane = jnp.where(xymask & (z_out >= d_lo) & (z_out < d_hi),
                               updated, zero)
 
-    o_ref[0] = plane[:, halo: halo + bx]
+    if batched:
+        o_ref[0, 0] = plane[:, halo: halo + bx]
+    else:
+        o_ref[0] = plane[:, halo: halo + bx]
 
 
 # ---------------------------------------------------------------------------
@@ -356,9 +394,10 @@ def _limits(lo, hi, true_n: int) -> jax.Array:
 
 def _run_2d(x, spec, plan: BlockPlan, bx, bt, variant, interpret, source,
             coeffs, scalars, apply_fn, valid_lo, valid_hi):
-    true_h, true_w = x.shape
+    batched = x.ndim == 3
+    true_h, true_w = x.shape[-2:]
     hp, wp = plan.padded_rows, plan.padded_width
-    pad2 = ((0, hp - true_h), (0, wp - true_w))
+    pad2 = ((0, 0),) * (x.ndim - 2) + ((0, hp - true_h), (0, wp - true_w))
     xp = jnp.pad(x, pad2)
     has_src = source is not None
     sp = jnp.pad(source.astype(x.dtype), pad2) if has_src else None
@@ -367,48 +406,66 @@ def _run_2d(x, spec, plan: BlockPlan, bx, bt, variant, interpret, source,
                        for op in spec.coeff_operands)
     has_scal = scalars is not None
     rows, nt = plan.padded_rows, plan.n_tiles
-    block = (rows, bx)
+
+    # The batch axis lowers as the outermost grid dimension: every
+    # BlockSpec grows a leading size-1 batch block whose index is the
+    # batch-grid coordinate, and everything else (plan, scratches,
+    # boundary logic) is untouched — one compilation for any B.
+    def im(f):
+        """Lift a tile-index map to the (possibly batched) grid."""
+        return (lambda b, i: (b,) + f(i)) if batched else f
+
+    block = ((1,) if batched else ()) + (rows, bx)
     lim = _limits(valid_lo, valid_hi, true_h)
-    lim_spec = pl.BlockSpec((1, 2), lambda i: (0, 0))
+    lim_spec = pl.BlockSpec((1, 2), lambda *_: (0, 0))
     head_specs = [lim_spec]
     head_args = [lim]
     if has_scal:
-        head_specs.append(pl.BlockSpec(scalars.shape, lambda i: (0, 0)))
+        if batched:          # per-problem (B, bt, n_scalars) rows
+            head_specs.append(pl.BlockSpec(
+                (1,) + scalars.shape[1:], lambda b, i: (b, 0, 0)))
+        else:
+            head_specs.append(pl.BlockSpec(scalars.shape,
+                                           lambda *_: (0, 0)))
         head_args.append(scalars)
-    params = tpu_compiler_params(dimension_semantics=("arbitrary",))
+    params = tpu_compiler_params(
+        dimension_semantics=("arbitrary",) * (2 if batched else 1))
     kern_kw = dict(spec=spec, bx=bx, bt=bt, true_w=true_w,
                    has_src=has_src, coeff_meta=coeff_meta,
-                   has_scal=has_scal, apply_fn=apply_fn)
+                   has_scal=has_scal, apply_fn=apply_fn, batched=batched)
     n_streamed = 1 + int(has_src) + len(cps)
     streamed = [xp] + ([sp] if has_src else []) + cps
+    grid = ((x.shape[0],) if batched else ()) + (nt,)
 
     if variant == "multioperand":
         kern = functools.partial(_kernel_2d_multi, **kern_kw)
         tri_specs = [
-            pl.BlockSpec(block, lambda i: (0, jnp.maximum(i - 1, 0))),
-            pl.BlockSpec(block, lambda i: (0, i)),
-            pl.BlockSpec(block, lambda i: (0, jnp.minimum(i + 1, nt - 1))),
+            pl.BlockSpec(block, im(lambda i: (0, jnp.maximum(i - 1, 0)))),
+            pl.BlockSpec(block, im(lambda i: (0, i))),
+            pl.BlockSpec(block,
+                         im(lambda i: (0, jnp.minimum(i + 1, nt - 1)))),
         ]
         out = pl.pallas_call(
             kern,
-            grid=(nt,),
+            grid=grid,
             in_specs=head_specs + tri_specs * n_streamed,
-            out_specs=pl.BlockSpec(block, lambda i: (0, i)),
+            out_specs=pl.BlockSpec(block, im(lambda i: (0, i))),
             out_shape=jax.ShapeDtypeStruct(xp.shape, xp.dtype),
             compiler_params=params,
             interpret=interpret,
         )(*(head_args + [a for a in streamed for _ in range(3)]))
     elif variant == "revolving":
         kern = functools.partial(_kernel_2d_revolving, **kern_kw)
-        in_spec = pl.BlockSpec(block, lambda i: (0, jnp.minimum(i, nt - 1)))
+        in_spec = pl.BlockSpec(block,
+                               im(lambda i: (0, jnp.minimum(i, nt - 1))))
         scratch = [pltpu.VMEM((rows, 3 * bx), xp.dtype)
                    for _ in range(n_streamed)]
         out = pl.pallas_call(
             kern,
-            grid=(nt + 1,),
+            grid=grid[:-1] + (nt + 1,),
             in_specs=head_specs + [in_spec] * n_streamed,
-            out_specs=pl.BlockSpec(block,
-                                   lambda i: (0, jnp.maximum(i - 1, 0))),
+            out_specs=pl.BlockSpec(
+                block, im(lambda i: (0, jnp.maximum(i - 1, 0)))),
             out_shape=jax.ShapeDtypeStruct(xp.shape, xp.dtype),
             scratch_shapes=scratch,
             compiler_params=params,
@@ -417,7 +474,7 @@ def _run_2d(x, spec, plan: BlockPlan, bx, bt, variant, interpret, source,
     else:
         raise ValueError(f"unknown 2D variant {variant!r}; "
                          f"expected one of {VARIANTS_2D}")
-    return out[:true_h, :true_w]
+    return out[..., :true_h, :true_w]
 
 
 def _run_3d(x, spec, plan: BlockPlan, bx, bt, variant, interpret, source,
@@ -425,45 +482,54 @@ def _run_3d(x, spec, plan: BlockPlan, bx, bt, variant, interpret, source,
     if variant not in VARIANTS_3D:
         raise ValueError(f"unknown 3D variant {variant!r}; "
                          f"expected one of {VARIANTS_3D}")
-    true_d, true_h, true_w = x.shape
+    batched = x.ndim == 4
+    true_d, true_h, true_w = x.shape[-3:]
     rows, nt, r = plan.padded_rows, plan.n_tiles, spec.radius
     fill = bt * r
     has_src = source is not None
-    pad3 = ((0, 0), (0, rows - true_h), (0, plan.padded_width - true_w))
+    pad3 = ((0, 0),) * (x.ndim - 2) + (
+        (0, rows - true_h), (0, plan.padded_width - true_w))
     xp = jnp.pad(x, pad3)
     sp = jnp.pad(source.astype(x.dtype), pad3) if has_src else None
-    block = (1, rows, bx)
+
+    def im(f):
+        """Lift an (i, k) index map to the (possibly batched) grid."""
+        return (lambda b, i, k: (b,) + f(i, k)) if batched else f
+
+    block = ((1,) if batched else ()) + (1, rows, bx)
     lim = _limits(valid_lo, valid_hi, true_d)
-    lim_spec = pl.BlockSpec((1, 2), lambda i, k: (0, 0))
+    lim_spec = pl.BlockSpec((1, 2), lambda *_: (0, 0))
 
     kern = functools.partial(_kernel_3d_stream, spec=spec, bx=bx, bt=bt,
                              true_h=true_h, true_w=true_w,
-                             has_src=has_src, apply_fn=apply_fn)
+                             has_src=has_src, apply_fn=apply_fn,
+                             batched=batched)
     tri_specs = [
-        pl.BlockSpec(block, lambda i, k: (
-            jnp.minimum(k, true_d - 1), 0, jnp.maximum(i - 1, 0))),
-        pl.BlockSpec(block, lambda i, k: (
-            jnp.minimum(k, true_d - 1), 0, i)),
-        pl.BlockSpec(block, lambda i, k: (
-            jnp.minimum(k, true_d - 1), 0, jnp.minimum(i + 1, nt - 1))),
+        pl.BlockSpec(block, im(lambda i, k: (
+            jnp.minimum(k, true_d - 1), 0, jnp.maximum(i - 1, 0)))),
+        pl.BlockSpec(block, im(lambda i, k: (
+            jnp.minimum(k, true_d - 1), 0, i))),
+        pl.BlockSpec(block, im(lambda i, k: (
+            jnp.minimum(k, true_d - 1), 0, jnp.minimum(i + 1, nt - 1)))),
     ]
     scratch = [pltpu.VMEM((bt, 2 * r + 1, rows, bx + 2 * bt * r), xp.dtype)]
     if has_src:
         scratch.append(
             pltpu.VMEM((bt * r + 1, rows, bx + 2 * bt * r), xp.dtype))
+    grid = ((x.shape[0],) if batched else ()) + (nt, true_d + fill)
     out = pl.pallas_call(
         kern,
-        grid=(nt, true_d + fill),
+        grid=grid,
         in_specs=[lim_spec] + tri_specs * (2 if has_src else 1),
-        out_specs=pl.BlockSpec(block, lambda i, k: (
-            jnp.maximum(k - fill, 0), 0, i)),
+        out_specs=pl.BlockSpec(block, im(lambda i, k: (
+            jnp.maximum(k - fill, 0), 0, i))),
         out_shape=jax.ShapeDtypeStruct(xp.shape, xp.dtype),
         scratch_shapes=scratch,
         compiler_params=tpu_compiler_params(
-            dimension_semantics=("arbitrary", "arbitrary")),
+            dimension_semantics=("arbitrary",) * len(grid)),
         interpret=interpret,
     )(*((lim, xp, xp, xp, sp, sp, sp) if has_src else (lim, xp, xp, xp)))
-    return out[:true_d, :true_h, :true_w]
+    return out[..., :true_d, :true_h, :true_w]
 
 
 @functools.partial(jax.jit,
@@ -492,10 +558,24 @@ def stencil_call(x: jax.Array, spec: StencilSpec, *, bx: int, bt: int,
     May be traced scalars; defaults to the full extent. Used by
     ``distributed/halo.py`` to mark ghost halos and shard padding
     under one SPMD program.
+
+    **Batched execution**: ``x`` of rank ``spec.dims + 1`` is a batch
+    of ``B`` independent problems sharing one spec and grid shape. The
+    batch lowers as the outermost Pallas grid dimension (module
+    docstring); every aux/source operand must then be ``[B, *grid]``
+    too, and ``scalars`` is either shared ``(bt, n_scalars)`` or
+    per-problem ``(B, bt, n_scalars)``. Each problem's result is
+    bitwise-identical to its solo run. ``valid_lo``/``valid_hi`` keep
+    their meaning — they bound the *grid's* leading axis (rows/planes),
+    which all problems in a batch share.
     """
-    if x.ndim != spec.dims:
+    if x.ndim not in (spec.dims, spec.dims + 1):
         raise ValueError(
-            f"grid rank {x.ndim} != spec.dims {spec.dims}")
+            f"grid rank {x.ndim} != spec.dims {spec.dims} (or "
+            f"{spec.dims + 1} with a leading batch axis)")
+    batched = x.ndim == spec.dims + 1
+    if batched and x.shape[0] == 0:
+        raise ValueError("batched grid must have at least one problem")
     aux = dict(aux) if aux else {}
     names = [op.name for op in spec.aux]
     missing = [n for n in names if n not in aux]
@@ -523,12 +603,26 @@ def stencil_call(x: jax.Array, spec: StencilSpec, *, bx: int, bt: int,
         if scalars is None:
             raise ValueError(f"spec {spec.name!r} requires scalars of "
                              f"shape ({bt}, {spec.n_scalars})")
-        scalars = jnp.asarray(scalars, jnp.float32).reshape(
-            bt, spec.n_scalars)
+        scalars = jnp.asarray(scalars, jnp.float32)
+        if batched:
+            B = x.shape[0]
+            if scalars.ndim == 3:
+                if scalars.shape[0] != B:
+                    raise ValueError(
+                        f"scalars batch dim {scalars.shape[0]} != grid "
+                        f"batch dim {B}")
+                scalars = scalars.reshape(B, bt, spec.n_scalars)
+            else:     # shared across the batch: broadcast per problem
+                scalars = jnp.broadcast_to(
+                    scalars.reshape(bt, spec.n_scalars),
+                    (B, bt, spec.n_scalars))
+        else:
+            scalars = scalars.reshape(bt, spec.n_scalars)
     elif scalars is not None:
         raise ValueError("scalars passed but spec.n_scalars == 0")
 
-    plan = BlockPlan(spec, x.shape, bx=bx, bt=bt, itemsize=x.dtype.itemsize)
+    plan = BlockPlan(spec, x.shape[-spec.dims:], bx=bx, bt=bt,
+                     itemsize=x.dtype.itemsize)
     if spec.dims == 2:
         if apply_fn is None:
             from repro.kernels.stencil2d import _apply_2d as apply_fn
@@ -539,3 +633,40 @@ def stencil_call(x: jax.Array, spec: StencilSpec, *, bx: int, bt: int,
         from repro.kernels.stencil3d import _apply_3d as apply_fn
     return _run_3d(x, spec, plan, bx, bt, variant, interpret,
                    combined_src, apply_fn, valid_lo, valid_hi)
+
+
+def stencil_call_vmap(x: jax.Array, spec: StencilSpec, *, bx: int, bt: int,
+                      variant: str = "revolving", interpret: bool = True,
+                      source: jax.Array | None = None, aux=None,
+                      scalars: jax.Array | None = None,
+                      apply_fn=None) -> jax.Array:
+    """Differential oracle for the native batched lowering.
+
+    Runs the batch through ``jax.vmap`` of the *single-problem* engine
+    (Pallas's batching rule also prepends a grid dimension, but through
+    an entirely independent code path), so a bug in the hand-rolled
+    batch lowering cannot hide: tests assert the two are bitwise equal.
+    Not a serving path — use ``stencil_call`` with a batched grid.
+    """
+    if x.ndim != spec.dims + 1:
+        raise ValueError(f"stencil_call_vmap needs a [B, *grid] input of "
+                         f"rank {spec.dims + 1}, got rank {x.ndim}")
+    B = x.shape[0]
+    aux = dict(aux) if aux else None
+    if spec.n_scalars and scalars is not None:
+        scalars = jnp.asarray(scalars, jnp.float32)
+        if scalars.ndim != 3:       # shared: same (bt, n) for every slab
+            scalars = jnp.broadcast_to(
+                scalars.reshape(bt, spec.n_scalars),
+                (B, bt, spec.n_scalars))
+
+    def call(x1, src1, aux1, scal1):
+        return stencil_call(x1, spec, bx=bx, bt=bt, variant=variant,
+                            interpret=interpret, source=src1, aux=aux1,
+                            scalars=scal1, apply_fn=apply_fn)
+
+    in_axes = (0,
+               None if source is None else 0,
+               None if aux is None else {k: 0 for k in aux},
+               None if scalars is None else 0)
+    return jax.vmap(call, in_axes=in_axes)(x, source, aux, scalars)

@@ -29,6 +29,16 @@ exchanged once per fused time block. The autotuner resolution becomes
 device-count-aware. The ``reference`` backend ignores ``n_devices``
 (the oracle is the single-device ground truth the sharded path is
 tested against).
+
+Batched execution: an ``x`` of rank ``spec.dims + 1`` is a ``[B,
+*grid]`` batch of independent problems solved in one dispatch (the
+batch is an outer Pallas grid dimension — see kernels/engine.py). All
+aux/source operands must carry the same batch axis; ``scalars`` may be
+shared ``(n_steps, k)`` or per-problem ``(B, n_steps, k)``. Mismatched
+batch dims are rejected here, before anything reaches a kernel. With
+``n_devices > 1`` the sharded runner splits the *batch* axis when it
+divides the device count evenly (whole problems per device, no halo
+traffic) and falls back to grid sharding otherwise.
 """
 from __future__ import annotations
 
@@ -52,6 +62,64 @@ def _resolve(backend: str) -> str:
 
 
 resolve_backend = _resolve
+
+
+def batch_of(x, spec: StencilSpec):
+    """Batch size of ``x`` under ``spec``: ``None`` for a plain grid,
+    ``B`` for a ``[B, *grid]`` batch, loud error for any other rank."""
+    if x.ndim == spec.dims:
+        return None
+    if x.ndim == spec.dims + 1:
+        return x.shape[0]
+    raise ValueError(
+        f"grid rank {x.ndim} matches neither spec.dims {spec.dims} nor "
+        f"{spec.dims + 1} (a [B, *grid] batch) for spec {spec.name!r}")
+
+
+def _validate_batch(x, spec: StencilSpec, aux, scalars, source):
+    """Reject batch-dim mismatches on operands *before* the kernel.
+
+    Without this, a forgotten batch axis on an aux operand surfaces as
+    an opaque shape error from inside the engine (or worse, a rank
+    error from ``jnp.pad``); every mismatch gets its own message here.
+    """
+    B = batch_of(x, spec)
+    grid = x.shape[1:] if B is not None else x.shape
+    operands = dict(aux) if aux else {}
+    if source is not None:
+        operands["source"] = source
+    for name, a in operands.items():
+        if B is not None:
+            if a.ndim == spec.dims:
+                raise ValueError(
+                    f"operand {name!r} has shape {a.shape} but the grid "
+                    f"is a batch of {B}: it is missing the batch axis "
+                    f"(expected {(B,) + grid})")
+            if a.ndim == spec.dims + 1 and a.shape[0] != B:
+                raise ValueError(
+                    f"operand {name!r} batch dim {a.shape[0]} != grid "
+                    f"batch dim {B}")
+        elif a.ndim == spec.dims + 1:
+            raise ValueError(
+                f"operand {name!r} has shape {a.shape} with a batch "
+                f"axis, but the grid {x.shape} is unbatched")
+    if scalars is not None and spec.n_scalars:
+        sdim = jax.numpy.ndim(scalars)
+        sshape = jax.numpy.shape(scalars)
+        if B is not None and sdim == 3 and sshape[0] != B:
+            raise ValueError(
+                f"scalars batch dim {sshape[0]} != grid batch dim {B}")
+        if B is None and sdim == 3:
+            raise ValueError(
+                f"scalars shape {sshape} is per-problem (rank 3), but "
+                f"the grid {x.shape} is unbatched")
+    return B
+
+
+def _tslice(scalars, a: int, b: int):
+    """Per-sweep time slice of shared ``(T, k)`` or per-problem
+    ``(B, T, k)`` scalars."""
+    return scalars[:, a:b] if scalars.ndim == 3 else scalars[a:b]
 
 
 def _resolve_blocking(x, spec, bx, bt, variant, backend, n_steps=None,
@@ -93,12 +161,14 @@ def stencil_sweep(x: jax.Array, spec: StencilSpec, bx: int | None = None,
 
     ``bx``/``bt``/``variant`` default to the autotuner's (device-count-
     aware) choice, exactly like ``stencil_run``. ``scalars``: ``(bt,
-    n_scalars)`` per-step values for custom updates. ``n_devices > 1``
-    runs the sweep through the deep-halo sharded runner (one halo
-    exchange for this block).
+    n_scalars)`` per-step values for custom updates (``(B, bt,
+    n_scalars)`` for per-problem values over a batched grid).
+    ``n_devices > 1`` runs the sweep through the deep-halo sharded
+    runner (one halo exchange for this block).
     """
     backend = _resolve(backend)
     nd = 1 if n_devices is None else n_devices
+    _validate_batch(x, spec, aux, scalars, source)
     bx, bt, variant = _resolve_blocking(x, spec, bx, bt, variant, backend,
                                         n_devices=nd)
     if backend == "reference":
@@ -138,12 +208,17 @@ def stencil_run(x: jax.Array, spec: StencilSpec, n_steps: int,
     """
     backend = _resolve(backend)
     nd = 1 if n_devices is None else n_devices
+    B = _validate_batch(x, spec, aux, scalars, source)
     bx, bt, variant = _resolve_blocking(x, spec, bx, bt, variant, backend,
                                         n_steps=n_steps, n_devices=nd)
     bt = min(bt, n_steps) if n_steps else bt
     if scalars is not None:
         import jax.numpy as jnp
-        scalars = jnp.asarray(scalars, jnp.float32).reshape(n_steps, -1)
+        scalars = jnp.asarray(scalars, jnp.float32)
+        if B is not None and scalars.ndim == 3:
+            scalars = scalars.reshape(B, n_steps, -1)
+        else:
+            scalars = scalars.reshape(n_steps, -1)
     if nd > 1 and backend != "reference":
         from repro.distributed import halo
         return halo.stencil_run_sharded(
@@ -155,13 +230,13 @@ def stencil_run(x: jax.Array, spec: StencilSpec, n_steps: int,
     for _ in range(full):
         x = stencil_sweep(x, spec, bx=bx, bt=bt, backend=backend,
                           variant=variant, source=source, aux=aux,
-                          scalars=(scalars[done:done + bt]
+                          scalars=(_tslice(scalars, done, done + bt)
                                    if scalars is not None else None))
         done += bt
     if rem:
         x = stencil_sweep(x, spec, bx=bx, bt=rem, backend=backend,
                           variant=variant, source=source, aux=aux,
-                          scalars=(scalars[done:done + rem]
+                          scalars=(_tslice(scalars, done, done + rem)
                                    if scalars is not None else None))
     return x
 

@@ -92,7 +92,25 @@ def stencil_multistep(x: jax.Array, spec: StencilSpec, n_steps: int,
     pre-IR call sites and specs without ``aux`` still work). ``aux``:
     the spec's declared operands by name. ``scalars``: ``(n_steps,
     n_scalars)`` per-step scalar values for custom updates.
+
+    A rank-``dims+1`` input is a ``[B, *grid]`` batch: the oracle maps
+    itself over the leading axis (operands batch along with the grid;
+    ``scalars`` may stay shared ``(n_steps, k)`` or go per-problem
+    ``(B, n_steps, k)``).
     """
+    if x.ndim == spec.dims + 1:
+        aux = dict(aux) if aux else None
+        per_problem = scalars is not None and jnp.ndim(scalars) == 3
+
+        def one(x1, src1, aux1, scal1):
+            return stencil_multistep(x1, spec, n_steps, src1, aux1, scal1)
+
+        in_axes = (0,
+                   None if source is None else 0,
+                   None if aux is None else {k: 0 for k in aux},
+                   0 if per_problem else None)
+        return jax.vmap(one, in_axes=in_axes)(x, source, aux, scalars)
+
     if scalars is not None:
         scalars = jnp.asarray(scalars, jnp.float32).reshape(n_steps, -1)
 

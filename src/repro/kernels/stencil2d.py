@@ -74,9 +74,11 @@ def stencil2d(x: jax.Array, spec: StencilSpec, bx: int = 256, bt: int = 1,
               variant: str = "revolving", interpret: bool = True,
               source: jax.Array | None = None, aux=None,
               scalars: jax.Array | None = None) -> jax.Array:
-    """Run ``bt`` fused time steps of ``spec`` over a [H, W] grid."""
-    if x.ndim != 2 or spec.dims != 2:
-        raise ValueError("stencil2d needs a 2D grid and a 2D spec")
+    """Run ``bt`` fused time steps of ``spec`` over a [H, W] grid (or a
+    [B, H, W] batch of independent problems — see engine docstring)."""
+    if x.ndim not in (2, 3) or spec.dims != 2:
+        raise ValueError("stencil2d needs a 2D grid (or a [B, H, W] "
+                         "batch) and a 2D spec")
     return engine.stencil_call(x, spec, bx=bx, bt=bt, variant=variant,
                                interpret=interpret, source=source,
                                aux=aux, scalars=scalars,

@@ -82,9 +82,11 @@ def stencil3d(x: jax.Array, spec: StencilSpec, bx: int = 128, bt: int = 1,
               variant: str = "revolving", interpret: bool = True,
               source: jax.Array | None = None, aux=None,
               scalars: jax.Array | None = None) -> jax.Array:
-    """Run ``bt`` fused time steps of ``spec`` over a [D, H, W] grid."""
-    if x.ndim != 3 or spec.dims != 3:
-        raise ValueError("stencil3d needs a 3D grid and a 3D spec")
+    """Run ``bt`` fused time steps of ``spec`` over a [D, H, W] grid (or
+    a [B, D, H, W] batch of independent problems — see engine)."""
+    if x.ndim not in (3, 4) or spec.dims != 3:
+        raise ValueError("stencil3d needs a 3D grid (or a [B, D, H, W] "
+                         "batch) and a 3D spec")
     return engine.stencil_call(x, spec, bx=bx, bt=bt, variant=variant,
                                interpret=interpret, source=source,
                                aux=aux, scalars=scalars,

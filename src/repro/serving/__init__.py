@@ -1,4 +1,8 @@
-"""Serving: slot-based KV-cache engine with continuous batching."""
+"""Serving: slot-based KV-cache LM engine with continuous batching,
+plus the bucketed batched stencil front-end (stencil_service)."""
 from repro.serving.engine import Completion, Engine, Request
+from repro.serving.stencil_service import (StencilCompletion,
+                                           StencilRequest, StencilService)
 
-__all__ = ["Completion", "Engine", "Request"]
+__all__ = ["Completion", "Engine", "Request", "StencilCompletion",
+           "StencilRequest", "StencilService"]

@@ -1,0 +1,256 @@
+"""Stencil serving front-end: bucketed, batched, asynchronous dispatch.
+
+The paper's accelerator wins by *keeping the pipeline full* — and a
+device that solves one small grid per launch is mostly idle between
+launches. This service is the stencil-side instance of the
+slot/continuous-batching pattern of ``serving/engine.py``: requests
+are the in-flight items, a bucket is the lockstep batch, and the
+batched engine dispatch (``kernels/engine.py``'s leading batch axis)
+is the II=1 steady state the service works to keep saturated.
+
+Lifecycle (``docs/serving.md`` has the full walk-through):
+
+  1. **submit** — clients enqueue ``StencilRequest``s (a grid, a
+     ``StencilSpec``, ``n_steps``, optional aux operands / per-step
+     scalars). Nothing runs yet.
+  2. **group** — at ``flush()`` the queue is grouped by *compilation
+     key*: (spec, grid shape, dtype, n_steps, aux signature, scalars
+     signature). Problems in one group are bit-identical work modulo
+     data, so they can share one compiled batched program.
+  3. **bucket** — each group is cut into batches and padded up to a
+     power-of-two ``<= max_batch``. Bucketing bounds recompilation:
+     any request volume compiles at most ``log2(max_batch) + 1``
+     distinct batch sizes per group, instead of one program per
+     distinct B ever seen.
+  4. **dispatch** — every bucket becomes one batched
+     ``ops.stencil_run`` call through a per-(key, bucket) jitted
+     dispatcher. Dispatches are launched back-to-back *without
+     blocking* (JAX's async dispatch): all buckets are in flight
+     before the first result is read back. On TPU the batch buffer is
+     donated (``donate_argnums``) so the device can reuse it for the
+     output; on CPU/interpret donation is a no-op and is skipped to
+     avoid the XLA warning.
+  5. **complete** — results are unstacked and returned per request
+     (padding rows are dropped). **Exactness guarantee**: the batched
+     engine is bitwise-identical per problem to a solo run (the batch
+     axis is an outer grid dimension; tests assert equality), so a
+     served result never differs from the unbatched one. ``check=True``
+     re-verifies that per request, for smoke tests.
+
+``metrics`` tracks dispatches, served/padding problem counts and the
+measured device-busy fraction (time with work in flight / wall time) —
+the quantity batching exists to raise; ``benchmarks/serving.py`` turns
+it into a throughput suite.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.stencil import StencilSpec
+from repro.kernels import ops
+
+
+def bucket_size(n: int, max_batch: int = 8) -> int:
+    """Smallest power-of-two >= n, capped at ``max_batch``."""
+    b = 1
+    while b < min(n, max_batch):
+        b *= 2
+    return min(b, max_batch)
+
+
+@dataclasses.dataclass
+class StencilRequest:
+    """One client problem: ``n_steps`` of ``spec`` over grid ``x``."""
+
+    uid: int
+    x: jax.Array
+    spec: StencilSpec
+    n_steps: int
+    aux: Optional[Dict[str, jax.Array]] = None
+    scalars: Optional[jax.Array] = None      # (n_steps, spec.n_scalars)
+
+
+@dataclasses.dataclass
+class StencilCompletion:
+    uid: int
+    result: np.ndarray   # host-side: each bucket is materialized once
+    bucket: int          # batch rows in the dispatch that served it
+    padded: int          # how many of those rows were padding
+
+
+class StencilService:
+    """Bucketed batched stencil execution with solo-run exactness.
+
+    ``max_batch`` caps the bucket (and therefore compiled batch) size;
+    ``backend`` follows ``kernels.ops`` dispatch ("auto" = pallas on
+    TPU, interpret elsewhere); explicit ``bx``/``bt``/``variant``
+    bypass the autotuner, otherwise each compilation key resolves its
+    blocking once through ``autotune.plan`` (batch-aware cache).
+    ``check=True`` re-runs every request solo and asserts equality —
+    the smoke suite's parity gate, not a production mode.
+    """
+
+    def __init__(self, *, max_batch: int = 8, backend: str = "auto",
+                 bx: Optional[int] = None, bt: Optional[int] = None,
+                 variant: Optional[str] = None, check: bool = False):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self.max_batch = max_batch
+        self.backend = ops.resolve_backend(backend)
+        self._blocking = (bx, bt, variant)
+        self.check = check
+        self._queue: List[StencilRequest] = []
+        # (key, bucket) -> jitted dispatcher; the bucket is part of the
+        # cache key because B is a static shape (see docs/serving.md).
+        self._dispatchers: dict = {}
+        # (key, bucket) -> the (bx, bt, variant) the dispatcher runs
+        # with — the check path must reuse it exactly, or the solo run
+        # could legally differ in float association (different bt).
+        self._resolved: dict = {}
+        self.metrics = {"dispatches": 0, "problems": 0, "pad_rows": 0,
+                        "busy_s": 0.0, "wall_s": 0.0}
+
+    # ------------------------------------------------------------------
+    def submit(self, req: StencilRequest) -> None:
+        if req.x.ndim != req.spec.dims:
+            raise ValueError(
+                f"request {req.uid}: grid rank {req.x.ndim} != spec.dims "
+                f"{req.spec.dims} (submit single problems; the service "
+                f"does the batching)")
+        self._queue.append(req)
+
+    def run(self, requests: Optional[List[StencilRequest]] = None
+            ) -> List[StencilCompletion]:
+        """Submit ``requests`` (if given) and flush the whole queue."""
+        for r in requests or ():
+            self.submit(r)
+        return self.flush()
+
+    # ------------------------------------------------------------------
+    def _key(self, r: StencilRequest):
+        aux_sig = tuple(sorted(r.aux)) if r.aux else ()
+        scal_sig = (None if r.scalars is None
+                    else tuple(np.shape(r.scalars)))
+        # r.x.dtype avoids materializing device arrays just for a key.
+        dtype = getattr(r.x, "dtype", None)
+        if dtype is None:
+            dtype = np.asarray(r.x).dtype
+        return (r.spec, tuple(np.shape(r.x)), str(dtype), int(r.n_steps),
+                aux_sig, scal_sig)
+
+    def _dispatcher(self, key, bucket: int):
+        """The jitted batched runner for one (compilation key, bucket)."""
+        fn = self._dispatchers.get((key, bucket))
+        if fn is not None:
+            return fn
+        spec, shape, dtype, n_steps, aux_names, scal_sig = key
+        bx, bt, variant = self._blocking
+        if bx is None or bt is None:
+            from repro.kernels import autotune
+            tuned = autotune.plan((bucket,) + shape, spec, dtype=dtype,
+                                  backend=self.backend, n_steps=n_steps)
+            bx = bx if bx is not None else tuned.bx
+            bt = bt if bt is not None else tuned.bt
+            variant = variant if variant is not None else tuned.variant
+
+        def call(xb, aux_b, scal_b):
+            return ops.stencil_run(xb, spec, n_steps, bx=bx, bt=bt,
+                                   backend=self.backend, variant=variant,
+                                   aux=aux_b or None, scalars=scal_b)
+
+        # Donate the batch buffer so the device reuses it for the
+        # output — meaningful on real hardware only; CPU donation just
+        # warns and copies.
+        donate = (0,) if self.backend == "pallas" else ()
+        fn = jax.jit(call, donate_argnums=donate)
+        self._dispatchers[(key, bucket)] = fn
+        self._resolved[(key, bucket)] = (bx, bt, variant)
+        return fn
+
+    # ------------------------------------------------------------------
+    def flush(self) -> List[StencilCompletion]:
+        t0 = time.perf_counter()
+        # Group by compilation key, preserving arrival order within a
+        # group (continuous admission: a group keeps filling its
+        # current bucket until the queue runs dry or the bucket is
+        # full, exactly like slots absorbing queued requests).
+        groups: dict = {}
+        for r in self._queue:
+            groups.setdefault(self._key(r), []).append(r)
+        self._queue.clear()
+
+        in_flight = []       # (key, reqs, bucket, pad, result_future)
+        t_busy0 = None
+        for key, reqs in groups.items():
+            for i in range(0, len(reqs), self.max_batch):
+                chunk = reqs[i: i + self.max_batch]
+                bucket = bucket_size(len(chunk), self.max_batch)
+                pad = bucket - len(chunk)
+                # Stack on the *host* (one memcpy + one device upload):
+                # jnp.stack over many small device buffers costs more
+                # than the batched dispatch it feeds.
+                xb = np.stack(
+                    [np.asarray(r.x, np.dtype(key[2])) for r in chunk]
+                    + [np.zeros(key[1], np.dtype(key[2]))] * pad)
+                aux_b = None
+                if chunk[0].aux:
+                    aux_b = {
+                        nm: np.stack(
+                            [np.asarray(r.aux[nm], xb.dtype)
+                             for r in chunk]
+                            + [np.zeros(key[1], xb.dtype)] * pad)
+                        for nm in chunk[0].aux}
+                scal_b = None
+                if chunk[0].scalars is not None:
+                    scal_b = np.stack(
+                        [np.asarray(r.scalars, np.float32).reshape(
+                            r.n_steps, -1) for r in chunk]
+                        + [np.zeros(
+                            (chunk[0].n_steps, chunk[0].spec.n_scalars),
+                            np.float32)] * pad)
+                if t_busy0 is None:
+                    t_busy0 = time.perf_counter()
+                out = self._dispatcher(key, bucket)(xb, aux_b, scal_b)
+                in_flight.append((key, chunk, bucket, pad, out))
+                self.metrics["dispatches"] += 1
+                self.metrics["pad_rows"] += pad
+
+        done: List[StencilCompletion] = []
+        for key, chunk, bucket, pad, out in in_flight:
+            # One device->host materialization per bucket; slicing the
+            # device array per request would instead dispatch one lazy
+            # gather per request — quietly re-creating the per-problem
+            # dispatch storm the batching removed.
+            out = np.asarray(jax.block_until_ready(out))
+            for j, r in enumerate(chunk):
+                res = out[j]
+                if self.check:
+                    bx, bt, variant = self._resolved[(key, bucket)]
+                    solo = ops.stencil_run(
+                        jnp.asarray(r.x), r.spec, r.n_steps, bx=bx,
+                        bt=bt, variant=variant, backend=self.backend,
+                        aux=r.aux, scalars=r.scalars)
+                    np.testing.assert_array_equal(
+                        np.asarray(res), np.asarray(solo),
+                        err_msg=f"served result for request {r.uid} "
+                                f"diverged from its solo run")
+                done.append(StencilCompletion(uid=r.uid, result=res,
+                                              bucket=bucket, padded=pad))
+            self.metrics["problems"] += len(chunk)
+        t1 = time.perf_counter()
+        if t_busy0 is not None:
+            self.metrics["busy_s"] += t1 - t_busy0
+        self.metrics["wall_s"] += t1 - t0
+        return done
+
+    @property
+    def device_busy_fraction(self) -> float:
+        """Measured fraction of service wall time with work in flight."""
+        w = self.metrics["wall_s"]
+        return 0.0 if w == 0 else self.metrics["busy_s"] / w

@@ -82,6 +82,92 @@ def test_engine_rejects_unknown_variant():
 
 
 # ---------------------------------------------------------------------------
+# Batched execution: each problem in a [B, *grid] batch must be
+# BITWISE-identical to its solo run (the batch axis is an outer grid
+# dimension — same kernel, same arithmetic order), for every radius,
+# both boundary modes, 2D and 3D, B in {1, 2, 5}. The jax.vmap fallback
+# (an independent lowering of the same batch) must agree bitwise too.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dims", [2, 3])
+@pytest.mark.parametrize("boundary", ["dirichlet0", "clamp"])
+def test_engine_batched_bitwise_equals_solo_loop(dims, boundary):
+    shape = (13, 140) if dims == 2 else (5, 9, 133)
+    for radius in (1, 2, 3, 4):
+        spec = diffusion(dims, radius, boundary=boundary)
+        for B in (1, 2, 5):
+            x = _rand((B,) + shape, seed=radius * 10 + B)
+            got = engine.stencil_call(x, spec, bx=128, bt=2,
+                                      interpret=True)
+            solo = jnp.stack([
+                engine.stencil_call(x[b], spec, bx=128, bt=2,
+                                    interpret=True) for b in range(B)])
+            np.testing.assert_array_equal(
+                np.asarray(got), np.asarray(solo),
+                err_msg=f"dims={dims} {boundary} r={radius} B={B}")
+            want = ref.stencil_multistep(x, spec, 2)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       **TOL)
+
+
+@pytest.mark.parametrize("variant", ["revolving", "multioperand"])
+def test_engine_batched_matches_vmap_fallback(variant):
+    spec = diffusion(2, 2)
+    x = _rand((3, 13, 140), seed=7)
+    got = engine.stencil_call(x, spec, bx=128, bt=2, variant=variant,
+                              interpret=True)
+    vm = engine.stencil_call_vmap(x, spec, bx=128, bt=2, variant=variant)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(vm))
+
+
+def test_engine_batched_source_and_3d():
+    spec = hotspot2d()
+    x = _rand((4, 13, 140), seed=1)
+    src = _rand((4, 13, 140), seed=2) * 0.1
+    got = engine.stencil_call(x, spec, bx=128, bt=2, interpret=True,
+                              source=src)
+    solo = jnp.stack([
+        engine.stencil_call(x[b], spec, bx=128, bt=2, interpret=True,
+                            source=src[b]) for b in range(4)])
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(solo))
+    spec3 = diffusion(3, 1)
+    x3 = _rand((2, 4, 8, 133), seed=3)
+    s3 = _rand((2, 4, 8, 133), seed=4) * 0.1
+    got3 = engine.stencil_call(x3, spec3, bx=128, bt=2, interpret=True,
+                               source=s3)
+    vm3 = engine.stencil_call_vmap(x3, spec3, bx=128, bt=2, source=s3)
+    np.testing.assert_array_equal(np.asarray(got3), np.asarray(vm3))
+
+
+def test_engine_batched_rejects_bad_ranks():
+    spec = diffusion(2, 1)
+    with pytest.raises(ValueError, match="batch"):
+        engine.stencil_call(_rand((2, 2, 8, 128)), spec, bx=128, bt=1,
+                            interpret=True)
+    with pytest.raises(ValueError, match="at least one"):
+        engine.stencil_call(jnp.zeros((0, 8, 128)), spec, bx=128, bt=1,
+                            interpret=True)
+    with pytest.raises(ValueError, match="rank"):
+        engine.stencil_call_vmap(_rand((8, 128)), spec, bx=128, bt=1)
+
+
+def test_ops_batched_autotuned_run():
+    """ops.stencil_run on a batch, blocking resolved by the (batch-
+    aware) tuner, equals the batched oracle."""
+    spec = diffusion(2, 1)
+    x = _rand((3, 16, 300), seed=5)
+    got = ops.stencil_run(x, spec, n_steps=3, backend="interpret")
+    want = ref.stencil_multistep(x, spec, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    # reference backend takes the same batched path
+    got_ref = ops.stencil_run(x, spec, 3, bx=128, bt=1,
+                              backend="reference")
+    np.testing.assert_allclose(np.asarray(got_ref), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
 # Autotuned end-to-end runs
 # ---------------------------------------------------------------------------
 

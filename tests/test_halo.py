@@ -150,6 +150,159 @@ def test_halo_extreme_shard_sizes():
 
 
 # ---------------------------------------------------------------------------
+# Batched grids through the sharded runner (forced 4 devices).
+# ---------------------------------------------------------------------------
+
+def test_halo_batched_grid_sharding_parity():
+    """B in {1, 3} (never divisible by 4 -> grid sharding) on a
+    shard-unaligned grid, bt in {1, 4}: equal to the batched oracle
+    AND bitwise-equal to a Python loop of single-problem sharded
+    runs."""
+    _run("""
+        import numpy as np, jax, jax.numpy as jnp
+        assert len(jax.devices()) == 4
+        from repro.core.stencil import diffusion
+        from repro.kernels import ref
+        from repro.distributed import halo
+        rng = np.random.default_rng(21)
+        spec = diffusion(2, 2, boundary="clamp")
+        for B in (1, 3):
+            x = jnp.asarray(rng.standard_normal((B, 45, 141)),
+                            jnp.float32)
+            assert halo.shard_strategy(x.shape, spec, 4) == "grid"
+            want = ref.stencil_multistep(x, spec, 5)
+            for bt in (1, 4):
+                got = halo.stencil_run_sharded(x, spec, 5, n_devices=4,
+                                               bx=128, bt=bt)
+                np.testing.assert_allclose(
+                    np.asarray(got), np.asarray(want), """ + TOL + """,
+                    err_msg=f"B={B} bt={bt}")
+                solo = jnp.stack([halo.stencil_run_sharded(
+                    x[b], spec, 5, n_devices=4, bx=128, bt=bt)
+                    for b in range(B)])
+                np.testing.assert_array_equal(
+                    np.asarray(got), np.asarray(solo),
+                    err_msg=f"solo-loop B={B} bt={bt}")
+        print("OK")
+    """, devices=4)
+
+
+def test_halo_batch_axis_sharding_parity_and_scalars():
+    """B % n == 0 takes the batch-sharding path: parity vs the oracle
+    and vs the B=1-at-a-time grid-sharded runs, 2D with per-problem
+    scalars and 3D with a source operand."""
+    _run("""
+        import numpy as np, jax, jax.numpy as jnp
+        assert len(jax.devices()) == 4
+        from repro.core.stencil import (AuxOperand, StencilSpec,
+                                        diffusion, shift)
+        from repro.kernels import ops, ref
+        from repro.distributed import halo
+        rng = np.random.default_rng(22)
+        spec = diffusion(2, 1, boundary="clamp")
+        x = jnp.asarray(rng.standard_normal((8, 21, 140)), jnp.float32)
+        assert halo.shard_strategy(x.shape, spec, 4) == "batch"
+        got = halo.stencil_run_sharded(x, spec, 5, n_devices=4,
+                                       bx=128, bt=2)
+        want = ref.stencil_multistep(x, spec, 5)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   """ + TOL + """)
+        # per-problem scalars shard with their problems
+        def upd(fields, spec):
+            j, c, s = fields["x"], fields["c"], fields["scalars"]
+            lap = (shift(j, 0, -1, "clamp") + shift(j, 0, 1, "clamp")
+                   + shift(j, 1, -1, "clamp") + shift(j, 1, 1, "clamp")
+                   - 4.0 * j)
+            return j + s[0] * c * lap
+        vspec = StencilSpec(dims=2, radius=1, boundary="clamp",
+                            update=upd, n_scalars=1,
+                            aux=(AuxOperand("c", role="coeff"),),
+                            name="varcoef_b")
+        c = jnp.asarray(rng.uniform(0.05, 0.2, x.shape), jnp.float32)
+        scal = jnp.asarray(rng.uniform(0.05, 0.3, (8, 5, 1)),
+                           jnp.float32)
+        got = ops.stencil_run(x, vspec, 5, bx=128, bt=2,
+                              backend="interpret", n_devices=4,
+                              aux={"c": c}, scalars=scal)
+        want = ref.stencil_multistep(x, vspec, 5, aux={"c": c},
+                                     scalars=scal)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   """ + TOL + """)
+        # 3D batch sharding with a source term
+        x3 = jnp.asarray(rng.standard_normal((4, 9, 8, 133)),
+                         jnp.float32)
+        s3 = jnp.asarray(rng.standard_normal((4, 9, 8, 133)),
+                         jnp.float32) * .1
+        spec3 = diffusion(3, 1)
+        assert halo.shard_strategy(x3.shape, spec3, 4) == "batch"
+        got3 = halo.stencil_run_sharded(x3, spec3, 4, n_devices=4,
+                                        bx=128, bt=2, source=s3)
+        want3 = ref.stencil_multistep(x3, spec3, 4, s3)
+        np.testing.assert_allclose(np.asarray(got3), np.asarray(want3),
+                                   """ + TOL + """)
+        print("OK")
+    """, devices=4)
+
+
+def test_halo_batched_acceptance_B125():
+    """Acceptance: on 4 forced devices, batched == Python loop of
+    single-problem runs (bitwise) for B in {1, 2, 5}, both boundary
+    modes, 2D r in {1, 4} and 3D r1."""
+    _run("""
+        import numpy as np, jax, jax.numpy as jnp
+        assert len(jax.devices()) == 4
+        from repro.core.stencil import diffusion
+        from repro.kernels import ops
+        rng = np.random.default_rng(23)
+        for boundary in ("dirichlet0", "clamp"):
+            for radius in (1, 4):
+                spec = diffusion(2, radius, boundary=boundary)
+                for B in (1, 2, 5):
+                    x = jnp.asarray(
+                        rng.standard_normal((B, 45, 140)), jnp.float32)
+                    got = ops.stencil_run(x, spec, 3, bx=128, bt=2,
+                                          backend="interpret",
+                                          n_devices=4)
+                    solo = jnp.stack([ops.stencil_run(
+                        x[b], spec, 3, bx=128, bt=2,
+                        backend="interpret", n_devices=4)
+                        for b in range(B)])
+                    np.testing.assert_array_equal(
+                        np.asarray(got), np.asarray(solo),
+                        err_msg=f"{boundary} r={radius} B={B}")
+            spec3 = diffusion(3, 1, boundary=boundary)
+            x3 = jnp.asarray(rng.standard_normal((2, 13, 8, 133)),
+                             jnp.float32)
+            got3 = ops.stencil_run(x3, spec3, 3, bx=128, bt=2,
+                                   backend="interpret", n_devices=4)
+            solo3 = jnp.stack([ops.stencil_run(
+                x3[b], spec3, 3, bx=128, bt=2, backend="interpret",
+                n_devices=4) for b in range(2)])
+            np.testing.assert_array_equal(np.asarray(got3),
+                                          np.asarray(solo3),
+                                          err_msg=boundary)
+        print("OK")
+    """, devices=4)
+
+
+def test_shard_strategy_prefers_batch_axis():
+    """The documented preference: a device-divisible batch always
+    takes batch-axis sharding; everything else grid-shards."""
+    from repro.core.stencil import diffusion
+    from repro.distributed import halo
+    spec = diffusion(2, 1)
+    assert halo.shard_strategy((4, 32, 140), spec, 4) == "batch"
+    assert halo.shard_strategy((8, 32, 140), spec, 4) == "batch"
+    assert halo.shard_strategy((3, 32, 140), spec, 4) == "grid"
+    assert halo.shard_strategy((1, 32, 140), spec, 4) == "grid"
+    assert halo.shard_strategy((32, 140), spec, 4) == "grid"
+    assert halo.shard_strategy((4, 32, 140), spec, 1) == "grid"
+    spec3 = diffusion(3, 1)
+    assert halo.shard_strategy((4, 8, 9, 140), spec3, 2) == "batch"
+    assert halo.shard_strategy((9, 8, 140), spec3, 2) == "grid"
+
+
+# ---------------------------------------------------------------------------
 # In-process: single-device generic path + tuner device awareness
 # ---------------------------------------------------------------------------
 

@@ -473,3 +473,264 @@ def test_autotune_measures_specs_with_operands():
                           measure=True, top_k=2)
     assert tuned.source == "measured"
     assert tuned.timings
+
+
+# ---------------------------------------------------------------------------
+# Batch-aware autotuner cache (satellite): B in the key, version-bump
+# invalidation of PR-3 entries, --retune re-measurement under a
+# batched plan.
+# ---------------------------------------------------------------------------
+
+def test_autotune_cache_key_distinguishes_batch_sizes():
+    from repro.core.perf_model import V5E
+    from repro.kernels import autotune
+    spec = diffusion(2, 1)
+    vm = V5E.vmem_bytes
+    ks = {autotune._key(spec, (16, 256), "float32", "reference", vm,
+                        "v5e", batch=b) for b in (1, 2, 8)}
+    assert len(ks) == 3
+    # the batched plan() call and the unbatched one hit different
+    # entries even though the per-problem grid is identical
+    autotune.plan((16, 256), spec, backend="reference", measure=True)
+    autotune.plan((4, 16, 256), spec, backend="reference", measure=True)
+    keys = [k for k in autotune._load_cache()
+            if k.startswith("diffusion2d_r1|")]
+    assert len(keys) == 2
+    assert any("|B1|" in k for k in keys)
+    assert any("|B4|" in k for k in keys)
+
+
+def test_autotune_version_bump_invalidates_v3_entries(tmp_path,
+                                                      monkeypatch):
+    """A PR-3 (version 3) cache file must be dropped wholesale — its
+    keys have no batch field, so reading one as a current entry would
+    silently misapply an unbatched answer to a batched problem."""
+    import json
+    from repro.kernels import autotune
+    path = tmp_path / "stale.json"
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(path))
+    autotune._MEM.clear()
+    stale_key = ("diffusion2d_r1|d2|r1|bdirichlet0|Lstar|ax-|sc0|"
+                 "16x256|float32|reference|vm100663296|tpu-v5e|nd1")
+    path.write_text(json.dumps(
+        {"version": 3,
+         stale_key: {"bx": 512, "bt": 16, "variant": "multioperand",
+                     "source": "measured"}}))
+    assert autotune._load_cache() == {}          # ignored, not misread
+    tuned = autotune.plan((16, 256), diffusion(2, 1),
+                          backend="reference", measure=False)
+    assert tuned.source == "model"               # not "cache"
+    assert (tuned.bx, tuned.bt) != (512, 16)
+
+
+def test_retune_remeasures_under_batched_plan():
+    """clear_cache (what benchmarks/run.py --retune does) must force a
+    fresh measurement of a batched problem, not serve the old winner."""
+    from repro.kernels import autotune
+    spec = diffusion(2, 1)
+    p1 = autotune.plan((3, 16, 256), spec, backend="reference",
+                       measure=True, top_k=2)
+    assert p1.source == "measured" and p1.timings
+    assert autotune.plan((3, 16, 256), spec, backend="reference",
+                         top_k=2).source == "cache"
+    autotune.clear_cache()
+    p2 = autotune.plan((3, 16, 256), spec, backend="reference",
+                       measure=True, top_k=2)
+    assert p2.source == "measured" and p2.timings
+    # the block plan always covers ONE problem of the batch
+    assert p2.block_plan.grid_shape == (16, 256)
+
+
+def test_autotune_rejects_bad_rank():
+    from repro.kernels import autotune
+    with pytest.raises(ValueError, match="batch"):
+        autotune.plan((2, 2, 16, 256), diffusion(2, 1),
+                      backend="reference")
+
+
+# ---------------------------------------------------------------------------
+# Batch-dim validation (satellite): every mismatch gets its own clear
+# error from ops, *before* anything reaches a kernel.
+# ---------------------------------------------------------------------------
+
+def test_ops_rejects_unbatched_aux_for_batched_grid():
+    spec = StencilSpec(dims=2, radius=1, center=1.0,
+                       axis_weights=((0.0,) * 3,) * 2,
+                       aux=(AuxOperand("p"),), name="bsrc")
+    xb = _rand((3, 16, 140))
+    with pytest.raises(ValueError, match="missing the batch axis"):
+        ops.stencil_run(xb, spec, 2, bx=128, bt=1, backend="interpret",
+                        aux={"p": _rand((16, 140))})
+
+
+def test_ops_rejects_wrong_batch_dim_on_aux():
+    spec = StencilSpec(dims=2, radius=1, center=1.0,
+                       axis_weights=((0.0,) * 3,) * 2,
+                       aux=(AuxOperand("p"),), name="bsrc2")
+    xb = _rand((3, 16, 140))
+    with pytest.raises(ValueError,
+                       match="batch dim 2 != grid batch dim 3"):
+        ops.stencil_run(xb, spec, 2, bx=128, bt=1, backend="interpret",
+                        aux={"p": _rand((2, 16, 140))})
+
+
+def test_ops_rejects_batched_operand_for_unbatched_grid():
+    x = _rand((16, 140))
+    with pytest.raises(ValueError, match="grid .* is unbatched"):
+        ops.stencil_sweep(x, diffusion(2, 1), bx=128, bt=1,
+                          backend="interpret",
+                          source=_rand((3, 16, 140)))
+
+
+def test_ops_rejects_mismatched_scalar_batch():
+    xb = _rand((3, 16, 140))
+    with pytest.raises(ValueError,
+                       match="scalars batch dim 2 != grid batch dim 3"):
+        ops.stencil_run(xb, VARCOEF, 2, bx=128, bt=1,
+                        backend="interpret",
+                        aux={"c": _rand((3, 16, 140))},
+                        scalars=jnp.ones((2, 2, 1)))
+    x = _rand((16, 140))
+    with pytest.raises(ValueError, match="per-problem"):
+        ops.stencil_run(x, VARCOEF, 2, bx=128, bt=1,
+                        backend="interpret", aux={"c": x},
+                        scalars=jnp.ones((3, 2, 1)))
+
+
+def test_ops_rejects_legacy_source_batch_mismatch():
+    xb = _rand((3, 16, 140))
+    with pytest.raises(ValueError, match="missing the batch axis"):
+        ops.stencil_run(xb, diffusion(2, 1), 2, bx=128, bt=1,
+                        backend="interpret", source=_rand((16, 140)))
+
+
+# ---------------------------------------------------------------------------
+# Property-based IR suite (satellite): random specs (dims, radius,
+# star/box/custom, boundary, aux roles, scalars) x random batch sizes,
+# engine == independent NumPy golden == jax.vmap fallback. Guarded so
+# the no-dev-deps CI degrades to a skip, not a collection error (the
+# module-level importorskip pattern of test_stencil_kernels.py would
+# skip this whole file, which carries non-hypothesis tests too).
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as st
+    _HAS_HYPOTHESIS = True
+except ImportError:          # no-dev-deps CI
+    _HAS_HYPOTHESIS = False
+
+
+def _np_custom_step(x, c, s):
+    """NumPy golden for the fixed custom update below (clamp
+    laplacian heterogeneous diffusion) — independent of jnp."""
+    p = np.pad(x, 1, mode="edge")
+    lap = (p[:-2, 1:-1] + p[2:, 1:-1] + p[1:-1, :-2] + p[1:-1, 2:]
+           - 4.0 * x)
+    return x + np.float32(s) * c * lap
+
+
+def _check_ir_problem(dims, layout, radius, boundary, with_src, B, bt,
+                      shape, seed):
+    """One randomized IR problem: batched engine vs NumPy golden vs
+    jax.vmap fallback (the property, shared by the hypothesis suite
+    and the pinned no-dev-deps cases)."""
+    rng = np.random.default_rng(seed)
+    xs = rng.standard_normal((B,) + shape).astype(np.float32)
+    x = jnp.asarray(xs)
+    aux = scalars = src = None
+    c = scal = None
+    if layout == "star":
+        spec = diffusion(dims, radius, boundary=boundary)
+    elif layout == "box":
+        bw = rng.standard_normal((2 * radius + 1,) * dims) * 0.05
+        spec = box_spec(bw, boundary=boundary,
+                        name=f"pbox{dims}r{radius}")
+    else:
+        spec = VARCOEF
+        c = rng.uniform(0.05, 0.2, (B,) + shape).astype(np.float32)
+        scal = rng.uniform(0.05, 0.3, (B, bt, 1)).astype(np.float32)
+        aux = {"c": jnp.asarray(c)}
+        scalars = jnp.asarray(scal)
+    if with_src:
+        src = rng.standard_normal((B,) + shape).astype(np.float32)
+
+    # Independent NumPy golden, one problem at a time
+    want = []
+    for b in range(B):
+        g = xs[b]
+        for t in range(bt):
+            if layout == "custom":
+                g = _np_custom_step(g, c[b], scal[b, t, 0])
+            else:
+                g = np_stencil_step(g, spec)
+                if src is not None:
+                    g = g + src[b]
+        want.append(g)
+    want = np.stack(want)
+
+    kw = dict(bx=128, bt=bt, interpret=True, aux=aux, scalars=scalars,
+              source=None if src is None else jnp.asarray(src))
+    got = engine.stencil_call(x, spec, **kw)
+    np.testing.assert_allclose(np.asarray(got), want,
+                               rtol=1e-4, atol=1e-4)
+    kw.pop("interpret")
+    vm = engine.stencil_call_vmap(x, spec, **kw)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(vm))
+
+
+# Pinned instances of the property — always run, with or without
+# hypothesis, so the no-dev-deps CI keeps real (if narrower) coverage.
+_PINNED = [
+    (2, "star", 3, "dirichlet0", True, 2, 2, (13, 141), 11),
+    (2, "box", 1, "clamp", False, 3, 2, (10, 133), 12),
+    (2, "custom", 1, "clamp", False, 2, 2, (12, 131), 13),
+    (3, "star", 2, "clamp", True, 2, 1, (4, 7, 134), 14),
+    (3, "box", 1, "dirichlet0", False, 1, 2, (5, 6, 139), 15),
+]
+
+
+@pytest.mark.parametrize("case", _PINNED,
+                         ids=[f"{c[0]}d-{c[1]}-{c[3]}-B{c[5]}"
+                              for c in _PINNED])
+def test_ir_pinned_batched_golden_vmap(case):
+    _check_ir_problem(*case)
+
+
+if _HAS_HYPOTHESIS:
+
+    @st.composite
+    def _ir_problems(draw):
+        dims = draw(st.sampled_from([2, 3]))
+        layout = draw(st.sampled_from(
+            ["star", "box", "custom"] if dims == 2 else ["star", "box"]))
+        if layout == "custom":
+            radius, boundary = 1, "clamp"    # the fixed update's cone
+        else:
+            radius = draw(st.integers(1, 4 if dims == 2 else 2))
+            boundary = draw(st.sampled_from(["dirichlet0", "clamp"]))
+        with_src = draw(st.booleans()) and layout != "custom"
+        B = draw(st.sampled_from([1, 2, 3]))
+        bt = draw(st.sampled_from([1, 2]))
+        if dims == 2:
+            shape = (draw(st.integers(9, 21)),
+                     draw(st.integers(129, 148)))
+        else:
+            shape = (draw(st.integers(3, 6)), draw(st.integers(5, 9)),
+                     draw(st.integers(129, 140)))
+        seed = draw(st.integers(0, 2 ** 20))
+        return (dims, layout, radius, boundary, with_src, B, bt, shape,
+                seed)
+
+    @settings(max_examples=10, deadline=None, derandomize=True,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(_ir_problems())
+    def test_property_batched_engine_golden_vmap(problem):
+        _check_ir_problem(*problem)
+
+else:
+
+    @pytest.mark.skip(reason="hypothesis not installed (dev-only dep; "
+                             "see requirements-dev.txt) — the pinned "
+                             "cases above still run")
+    def test_property_batched_engine_golden_vmap():
+        pass

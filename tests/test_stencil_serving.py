@@ -1,0 +1,163 @@
+"""Stencil serving front-end (serving/stencil_service.py).
+
+The service's contract is *exactness with throughput*: every served
+result equals the request's solo run bitwise (batching, bucketing and
+padding are invisible to clients), compilation is bounded by bucketing,
+and completions map back to the right uids in any arrival order.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.stencil import AuxOperand, StencilSpec, diffusion, \
+    hotspot2d, shift
+from repro.kernels import ops, ref
+from repro.serving import StencilRequest, StencilService
+
+
+@pytest.fixture(autouse=True)
+def _isolated_cache(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE",
+                       str(tmp_path / "autotune.json"))
+
+
+def _rand(shape, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+def _mixed_workload(n=9):
+    """Interleaved specs/shapes: three compilation groups."""
+    reqs = []
+    for i in range(n):
+        if i % 3 == 0:
+            spec, shape = diffusion(2, 1), (12, 132)
+        elif i % 3 == 1:
+            spec, shape = hotspot2d(), (12, 132)
+        else:
+            spec, shape = diffusion(2, 2, boundary="clamp"), (10, 140)
+        reqs.append(StencilRequest(uid=i, x=_rand(shape, seed=i),
+                                   spec=spec, n_steps=3))
+    return reqs
+
+
+def test_service_results_equal_solo_runs():
+    """check=True asserts bitwise equality inside the flush; here we
+    also pin every result against the jnp oracle."""
+    reqs = _mixed_workload()
+    svc = StencilService(max_batch=4, backend="interpret", bx=128, bt=2,
+                         check=True)
+    done = svc.run(list(reqs))
+    assert sorted(c.uid for c in done) == list(range(len(reqs)))
+    by_uid = {c.uid: c for c in done}
+    for r in reqs:
+        want = ref.stencil_multistep(r.x, r.spec, r.n_steps)
+        np.testing.assert_allclose(np.asarray(by_uid[r.uid].result),
+                                   np.asarray(want),
+                                   rtol=5e-5, atol=5e-5)
+
+
+def test_service_buckets_bound_compilation():
+    """17 same-key requests with max_batch=8 -> chunks 8+8+1: three
+    dispatches but only TWO compiled programs (the B=8 bucket is
+    reused; the trailing single request rides a B=1 bucket). An odd
+    trailing chunk (e.g. 3) pads up to the next power of two."""
+    spec = diffusion(2, 1)
+    reqs = [StencilRequest(uid=i, x=_rand((10, 132), seed=i), spec=spec,
+                           n_steps=2) for i in range(17)]
+    svc = StencilService(max_batch=8, backend="interpret", bx=128, bt=2)
+    done = svc.run(reqs)
+    assert len(done) == 17
+    assert svc.metrics["dispatches"] == 3
+    assert svc.metrics["problems"] == 17
+    assert len(svc._dispatchers) == 2          # (key, 8) and (key, 1)
+    assert svc.metrics["pad_rows"] == 0
+    # an odd trailing chunk pads up to the next power of two
+    svc2 = StencilService(max_batch=8, backend="interpret", bx=128, bt=2)
+    done2 = svc2.run([StencilRequest(uid=i, x=_rand((10, 132), seed=i),
+                                     spec=spec, n_steps=2)
+                      for i in range(11)])     # 8 + 3 -> pad 1
+    assert len(done2) == 11
+    assert svc2.metrics["dispatches"] == 2
+    assert svc2.metrics["pad_rows"] == 1
+    # padding is invisible: results still exact
+    for c in done2:
+        want = ref.stencil_multistep(_rand((10, 132), seed=c.uid),
+                                     spec, 2)
+        np.testing.assert_allclose(np.asarray(c.result),
+                                   np.asarray(want),
+                                   rtol=5e-5, atol=5e-5)
+
+
+def test_service_aux_and_scalars():
+    """Hotspot-style source operands and per-request scalars batch
+    correctly through the service."""
+    spec = StencilSpec(dims=2, radius=1, center=1.0,
+                       axis_weights=((0.0, 0.0, 0.0),) * 2,
+                       aux=(AuxOperand("p"),), name="svc_src")
+
+    def upd(fields, s):
+        j, c, sc = fields["x"], fields["c"], fields["scalars"]
+        lap = (shift(j, 0, -1, "clamp") + shift(j, 0, 1, "clamp")
+               + shift(j, 1, -1, "clamp") + shift(j, 1, 1, "clamp")
+               - 4.0 * j)
+        return j + sc[0] * c * lap
+
+    vspec = StencilSpec(dims=2, radius=1, boundary="clamp", update=upd,
+                        n_scalars=1,
+                        aux=(AuxOperand("c", role="coeff"),),
+                        name="svc_vc")
+    reqs = []
+    for i in range(3):
+        reqs.append(StencilRequest(
+            uid=i, x=_rand((12, 132), seed=i), spec=spec, n_steps=2,
+            aux={"p": _rand((12, 132), seed=50 + i)}))
+    for i in range(3, 6):
+        reqs.append(StencilRequest(
+            uid=i, x=_rand((12, 132), seed=i), spec=vspec, n_steps=2,
+            aux={"c": _rand((12, 132), seed=50 + i) * 0.1},
+            scalars=jnp.asarray([[0.2], [0.1]], jnp.float32)))
+    svc = StencilService(max_batch=4, backend="interpret", bx=128, bt=2,
+                         check=True)
+    done = svc.run(reqs)
+    by_uid = {c.uid: c for c in done}
+    for r in reqs:
+        want = ref.stencil_multistep(r.x, r.spec, r.n_steps, aux=r.aux,
+                                     scalars=r.scalars)
+        np.testing.assert_allclose(np.asarray(by_uid[r.uid].result),
+                                   np.asarray(want),
+                                   rtol=5e-5, atol=5e-5)
+    assert svc.metrics["dispatches"] == 2      # one per spec group
+
+
+def test_service_rejects_pre_batched_requests():
+    svc = StencilService(backend="interpret", bx=128, bt=1)
+    with pytest.raises(ValueError, match="single problems"):
+        svc.submit(StencilRequest(uid=0, x=_rand((2, 12, 132)),
+                                  spec=diffusion(2, 1), n_steps=1))
+    with pytest.raises(ValueError, match="max_batch"):
+        StencilService(max_batch=0)
+
+
+def test_service_metrics_and_busy_fraction():
+    reqs = _mixed_workload(6)
+    svc = StencilService(max_batch=4, backend="interpret", bx=128, bt=2)
+    svc.run(reqs)
+    assert svc.metrics["problems"] == 6
+    assert 0.0 < svc.device_busy_fraction <= 1.0
+    assert svc.metrics["wall_s"] >= svc.metrics["busy_s"] > 0.0
+
+
+def test_service_autotuned_blocking_resolves_per_group():
+    """bx/bt left None resolve through the (batch-aware) autotuner
+    once per (key, bucket), and the results stay exact."""
+    reqs = [StencilRequest(uid=i, x=_rand((16, 300), seed=i),
+                           spec=diffusion(2, 1), n_steps=2)
+            for i in range(3)]
+    svc = StencilService(max_batch=4, backend="interpret", check=True)
+    done = svc.run(reqs)
+    assert len(done) == 3
+    (key_bucket,) = list(svc._resolved)
+    bx, bt, variant = svc._resolved[key_bucket]
+    assert bx % 128 == 0 and bt >= 1 and variant is not None
