@@ -1,0 +1,169 @@
+"""Out-of-core streaming throughput: in-core vs tiled host streaming.
+
+The paper's headline design claim is performance "without restricting
+input size"; ``repro/outofcore`` is the jax_pallas analogue (host
+memory as the FPGA's external DRAM, device HBM as its block RAM). This
+suite quantifies what that restriction-lifting costs and how tile
+shape moves it:
+
+  * **in-core** — one ``ops.stencil_run`` over the whole grid, the
+    roofline every slab run shares;
+  * **out-of-core** — the same problem through
+    ``outofcore.stencil_run_outofcore`` at several tile extents, each
+    reported with measured GCell/s + effective GB/s and the *modeled*
+    exposed-transfer fraction from ``perf_model.outofcore_roofline``
+    (the share of run time the host link cannot hide under compute —
+    the quantity larger tiles and deeper ``bt`` exist to shrink).
+
+``--smoke`` is the CI gate: a tiny grid under a forced ~1 MiB HBM
+budget (so tiling genuinely engages on the host backend), with every
+out-of-core result asserted **bitwise-equal** to the in-core engine —
+pass/fail is the product, the numbers are incidental at smoke sizes.
+Results also land in ``BENCH_outofcore.json`` (and in
+``benchmarks/run.py --json`` rows via the ``outofcore`` suite).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import perf_model as pm
+from repro.core.blocking import TilePlan, plan_tiles
+from repro.core.stencil import diffusion
+from repro.kernels import ops
+from repro.outofcore import stencil_run_outofcore
+
+_REPEATS = 3     # best-of-N, same convention as the other suites
+
+
+def _time(fn):
+    fn()                       # warm-up / compile
+    best = float("inf")
+    for _ in range(_REPEATS):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(smoke: bool = False) -> list[dict]:
+    # Smoke: tiny grid + ~1 MiB budget so the CI host actually tiles.
+    # Full: a grid large enough that streaming costs are visible, with
+    # a budget that forces several tiles.
+    if smoke:
+        # 1024x140 f32: in-core working set ~1.15 MiB — just over the
+        # forced 1 MiB budget, so tiling (and auto-routing) genuinely
+        # engages while staying CI-sized.
+        shape, n_steps, budget = (1024, 140), 4, 1 << 20
+        tiles = (32, 256)
+    else:
+        # 1024^2 f32: 8 MiB in-core working set against a 4 MiB budget
+        # — the planner must tile (its pick joins the measured rows).
+        shape, n_steps, budget = (1024, 1024), 8, 4 << 20
+        tiles = (64, 256, 512)
+    bx, bt = 128, 2
+    spec = diffusion(2, 1)
+    backend = ops.resolve_backend("auto")
+    interpret = backend == "interpret"
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+    cells = float(np.prod(shape))
+    cell_updates = cells * n_steps
+
+    t_in = _time(lambda: ops.stencil_run(x, spec, n_steps, bx=bx, bt=bt,
+                                         backend=backend))
+    want = np.asarray(ops.stencil_run(x, spec, n_steps, bx=bx, bt=bt,
+                                      backend=backend))
+    rows = [{
+        "name": "outofcore_incore_baseline",
+        "us": t_in * 1e6,
+        "derived": (f"{cell_updates / t_in / 1e9:.3f} GCell/s "
+                    f"(whole grid {shape}, {n_steps} steps, "
+                    f"backend={backend})"),
+        "gcells_per_s": cell_updates / t_in / 1e9,
+        "config": {"bx": bx, "bt": bt, "tile": None},
+        "roofline": None,
+    }]
+
+    # The budget-derived tile joins the explicit sweep so the planner's
+    # own choice is always one of the measured rows.
+    auto = plan_tiles(spec, shape, bx=bx, bt=bt, hbm_budget=budget,
+                      itemsize=4)
+    tile_list = sorted(set(tiles) | ({auto.tile} if auto else set()))
+    for tile in tile_list:
+        run_tile = lambda t=tile: stencil_run_outofcore(
+            x, spec, n_steps, bx=bx, bt=bt, interpret=interpret, tile=t)
+        t_oc = _time(run_tile)
+        got = run_tile()
+        np.testing.assert_array_equal(
+            got, want,
+            err_msg=f"out-of-core (tile={tile}) diverged from in-core")
+        tp = TilePlan(spec, shape, bx=bx, bt=bt, tile=tile, itemsize=4)
+        terms = pm.outofcore_roofline(tp, n_steps)
+        gb = tp.host_bytes_per_sweep() * tp.sweeps(n_steps) / t_oc / 1e9
+        rows.append({
+            "name": f"outofcore_tile{tile}",
+            "us": t_oc * 1e6,
+            "derived": (f"{cell_updates / t_oc / 1e9:.3f} GCell/s "
+                        f"host-stream {gb:.2f} GB/s "
+                        f"amp={tp.transfer_amplification:.2f} "
+                        f"exposed_transfer="
+                        f"{terms.exposed_transfer_fraction:.2f}"
+                        f"{' (planned)' if auto and tile == auto.tile else ''}"
+                        f" bitwise==incore"),
+            "gcells_per_s": cell_updates / t_oc / 1e9,
+            "host_gb_per_s": gb,
+            "exposed_transfer_fraction": terms.exposed_transfer_fraction,
+            "transfer_amplification": tp.transfer_amplification,
+            "config": {"bx": bx, "bt": bt, "tile": tile,
+                       "planned": bool(auto and tile == auto.tile)},
+            "roofline": {
+                "t_outofcore_us": terms.t_outofcore * 1e6,
+                "t_host_us": terms.t_host * 1e6,
+                "exposed_transfer_fraction":
+                    terms.exposed_transfer_fraction,
+            },
+        })
+
+    if smoke:
+        # Auto-routing gate: the same problem through the public entry
+        # point under the forced budget must take the out-of-core path
+        # (host array back) and stay bitwise-equal.
+        routed = ops.stencil_run(x, spec, n_steps, bx=bx, bt=bt,
+                                 backend=backend, hbm_budget=budget)
+        assert isinstance(routed, np.ndarray), type(routed)
+        np.testing.assert_array_equal(routed, want)
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny parity-asserted run under a forced "
+                         "~1 MiB HBM budget (the CI gate)")
+    ap.add_argument("--json", default="BENCH_outofcore.json",
+                    help="machine-readable record path "
+                         "(default: %(default)s; empty disables)")
+    args = ap.parse_args(argv)
+
+    rows = run(smoke=args.smoke)
+    print("name,us_per_run,derived")
+    for r in rows:
+        print(f"{r['name']},{r['us']:.1f},{r['derived']}")
+
+    if args.json:
+        payload = {"generated_by": "benchmarks.outofcore",
+                   "smoke": args.smoke, "rows": rows}
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+        print(f"# wrote {args.json} ({len(rows)} rows)", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -19,7 +19,7 @@ import sys
 import traceback
 
 SUITES = ("smoke", "rodinia", "stencil", "scaling", "serving",
-          "model_accuracy", "projection")
+          "outofcore", "model_accuracy", "projection")
 
 
 def _json_row(suite: str, r: dict) -> dict:
@@ -70,6 +70,8 @@ def main(argv=None):
                 from benchmarks import scaling as mod
             elif suite == "serving":
                 from benchmarks import serving as mod
+            elif suite == "outofcore":
+                from benchmarks import outofcore as mod
             elif suite == "model_accuracy":
                 from benchmarks import model_accuracy as mod
             elif suite == "projection":

@@ -2,9 +2,11 @@
 from repro.core.stencil import (AuxOperand, StencilSpec, box_spec,
                                 diffusion, hotspot2d, hotspot3d, shift,
                                 shift_nd, star_as_box)
-from repro.core.blocking import BlockPlan, candidate_plans
+from repro.core.blocking import (BlockPlan, TilePlan, candidate_plans,
+                                 incore_resident_bytes, plan_tiles)
 from repro.core.perf_model import (TpuSpec, V5E, V5P_PROJECTION,
                                    RooflineTerms, stencil_roofline,
+                                   outofcore_roofline,
                                    select_config, predict_gflops,
                                    predict_gcells_per_s, lm_roofline,
                                    model_flops_train, model_flops_decode)
@@ -12,8 +14,9 @@ from repro.core.perf_model import (TpuSpec, V5E, V5P_PROJECTION,
 __all__ = [
     "AuxOperand", "box_spec", "shift", "shift_nd", "star_as_box",
     "StencilSpec", "diffusion", "hotspot2d", "hotspot3d", "BlockPlan",
-    "candidate_plans", "TpuSpec", "V5E", "V5P_PROJECTION", "RooflineTerms",
-    "stencil_roofline", "select_config", "predict_gflops",
-    "predict_gcells_per_s", "lm_roofline", "model_flops_train",
-    "model_flops_decode",
+    "TilePlan", "candidate_plans", "incore_resident_bytes", "plan_tiles",
+    "TpuSpec", "V5E", "V5P_PROJECTION", "RooflineTerms",
+    "stencil_roofline", "outofcore_roofline", "select_config",
+    "predict_gflops", "predict_gcells_per_s", "lm_roofline",
+    "model_flops_train", "model_flops_decode",
 ]

@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Tuple
+from typing import Optional, Tuple
 
 from repro.core.stencil import StencilSpec
 
@@ -185,6 +185,184 @@ class BlockPlan:
     def sweeps(self, n_steps: int) -> int:
         """Grid passes needed for ``n_steps`` total time steps."""
         return math.ceil(n_steps / self.bt)
+
+
+def incore_resident_bytes(spec: StencilSpec, grid_shape: Tuple[int, ...],
+                          itemsize: int = 4, batch: int = 1,
+                          extra_streams: int = 0) -> int:
+    """Device-HBM working set of an *in-core* run of ``spec``.
+
+    What must be resident at once: the input grid, the output grid,
+    and one grid per **declared** aux operand — residency counts every
+    operand individually (the engine's pre-summing of source operands
+    saves VMEM *streams*, not HBM residency, so this is deliberately
+    not ``BlockPlan.n_aux``). ``extra_streams`` covers caller-side
+    operands the spec cannot see (the legacy ``source=`` kwarg). Each
+    array counts ``B`` times over for a batched dispatch. Lane/sublane
+    padding is ignored (it is < 1% at out-of-core sizes); this is the
+    number the HBM budget is compared against to decide whether a
+    problem needs the out-of-core path (``repro.outofcore``).
+    """
+    cells = batch
+    for s in grid_shape:
+        cells *= s
+    return cells * itemsize * (2 + len(spec.aux) + extra_streams)
+
+
+@dataclasses.dataclass(frozen=True)
+class TilePlan:
+    """Out-of-core decomposition: leading-axis tiles + deep ghosts.
+
+    The host array plays the FPGA's external DRAM and device HBM plays
+    its block RAM (thesis §5.3's "no input-size restriction" claim,
+    re-landed one memory level up): the grid's *leading* axis (rows for
+    2D, z-planes for 3D — the same axis ``distributed/halo.py``
+    shards) is cut into ``tile``-deep slices, and each slice streams
+    through the device as a ``ghost + tile + ghost`` slab, where
+    ``ghost = r * bt`` is the dependency cone of one fused time block.
+    Unlike the sharded runner there is **no** ``ghost <= tile``
+    constraint: slabs are sliced from the full host-resident grid, so
+    ghosts may be arbitrarily deeper than the tile they wrap.
+
+    ``tile`` is the leading-axis extent each slab *owns* (the cropped
+    center); ``batch`` scales every per-slab byte count for a
+    ``[B, *grid]`` batched grid (tiles stream the whole batch of one
+    slice — exactly how the halo runner grid-shards batches).
+    """
+
+    spec: StencilSpec
+    grid_shape: Tuple[int, ...]   # per-problem grid (no batch axis)
+    bx: int
+    bt: int
+    tile: int                     # leading-axis rows/planes per tile
+    itemsize: int = 4
+    batch: int = 1
+    # Caller-side operand grids the spec cannot see (the legacy
+    # ``source=`` kwarg): each is sliced and uploaded per tile exactly
+    # like a declared operand, so it must count in every byte total.
+    extra_streams: int = 0
+
+    def __post_init__(self):
+        if len(self.grid_shape) != self.spec.dims:
+            raise ValueError("grid_shape rank must equal spec.dims")
+        if not 1 <= self.tile <= self.grid_shape[0]:
+            raise ValueError(
+                f"tile must be in [1, {self.grid_shape[0]}] "
+                f"(the leading-axis extent), got {self.tile}")
+        if self.batch < 1:
+            raise ValueError("batch >= 1")
+
+    @property
+    def ghost(self) -> int:
+        """Ghost depth per side: the ``r * bt`` dependency cone."""
+        return self.spec.halo(self.bt)
+
+    @property
+    def leading(self) -> int:
+        return self.grid_shape[0]
+
+    @property
+    def n_tiles(self) -> int:
+        return math.ceil(self.leading / self.tile)
+
+    @property
+    def slab_extent(self) -> int:
+        """Leading extent of every device slab: ghost + tile + ghost
+        (fixed across tiles so one engine compilation serves all)."""
+        return self.tile + 2 * self.ghost
+
+    @property
+    def _per_slice(self) -> int:
+        """Cells per unit of leading extent (batch included)."""
+        cells = self.batch
+        for s in self.grid_shape[1:]:
+            cells *= s
+        return cells
+
+    @property
+    def n_operands(self) -> int:
+        """Input arrays sliced and uploaded per tile besides the grid:
+        one slab per **declared** aux operand (each is its own resident
+        array — residency is not ``BlockPlan.n_aux``, which collapses
+        pre-summed source streams) plus ``extra_streams``."""
+        return len(self.spec.aux) + self.extra_streams
+
+    def device_bytes(self, depth: int = 2) -> int:
+        """HBM held by ``depth`` tiles in flight (double buffering).
+
+        Per in-flight tile: the input slab, one slab per operand, and
+        the output slab. ``depth=2`` is the steady state of the
+        double-buffered loop — tile ``i``'s result is still on device
+        while tile ``i+1``'s transfer and compute proceed.
+        """
+        per_tile = self.slab_extent * self._per_slice * self.itemsize \
+            * (2 + self.n_operands)
+        return depth * per_tile
+
+    def host_bytes_per_sweep(self) -> int:
+        """Host<->device traffic for one ``bt``-step pass over the grid:
+        every tile uploads its ``ghost+tile+ghost`` slab once per input
+        array and downloads its ``tile``-deep result."""
+        up = self.n_tiles * self.slab_extent * (1 + self.n_operands)
+        down = self.leading          # owned slices come back exactly once
+        return (up + down) * self._per_slice * self.itemsize
+
+    @property
+    def transfer_amplification(self) -> float:
+        """Host-read amplification from overlapped ghosts:
+        ``(tile + 2*ghost) / tile`` — the out-of-core analog of the
+        halo runner's slab-recompute factor. Larger tiles amortize it."""
+        return self.slab_extent / self.tile
+
+    def sweeps(self, n_steps: int) -> int:
+        return math.ceil(n_steps / self.bt)
+
+
+def plan_tiles(spec: StencilSpec, grid_shape: Tuple[int, ...], *,
+               bx: int, bt: int, hbm_budget: int, itemsize: int = 4,
+               batch: int = 1, depth: int = 2,
+               extra_streams: int = 0) -> Optional[TilePlan]:
+    """Size leading-axis tiles against a device-HBM budget.
+
+    Returns ``None`` when the whole problem fits in-core under
+    ``hbm_budget`` (no tiling needed). Otherwise returns the TilePlan
+    with the **largest** tile whose ``depth``-buffered working set fits
+    the budget — in the transfer model, bigger tiles are strictly
+    better (ghost re-upload amortizes as ``(tile + 2*ghost)/tile``), so
+    the only search is over ``bt`` (done by the autotuner, which trades
+    ghost depth against sweep count). Raises when even a 1-slice tile
+    cannot fit, naming the budget and the minimum it would take.
+    """
+    if incore_resident_bytes(spec, grid_shape, itemsize, batch,
+                             extra_streams) <= hbm_budget:
+        return None
+    lo, hi = 1, grid_shape[0]
+
+    def fits(tile: int) -> bool:
+        return TilePlan(spec, grid_shape, bx=bx, bt=bt, tile=tile,
+                        itemsize=itemsize, batch=batch,
+                        extra_streams=extra_streams,
+                        ).device_bytes(depth) <= hbm_budget
+
+    if not fits(lo):
+        need = TilePlan(spec, grid_shape, bx=bx, bt=bt, tile=1,
+                        itemsize=itemsize, batch=batch,
+                        extra_streams=extra_streams).device_bytes(depth)
+        raise ValueError(
+            f"no out-of-core tiling of {grid_shape} (bt={bt}, batch="
+            f"{batch}) fits hbm_budget={hbm_budget}: even a 1-slice "
+            f"tile needs {need} bytes (ghost depth {spec.halo(bt)} per "
+            f"side, {depth}-deep buffering); lower bt or raise the "
+            f"budget")
+    while lo < hi:                     # largest tile that fits (bisect)
+        mid = (lo + hi + 1) // 2
+        if fits(mid):
+            lo = mid
+        else:
+            hi = mid - 1
+    return TilePlan(spec, grid_shape, bx=bx, bt=bt, tile=lo,
+                    itemsize=itemsize, batch=batch,
+                    extra_streams=extra_streams)
 
 
 def candidate_plans(spec: StencilSpec, grid_shape: Tuple[int, ...],

@@ -18,7 +18,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Iterable, Sequence
 
-from repro.core.blocking import BlockPlan, candidate_plans, shard_extent
+from repro.core.blocking import (BlockPlan, TilePlan, candidate_plans,
+                                 incore_resident_bytes, shard_extent)
 from repro.core.stencil import StencilSpec
 
 
@@ -41,6 +42,11 @@ class TpuSpec:
     # once, so small-grid occupancy rises with B (the serving
     # front-end's whole reason to exist).
     dispatch_overhead_s: float = 5e-6
+    # Host<->device bandwidth (PCIe-class). This is the out-of-core
+    # path's roofline: when a grid exceeds hbm_bytes, every sweep
+    # streams it over this link — the TPU analog of the thesis FPGA's
+    # external-DRAM channel, one memory level further out than HBM.
+    host_bw: float = 16e9
 
 
 V5E = TpuSpec()
@@ -67,6 +73,13 @@ class RooflineTerms:
     # of t_predicted (that stays the pure roofline max); it feeds the
     # occupancy term below and the batch-aware tuner ranking.
     t_dispatch: float = 0.0
+    # Out-of-core only: host<->device streaming time (slab uploads +
+    # result downloads over TpuSpec.host_bw) and the bytes behind it.
+    # Like t_dispatch these stay out of t_predicted (which remains the
+    # pure on-device roofline); rank out-of-core candidates with
+    # ``t_outofcore`` and report ``exposed_transfer_fraction``.
+    t_host: float = 0.0
+    host_bytes: float = 0.0
 
     @property
     def t_predicted(self) -> float:
@@ -93,6 +106,25 @@ class RooflineTerms:
         launch raises on small grids (1.0 = pipeline never drains)."""
         t = self.t_predicted
         return 0.0 if t == 0 else t / (t + self.t_dispatch)
+
+    @property
+    def t_outofcore(self) -> float:
+        """Modeled wall time of a double-buffered out-of-core run:
+        transfers overlap compute, so whichever side is slower sets the
+        pace — ``max(on-device roofline, host streaming)``."""
+        return max(self.t_predicted, self.t_host)
+
+    @property
+    def exposed_transfer_fraction(self) -> float:
+        """Modeled fraction of run time spent in *exposed* (un-hidden)
+        host<->device streaming, assuming the double-buffered loop
+        overlaps transfers with on-device work perfectly: only the
+        excess of t_host over the on-device roofline shows. 0 for
+        in-core runs; -> 1 as the host link becomes the bottleneck."""
+        t = self.t_outofcore
+        if t == 0:
+            return 0.0
+        return max(0.0, self.t_host - self.t_predicted) / t
 
     @property
     def exposed_collective_fraction(self) -> float:
@@ -146,6 +178,50 @@ def stencil_roofline(plan: BlockPlan, n_steps: int, tpu: TpuSpec = V5E,
         t_dispatch=sweeps * tpu.dispatch_overhead_s)
 
 
+def outofcore_roofline(tile_plan: TilePlan, n_steps: int,
+                       tpu: TpuSpec = V5E,
+                       read_amplification: float = 1.0) -> RooflineTerms:
+    """Roofline terms for a host-streaming out-of-core run.
+
+    On-device terms are the in-core ones (each slab runs the unchanged
+    single-device engine), plus the host<->device streaming term: every
+    sweep uploads each tile's ``ghost+tile+ghost`` slab per operand
+    stream and downloads the ``tile``-deep result
+    (``TilePlan.host_bytes_per_sweep``), all over ``tpu.host_bw``.
+    Rank tile shapes by ``t_outofcore`` (transfers overlap compute in
+    the double-buffered loop) and report ``exposed_transfer_fraction``
+    — the out-of-core analog of the halo runner's exposed-communication
+    fraction. Raising ``bt`` cuts sweeps (fewer host passes) at the
+    price of deeper ghosts; raising ``tile`` amortizes the ghost
+    re-upload — the two knobs the budget-aware autotuner searches.
+    """
+    plan = BlockPlan(tile_plan.spec, tile_plan.grid_shape,
+                     bx=tile_plan.bx, bt=tile_plan.bt,
+                     itemsize=tile_plan.itemsize)
+    base = stencil_roofline(plan, n_steps, tpu, chips=1,
+                            read_amplification=read_amplification,
+                            batch=tile_plan.batch)
+    # Ghost recompute: every slab computes (and moves through HBM) its
+    # full tile+2*ghost extent, not just the owned tile — the same
+    # slab factor the halo model charges (stencil_roofline's
+    # halo_exchange path). Without it the model under-prices deep-bt
+    # candidates, whose disproportionally deep ghosts are exactly the
+    # cost being traded against fewer host passes.
+    amp = tile_plan.transfer_amplification
+    sweeps = tile_plan.sweeps(n_steps)
+    host = float(tile_plan.host_bytes_per_sweep()) * sweeps
+    # Per-tile launches, not per-sweep: the dispatch term scales with
+    # the tile count (another reason small tiles lose).
+    t_disp = sweeps * tile_plan.n_tiles * tpu.dispatch_overhead_s
+    return dataclasses.replace(base,
+                               t_compute=base.t_compute * amp,
+                               t_memory=base.t_memory * amp,
+                               flops=base.flops * amp,
+                               hbm_bytes=base.hbm_bytes * amp,
+                               t_host=host / tpu.host_bw,
+                               host_bytes=host, t_dispatch=t_disp)
+
+
 def predict_gcells_per_s(plan: BlockPlan, n_steps: int, tpu: TpuSpec = V5E,
                          chips: int = 1,
                          read_amplification: float = 1.0) -> float:
@@ -166,7 +242,9 @@ def select_config(spec: StencilSpec, grid_shape, n_steps: int,
                   tpu: TpuSpec = V5E, top_k: int = 3,
                   read_amplification: float = 1.0,
                   vmem_budget: int | None = None,
-                  n_devices: int = 1, batch: int = 1) -> list[BlockPlan]:
+                  n_devices: int = 1, batch: int = 1,
+                  hbm_budget: int | None = None,
+                  itemsize: int = 4) -> list[BlockPlan]:
     """The §5.4 pruning step: rank all legal (bx, bt) by predicted time.
 
     Returns the ``top_k`` fastest plans; only these need be compiled and
@@ -179,7 +257,28 @@ def select_config(spec: StencilSpec, grid_shape, n_steps: int,
     charges each plan its modeled dispatch time, so on small grids —
     where launches, not the roofline, dominate — deeper ``bt`` (fewer
     launches) wins on merit.
+
+    **HBM budget**: an in-core plan keeps the whole grid (plus output
+    and every aux stream) resident, so no (bx, bt) choice can shrink
+    its device working set — if that working set exceeds ``hbm_budget``
+    (default ``tpu.hbm_bytes``), *no* in-core plan is legal and this
+    raises, naming the out-of-core path as the remedy. This is the
+    guarantee that ``select_config`` never returns a plan whose
+    working set exceeds the device's HBM; ``kernels/autotune.py``
+    catches the same condition up front and plans tiles instead.
     """
+    hbm = hbm_budget if hbm_budget is not None else tpu.hbm_bytes
+    resident = incore_resident_bytes(
+        spec, tuple(grid_shape), itemsize=itemsize, batch=batch)
+    if n_devices > 1:
+        resident = -(-resident // n_devices)     # per-device shard
+    if resident > hbm:
+        raise ValueError(
+            f"in-core working set {resident} bytes of grid {grid_shape}"
+            f"{f' x batch {batch}' if batch > 1 else ''} exceeds the "
+            f"HBM budget {hbm}: no (bx, bt) plan can fit it — route "
+            f"through the out-of-core runner (repro.outofcore / "
+            f"ops.stencil_run(..., hbm_budget=...)) instead")
     budget = vmem_budget if vmem_budget is not None else tpu.vmem_bytes
     if n_devices == 1:
         plans = candidate_plans(spec, grid_shape, vmem_budget=budget)

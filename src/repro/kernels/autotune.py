@@ -33,24 +33,31 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import logging
 import os
 import pathlib
 import tempfile
 import time
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.blocking import BlockPlan
-from repro.core.perf_model import TpuSpec, V5E, select_config
+from repro.core.blocking import (BlockPlan, TilePlan,
+                                 incore_resident_bytes, plan_tiles)
+from repro.core.perf_model import (TpuSpec, V5E, outofcore_roofline,
+                                   select_config)
 from repro.core.stencil import StencilSpec
 
-_CACHE_VERSION = 4   # v4: cache keys grew the batch size (|B{n}) and
-# winners may be measured under a batched plan; v3 added the IR fields
-# (boundary, tap layout, aux-operand signature, n_scalars); v2 added
-# |nd{n_devices}. A version mismatch drops the whole file — a v3 entry
-# must never be *misread* as an answer for a batched problem.
+_LOG = logging.getLogger("repro.autotune")
+
+_CACHE_VERSION = 5   # v5: cache keys grew the HBM budget (|hb{n}) and
+# winners may carry an out-of-core tile size ("tile"); v4 added the
+# batch size (|B{n}), v3 the IR fields (boundary, tap layout,
+# aux-operand signature, n_scalars), v2 |nd{n_devices}. A version
+# mismatch drops the whole file (with a logged found-vs-expected
+# notice) — a v4 entry must never be *misread* as an answer for a
+# budget-constrained problem.
 # Grids above this cell count are never timed on the host — the model
 # prior picks alone (measuring a 8192^2 interpret-mode sweep on CPU
 # would dwarf the run it is meant to speed up).
@@ -70,6 +77,12 @@ class TunedPlan:
     # choice came from the model prior or the cache).
     timings: Dict[Tuple[int, int], float] = dataclasses.field(
         default_factory=dict, compare=False)
+    # Out-of-core only: the leading-axis tile extent the plan was
+    # ranked (and possibly measured) with — None for in-core plans.
+    # ``ops.stencil_run`` re-derives the same tile deterministically
+    # (``plan_tiles`` picks the largest fit), so this is provenance
+    # plus a cache round-trip, not a second source of truth.
+    tile: Optional[int] = None
 
 
 # ---------------------------------------------------------------------------
@@ -97,7 +110,16 @@ def _load_cache() -> dict:
             data = json.load(f)
     except (OSError, ValueError):
         data = {}
-    if data.get("version") != _CACHE_VERSION:
+    if data and data.get("version") != _CACHE_VERSION:
+        # Name both versions so "why did everything re-tune?" is
+        # answerable from the log (docs/autotuning.md points --retune
+        # guidance at this message).
+        _LOG.warning(
+            "autotune cache %s holds version %s but this build expects "
+            "version %s; dropping all cached winners (they will "
+            "re-measure on demand — benchmarks/run.py --retune forces "
+            "a full re-search; see docs/autotuning.md)",
+            path, data.get("version"), _CACHE_VERSION)
         data = {}
     _MEM[path] = data
     return data
@@ -127,7 +149,8 @@ def clear_cache() -> None:
 
 def _key(spec: StencilSpec, shape, dtype: str, backend: str,
          vmem_budget: int, tpu_name: str, n_devices: int = 1,
-         batch: int = 1) -> str:
+         batch: int = 1, hbm_budget: int | None = None,
+         extra_streams: int = 0) -> str:
     sh = "x".join(str(s) for s in shape)
     # IR fields: boundary mode and tap layout change the kernel's work
     # per cell; the aux-operand signature and per-step scalar count
@@ -135,13 +158,20 @@ def _key(spec: StencilSpec, shape, dtype: str, backend: str,
     # of them (docs/autotuning.md has the full schema). ``shape`` is
     # the *grid* shape; the batch size rides separately (|B{n}) because
     # a B-problem dispatch amortizes launches differently than a grid
-    # B-times taller.
-    aux_sig = ",".join(f"{op.role[0]}" for op in spec.aux) or "-"
+    # B-times taller. ``hb`` is the HBM budget the plan was sized
+    # against (device default when unset): a budget that forces
+    # out-of-core tiling changes both the winning (bx, bt) and the
+    # tile that rides with it, so budgets must never share entries.
+    # A caller-side legacy ``source=`` grid streams exactly like a
+    # declared source operand, so it appends a trailing "s" to the
+    # aux signature rather than growing the schema another field.
+    aux_sig = ",".join([op.role[0] for op in spec.aux]
+                       + ["s"] * extra_streams) or "-"
     ir = (f"b{spec.boundary}|L{spec.layout}|ax{aux_sig}|"
           f"sc{spec.n_scalars}")
     return (f"{spec.name}|d{spec.dims}|r{spec.radius}|{ir}|{sh}|{dtype}|"
             f"{backend}|vm{vmem_budget}|{tpu_name}|B{batch}|"
-            f"nd{n_devices}")
+            f"nd{n_devices}|hb{'-' if hbm_budget is None else hbm_budget}")
 
 
 # ---------------------------------------------------------------------------
@@ -156,11 +186,14 @@ def _variants_for(spec: StencilSpec, backend: str) -> tuple[str, ...]:
 
 
 def _measure(x, spec, plans, variants, backend, timer,
-             repeats: int = 2, n_devices: int = 1):
+             repeats: int = 2, n_devices: int = 1,
+             hbm_budget: int | None = None, extra_streams: int = 0):
     """Time each (plan, variant); return (winner, winner_variant,
     {(bx, bt): best seconds-per-step}). With ``n_devices > 1`` each
     candidate is one sweep of the sharded deep-halo runner (collective
-    cost included); candidates that cannot run — e.g. too few visible
+    cost included); with an ``hbm_budget`` the run auto-routes through
+    the out-of-core runner, so tile streaming cost is *in* the
+    measurement; candidates that cannot run — e.g. too few visible
     devices — just leave the race."""
     from repro.kernels import ops
     timings: Dict[Tuple[int, int], float] = {}
@@ -168,16 +201,21 @@ def _measure(x, spec, plans, variants, backend, timer,
     # Specs that declare operands still race: synthesize zero aux grids
     # and unit scalars of the declared shapes (timing does not care
     # about the values, only the streaming and arithmetic they cost).
+    # ``extra_streams`` likewise synthesizes the caller's legacy
+    # ``source=`` grid, so its streaming cost is in the measurement.
     aux = {op.name: jnp.zeros_like(x) for op in spec.aux} or None
+    src = jnp.zeros_like(x) if extra_streams else None
     for p in plans:
         for v in variants:
             def run(p=p, v=v):
                 scal = (jnp.ones((p.bt, spec.n_scalars), jnp.float32)
                         if spec.n_scalars else None)
-                return ops.stencil_run(
+                # jax.block_until_ready (not the method): the
+                # out-of-core route returns a host numpy array.
+                return jax.block_until_ready(ops.stencil_run(
                     x, spec, p.bt, bx=p.bx, bt=p.bt, backend=backend,
-                    variant=v, aux=aux, scalars=scal,
-                    n_devices=n_devices).block_until_ready()
+                    variant=v, source=src, aux=aux, scalars=scal,
+                    n_devices=n_devices, hbm_budget=hbm_budget))
             try:
                 run()  # warm-up / compile
             except Exception:   # noqa: BLE001 - an illegal candidate
@@ -199,7 +237,8 @@ def plan(shape, spec: StencilSpec, *, dtype="float32",
          backend: str = "auto", n_steps: int = 16, top_k: int = 3,
          measure: bool | None = None, use_cache: bool = True,
          vmem_budget: int | None = None, tpu: TpuSpec = V5E,
-         n_devices: int = 1,
+         n_devices: int = 1, hbm_budget: int | None = None,
+         extra_streams: int = 0,
          timer: Callable[[], float] = time.perf_counter) -> TunedPlan:
     """Resolve the best (bx, bt, variant) for one stencil problem.
 
@@ -223,6 +262,23 @@ def plan(shape, spec: StencilSpec, *, dtype="float32",
     divides the device count the sharded runner splits the batch axis
     (whole problems per device, no halo traffic), so the model prices
     the per-device slice without a collective term.
+
+    ``hbm_budget``: device HBM available to this problem (default
+    ``tpu.hbm_bytes``). ``extra_streams`` counts caller-side operand
+    grids the spec cannot see (the legacy ``source=`` kwarg) so the
+    tuner sizes, measures and caches the same problem the run will
+    actually route. When the in-core working set — grid + output +
+    every operand — exceeds the budget, planning goes
+    **budget-aware**: each
+    VMEM-legal (bx, bt) is paired with the largest leading-axis tile
+    whose double-buffered slab working set fits
+    (``core.blocking.plan_tiles``) and ranked by the out-of-core
+    roofline (``perf_model.outofcore_roofline``: on-device terms vs
+    host-streaming term, overlap modeled by max) — deeper ``bt`` buys
+    fewer host passes at the price of deeper ghosts, the out-of-core
+    version of the thesis's temporal-blocking tradeoff. The winning
+    tile rides on ``TunedPlan.tile`` and in the cache value; the
+    budget joins the cache key (``|hb{n}``).
     """
     from repro.kernels import ops
     shape = tuple(int(s) for s in shape)
@@ -235,14 +291,35 @@ def plan(shape, spec: StencilSpec, *, dtype="float32",
     dtype = str(jnp.dtype(dtype).name)
     backend = ops.resolve_backend(backend)
     budget = vmem_budget if vmem_budget is not None else tpu.vmem_bytes
+    itemsize = jnp.dtype(dtype).itemsize
+    hbm = hbm_budget if hbm_budget is not None else tpu.hbm_bytes
+    resident = incore_resident_bytes(spec, grid, itemsize, batch or 1,
+                                     extra_streams)
+    # Per-device: a sharded run holds ~1/nd of the working set per
+    # device (same rule as outofcore.route_decision and the
+    # select_config guard), so only a per-shard overflow is out-of-core.
+    outofcore = -(-resident // max(n_devices, 1)) > hbm
+    if outofcore and n_devices > 1:
+        # Measuring would dispatch stencil_run, which raises this same
+        # error per candidate — every one would silently leave the
+        # race and an unusable "winner" would come back. Fail first.
+        raise NotImplementedError(
+            f"out-of-core tiling (per-device working set of {shape} "
+            f"over {n_devices} devices exceeds hbm_budget={hbm}) "
+            f"cannot yet be combined with sharding; see "
+            f"docs/outofcore.md")
+    # Keyed on the *effective* budget: plan(hbm_budget=None) and
+    # plan(hbm_budget=tpu.hbm_bytes) are the same problem and must hit
+    # the same entry — and an entry's meaning must not silently shift
+    # if a TpuSpec's default HBM is ever revised.
     key = _key(spec, grid, dtype, backend, budget, tpu.name, n_devices,
-               batch or 1)
+               batch or 1, hbm, extra_streams)
 
-    def _mk(bx, bt, variant, source, timings=None):
-        bp = BlockPlan(spec, grid, bx=bx, bt=bt,
-                       itemsize=jnp.dtype(dtype).itemsize)
+    def _mk(bx, bt, variant, source, timings=None, tile=None):
+        bp = BlockPlan(spec, grid, bx=bx, bt=bt, itemsize=itemsize)
         return TunedPlan(bx=bx, bt=bt, variant=variant, source=source,
-                         block_plan=bp, timings=timings or {})
+                         block_plan=bp, timings=timings or {},
+                         tile=tile)
 
     cache = _load_cache() if use_cache else {}
     hit = cache.get(key)
@@ -251,7 +328,8 @@ def plan(shape, spec: StencilSpec, *, dtype="float32",
     # but stay defensive about hand-edited cache files).
     if hit is not None and not (measure is True
                                 and hit.get("source") != "measured"):
-        return _mk(hit["bx"], hit["bt"], hit["variant"], "cache")
+        return _mk(hit["bx"], hit["bt"], hit["variant"], "cache",
+                   tile=hit.get("tile"))
 
     # Batch-axis sharding (B % nd == 0): each device owns whole
     # problems, so plans are ranked per-device — no halo constraint,
@@ -259,9 +337,46 @@ def plan(shape, spec: StencilSpec, *, dtype="float32",
     eff_nd, eff_batch = n_devices, batch or 1
     if batch is not None and n_devices > 1 and batch % n_devices == 0:
         eff_nd, eff_batch = 1, batch // n_devices
-    shortlist = select_config(
-        spec, grid, n_steps, tpu=tpu, top_k=top_k,
-        vmem_budget=vmem_budget, n_devices=eff_nd, batch=eff_batch)
+    tiles: dict = {}
+    if outofcore:
+        # Budget-aware planning: every VMEM-legal (bx, bt) — not the
+        # in-core top-k, whose deep-bt favorites may have ghosts no
+        # budget-legal tile can carry — is paired with the largest
+        # tile its slabs can afford under the budget and re-ranked by
+        # the out-of-core roofline. The HBM guard inside select_config
+        # is bypassed (2**62) because the whole point here is that the
+        # grid does NOT fit.
+        ranked = []
+        for p in select_config(spec, grid, n_steps, tpu=tpu,
+                               top_k=1 << 30,
+                               vmem_budget=vmem_budget,
+                               n_devices=eff_nd, batch=eff_batch,
+                               hbm_budget=2 ** 62, itemsize=itemsize):
+            try:
+                tp = plan_tiles(spec, grid, bx=p.bx, bt=p.bt,
+                                hbm_budget=hbm, itemsize=itemsize,
+                                batch=batch or 1,
+                                extra_streams=extra_streams)
+            except ValueError:
+                continue          # this bt's ghosts can't fit: drop it
+            # outofcore ⇒ the resident set exceeds hbm, so plan_tiles
+            # (same expression, same budget) can never report an
+            # in-core fit here.
+            assert tp is not None
+            terms = outofcore_roofline(tp, n_steps, tpu=tpu)
+            ranked.append((terms.t_outofcore + terms.t_dispatch, p, tp))
+        if not ranked:
+            raise ValueError(
+                f"no (bx, bt, tile) fits hbm_budget={hbm} for grid "
+                f"{grid} (spec {spec.name!r}); raise the budget")
+        ranked.sort(key=lambda t: t[0])
+        shortlist = [p for _, p, _ in ranked[:top_k]]
+        tiles = {(tp.bx, tp.bt): tp.tile for _, _, tp in ranked}
+    else:
+        shortlist = select_config(
+            spec, grid, n_steps, tpu=tpu, top_k=top_k,
+            vmem_budget=vmem_budget, n_devices=eff_nd, batch=eff_batch,
+            hbm_budget=hbm, itemsize=itemsize)
     variants = _variants_for(spec, backend)
 
     cells = 1
@@ -270,20 +385,27 @@ def plan(shape, spec: StencilSpec, *, dtype="float32",
     do_measure = (backend != "interpret" and cells <= _MEASURE_CELL_LIMIT
                   if measure is None else measure)
 
+    def _tile_of(p):
+        return tiles.get((p.bx, p.bt)) if outofcore else None
+
     if do_measure:
         x = jnp.zeros(shape, jnp.dtype(dtype))
+        # The *effective* budget (tpu default applied), not the raw
+        # argument: measurement must route the same in-core/out-of-core
+        # path the ranking priced, even for a non-default TpuSpec.
         winner, w_variant, timings = _measure(
             x, spec, shortlist, variants, backend, timer,
-            n_devices=n_devices)
+            n_devices=n_devices, hbm_budget=hbm,
+            extra_streams=extra_streams)
         if winner is not None:
             tuned = _mk(winner.bx, winner.bt, w_variant, "measured",
-                        timings)
+                        timings, tile=_tile_of(winner))
         else:   # every candidate failed to run; fall back to the prior
             tuned = _mk(shortlist[0].bx, shortlist[0].bt, variants[0],
-                        "model")
+                        "model", tile=_tile_of(shortlist[0]))
     else:
         tuned = _mk(shortlist[0].bx, shortlist[0].bt, variants[0],
-                    "model")
+                    "model", tile=_tile_of(shortlist[0]))
 
     # Only measured winners are worth persisting: the model prior is
     # cheap to recompute and caching it would shadow later measurement.
@@ -291,5 +413,7 @@ def plan(shape, spec: StencilSpec, *, dtype="float32",
         cache = _load_cache()
         cache[key] = {"bx": tuned.bx, "bt": tuned.bt,
                       "variant": tuned.variant, "source": tuned.source}
+        if tuned.tile is not None:
+            cache[key]["tile"] = tuned.tile
         _store_cache(cache)
     return tuned

@@ -39,6 +39,14 @@ batch dims are rejected here, before anything reaches a kernel. With
 ``n_devices > 1`` the sharded runner splits the *batch* axis when it
 divides the device count evenly (whole problems per device, no halo
 traffic) and falls back to grid sharding otherwise.
+
+Out-of-core execution: ``stencil_run``/``stencil_auto`` compare the
+in-core working set against an HBM budget (``hbm_budget=``, default
+the modeled device HBM) and auto-route over-budget problems through
+the host-streaming tiled runner (``repro.outofcore`` —
+docs/outofcore.md): host memory holds the grid, leading-axis tiles
+with deep ghosts stream through the device, and the result comes back
+as a host numpy array, bitwise-equal to the in-core engine.
 """
 from __future__ import annotations
 
@@ -122,21 +130,33 @@ def _tslice(scalars, a: int, b: int):
     return scalars[:, a:b] if scalars.ndim == 3 else scalars[a:b]
 
 
-def _resolve_blocking(x, spec, bx, bt, variant, backend, n_steps=None,
-                      n_devices=1):
+def resolve_blocking(x, spec, bx=None, bt=None, variant=None,
+                     backend="interpret", n_steps=None, n_devices=1,
+                     hbm_budget=None, extra_streams=0):
     """Fill any None among (bx, bt, variant) from the autotuner.
 
-    With ``bx`` and ``bt`` both explicit, no tuner runs and a None
-    variant just takes the engine default — the tuner's variant choice
-    is only meaningful alongside the (bx, bt) it was measured with.
-    This is the single resolution path shared by ``stencil_sweep``,
-    ``stencil_run`` and (via ``autotune.plan``) ``stencil_auto``.
+    The **public resolve-once entry point**: apps and benchmarks that
+    drive many ``stencil_run`` calls over one problem (srad_blocked's
+    per-iteration sweeps, the rodinia suite's timed loops) call this
+    once up front and pass the result explicitly, instead of paying a
+    tuner resolution (and risking a mid-loop measurement race) per
+    call. With ``bx`` and ``bt`` both explicit, no tuner runs and a
+    None variant just takes the engine default — the tuner's variant
+    choice is only meaningful alongside the (bx, bt) it was measured
+    with. This is the single resolution path shared by
+    ``stencil_sweep``, ``stencil_run`` and (via ``autotune.plan``)
+    ``stencil_auto``. ``hbm_budget`` makes the resolution
+    budget-aware: an over-budget problem ranks (bx, bt) by the
+    out-of-core roofline (see ``kernels/autotune.py``);
+    ``extra_streams`` counts caller-side operand grids (the legacy
+    ``source=``) so the tuner sizes the problem the run will route.
     """
     if bx is not None and bt is not None:
         return bx, bt, variant if variant is not None else "revolving"
     from repro.kernels import autotune
     tuned = autotune.plan(x.shape, spec, dtype=x.dtype, backend=backend,
-                          n_devices=n_devices,
+                          n_devices=n_devices, hbm_budget=hbm_budget,
+                          extra_streams=extra_streams,
                           **({} if n_steps is None
                              else {"n_steps": n_steps}))
     return (bx if bx is not None else tuned.bx,
@@ -144,10 +164,8 @@ def _resolve_blocking(x, spec, bx, bt, variant, backend, n_steps=None,
             variant if variant is not None else tuned.variant)
 
 
-# Public name: apps that drive many stencil_run calls over one problem
-# (e.g. srad_blocked's per-iteration sweeps) resolve once up front and
-# pass the result explicitly instead of re-resolving per call.
-resolve_blocking = _resolve_blocking
+# Pre-PR-5 private name, kept for existing call sites.
+_resolve_blocking = resolve_blocking
 
 
 def stencil_sweep(x: jax.Array, spec: StencilSpec, bx: int | None = None,
@@ -169,8 +187,9 @@ def stencil_sweep(x: jax.Array, spec: StencilSpec, bx: int | None = None,
     backend = _resolve(backend)
     nd = 1 if n_devices is None else n_devices
     _validate_batch(x, spec, aux, scalars, source)
-    bx, bt, variant = _resolve_blocking(x, spec, bx, bt, variant, backend,
-                                        n_devices=nd)
+    bx, bt, variant = resolve_blocking(
+        x, spec, bx, bt, variant, backend, n_devices=nd,
+        extra_streams=int(source is not None))
     if backend == "reference":
         return _ref.stencil_multistep(x, spec, bt, source, aux=aux,
                                       scalars=scalars)
@@ -192,7 +211,8 @@ def stencil_run(x: jax.Array, spec: StencilSpec, n_steps: int,
                 source: jax.Array | None = None, aux=None,
                 scalars: jax.Array | None = None,
                 n_devices: int | None = None, devices=None,
-                overlap: bool = True) -> jax.Array:
+                overlap: bool = True,
+                hbm_budget: int | None = None) -> jax.Array:
     """``n_steps`` total time steps as ceil(n/bt) blocked sweeps.
 
     The trailing partial sweep runs with the remainder temporal degree so
@@ -205,13 +225,52 @@ def stencil_run(x: jax.Array, spec: StencilSpec, n_steps: int,
     sharded runner (one halo exchange per ``bt``-step block; see
     ``distributed/halo.py``); ``overlap`` selects its interior/edge
     schedule that hides the exchange under interior compute.
+
+    **Out-of-core**: when the in-core working set (grid + output +
+    every aux stream) exceeds ``hbm_budget`` — default: the modeled
+    device HBM, ``perf_model.V5E.hbm_bytes`` — the run auto-routes
+    through the host-streaming tiled runner (``repro.outofcore``):
+    the grid stays in host memory and leading-axis tiles with
+    ``r*bt``-deep ghosts stream through the device, bitwise-equal to
+    the in-core path for any tile size. The result is then a *host*
+    (numpy) array — it may not fit on the device either. Pass a small
+    explicit ``hbm_budget`` to force the route for testing. Combining
+    with ``n_devices > 1`` is deferred and raises loudly; the
+    ``reference`` backend ignores the budget (the oracle already runs
+    on the host).
     """
     backend = _resolve(backend)
     nd = 1 if n_devices is None else n_devices
     B = _validate_batch(x, spec, aux, scalars, source)
-    bx, bt, variant = _resolve_blocking(x, spec, bx, bt, variant, backend,
-                                        n_steps=n_steps, n_devices=nd)
+    bx, bt, variant = resolve_blocking(
+        x, spec, bx, bt, variant, backend, n_steps=n_steps,
+        n_devices=nd, hbm_budget=hbm_budget,
+        extra_streams=int(source is not None))
     bt = min(bt, n_steps) if n_steps else bt
+    if backend != "reference":
+        from repro.outofcore import route_decision
+        grid = x.shape[1:] if B is not None else x.shape
+        # Per-device comparison: a sharded run holds ~1/nd of the
+        # working set per device, so a grid that overflows one device
+        # but fits nd shards keeps its in-core deep-halo path.
+        routed, budget = route_decision(
+            spec, grid, x.dtype.itemsize, hbm_budget, batch=B or 1,
+            extra_streams=int(source is not None), n_devices=nd)
+        if routed:
+            if nd > 1:
+                raise NotImplementedError(
+                    f"out-of-core tiling (per-device working set of "
+                    f"{x.shape} over {nd} devices exceeds hbm_budget="
+                    f"{budget}) cannot yet be combined with sharding: "
+                    f"run out-of-core on one device, or raise the "
+                    f"budget / device count so each shard fits "
+                    f"(docs/outofcore.md tracks the planned "
+                    f"composition)")
+            from repro.outofcore import stencil_run_outofcore
+            return stencil_run_outofcore(
+                x, spec, n_steps, bx=bx, bt=bt, variant=variant,
+                interpret=backend == "interpret", hbm_budget=budget,
+                source=source, aux=aux, scalars=scalars)
     if scalars is not None:
         import jax.numpy as jnp
         scalars = jnp.asarray(scalars, jnp.float32)
@@ -244,17 +303,32 @@ def stencil_run(x: jax.Array, spec: StencilSpec, n_steps: int,
 def stencil_auto(x: jax.Array, spec: StencilSpec, n_steps: int,
                  backend: str = "auto", source: jax.Array | None = None,
                  aux=None, scalars: jax.Array | None = None,
-                 n_devices: int | None = None, **tune_kw):
-    """Autotuned end-to-end run; returns (result, TunedPlan)."""
+                 n_devices: int | None = None,
+                 hbm_budget: int | None = None, **tune_kw):
+    """Autotuned end-to-end run; returns (result, TunedPlan).
+
+    ``hbm_budget`` flows into both the tuner (budget-aware ranking,
+    ``TunedPlan.tile``) and the run itself (out-of-core auto-routing,
+    same rule as ``stencil_run``).
+    """
     from repro.kernels import autotune
     backend = _resolve(backend)
     nd = 1 if n_devices is None else n_devices
     tuned = autotune.plan(x.shape, spec, dtype=x.dtype, backend=backend,
-                          n_steps=n_steps, n_devices=nd, **tune_kw)
+                          n_steps=n_steps, n_devices=nd,
+                          hbm_budget=hbm_budget,
+                          extra_streams=int(source is not None),
+                          **tune_kw)
+    # The run must route against the same *effective* budget the tuner
+    # sized with: a custom tpu= in tune_kw changes the default, and
+    # handing the raw None to stencil_run would compare against
+    # V5E.hbm_bytes instead — dropping the tile the tuner just ranked.
+    if hbm_budget is None and "tpu" in tune_kw:
+        hbm_budget = tune_kw["tpu"].hbm_bytes
     out = stencil_run(x, spec, n_steps, bx=tuned.bx, bt=tuned.bt,
                       backend=backend, variant=tuned.variant,
                       source=source, aux=aux, scalars=scalars,
-                      n_devices=nd)
+                      n_devices=nd, hbm_budget=hbm_budget)
     return out, tuned
 
 

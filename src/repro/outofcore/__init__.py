@@ -1,0 +1,12 @@
+"""Out-of-core tiled stencil execution: grids larger than device HBM.
+
+The host-streaming analog of the thesis's "no input-size restriction"
+claim — host memory plays the FPGA's external DRAM, device HBM plays
+its block RAM. See ``runner.py`` and ``docs/outofcore.md``.
+"""
+from repro.core.blocking import TilePlan, plan_tiles
+from repro.outofcore.runner import (exceeds_budget, route_decision,
+                                    stencil_run_outofcore)
+
+__all__ = ["TilePlan", "plan_tiles", "exceeds_budget", "route_decision",
+           "stencil_run_outofcore"]

@@ -1,0 +1,324 @@
+"""Host-streaming tiled stencil execution (out-of-core subsystem).
+
+The thesis's combined spatial+temporal blocking exists so input size
+never restricts the accelerator: tiles stream from external DRAM
+through on-chip block RAM with overlapped halos (§5.3). Every path in
+this repo so far still required the full grid (plus halos) to fit in
+device HBM; this module removes that restriction by replaying the same
+design one memory level up — **host memory plays the FPGA's external
+DRAM, device HBM plays the block RAM**:
+
+    host grid (numpy, arbitrarily large)
+      │  leading-axis tile i, with ghost = r*bt slices per side
+      ▼
+    ┌──────────── device slab: [ghost │ tile │ ghost] ────────────┐
+    │ engine.stencil_call(bt fused steps — a self-contained        │
+    │ in-core problem: slabs are clipped to the grid, so the       │
+    │ default validity interval / boundary handling apply as-is)   │
+    └──────────────────────────┬──────────────────────────────────┘
+                               │ crop the center ``tile`` slices
+      host output grid  ◀──────┘  (double-buffered readback)
+
+Exactness (the deep-halo cone argument, re-used): after ``s`` of the
+``bt`` fused steps, a slab slice is exact iff its dependency cone —
+``s`` steps x radius ``r`` — stayed inside the slab; the ghost depth
+``r*bt`` is exactly the cone of the full block, so the cropped center
+is exact. Slabs are **clipped to the grid, never padded**: each slab
+is a self-contained smaller in-core problem whose array edges either
+*coincide* with true grid edges (first/last tile — the engine's
+boundary handling applies there, exactly as in-core, so the boundary
+mode acts at true grid edges only) or lie a full ghost depth away
+from the owned center (interior seams — whatever the boundary mode
+fabricates at a seam decays by ``r`` slices per fused step and never
+reaches the crop). Because every slab call is the *same jit graph*
+the in-core path compiles — the engine's leading-axis validity
+interval at its default full extent, with identical trace-time
+constants — results are **bitwise equal** to ``ops.stencil_run`` for
+any tile size, ``bt``, radius, dimensionality and boundary mode;
+``tests/test_outofcore.py`` asserts it and the benchmark's ``--smoke``
+gate re-checks it. (The halo runner instead *shifts* the validity
+interval over zero-padded ghosts — semantically equivalent, but a
+shifted interval compiles top-edge clamp taps through different XLA
+ops, which measures as 1-ulp drift: fine under the sharded runner's
+float-tolerance contract, fatal to the bitwise one here.)
+
+Unlike the sharded runner there is no ``ghost <= tile`` constraint:
+slabs are sliced straight from the host-resident grid, so the ghost
+may be arbitrarily deeper than the tile it wraps (tiny tiles under
+tiny budgets stay exact, just slow).
+
+Overlap: slabs are uploaded with ``jax.device_put`` and dispatched
+asynchronously; up to ``depth`` tiles stay in flight before the oldest
+result is materialized back to the host, so tile ``i+1``'s upload and
+compute run under tile ``i``'s readback (double buffering at
+``depth=2``). On real hardware the slab buffer is donated to the
+engine call so the device reuses it for the output; under
+``interpret`` donation is skipped (CPU donation just warns and
+copies).
+
+Streaming semantics match the halo runner exactly: every aux operand
+(and the legacy ``source``) slices per tile alongside the grid with
+the same ghost depth; per-step ``scalars`` slice per sweep (shared
+``(n_steps, k)``) or per problem (``(B, n_steps, k)``); a ``[B,
+*grid]`` batch tiles the *grid's* leading axis (array axis 1) with the
+whole batch riding on every slab.
+
+Combining out-of-core tiling with ``n_devices > 1`` sharding is
+deferred: ``kernels/ops.py`` raises a loud ``NotImplementedError``
+rather than guessing at a host-side partition of the device mesh (see
+``docs/outofcore.md`` for the planned composition).
+"""
+from __future__ import annotations
+
+from collections import OrderedDict, deque
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.blocking import (TilePlan, incore_resident_bytes,
+                                 plan_tiles)
+from repro.core.stencil import StencilSpec
+from repro.kernels import engine
+from repro.kernels.ops import _tslice
+
+
+def route_decision(spec: StencilSpec, grid_shape, itemsize: int,
+                   hbm_budget: Optional[int], batch: int = 1,
+                   extra_streams: int = 0,
+                   n_devices: int = 1) -> Tuple[bool, int]:
+    """(route out-of-core?, effective budget) — the ONE predicate both
+    ``ops.stencil_run`` and the serving dispatcher consult. Keeping it
+    here (rather than each caller re-deriving the default budget +
+    threshold) means the two can never disagree — a jitted in-core
+    dispatcher whose traced ``stencil_run`` decides "out-of-core"
+    would crash converting a tracer to numpy.
+
+    ``n_devices``: the budget is *per device*, and a sharded run holds
+    only ~1/n of the working set per device (the deep-halo runner's
+    whole point — halos add a few percent, dwarfed by the split), so
+    the comparison divides the resident bytes by the device count:
+    a 20 GB grid sharded 4 ways keeps its in-core deep-halo path on
+    16 GiB devices, exactly as ``perf_model.select_config`` prices it.
+    """
+    if hbm_budget is None:
+        from repro.core.perf_model import V5E
+        hbm_budget = V5E.hbm_bytes
+    resident = incore_resident_bytes(spec, tuple(grid_shape), itemsize,
+                                     batch, extra_streams)
+    per_device = -(-resident // max(n_devices, 1))
+    return per_device > hbm_budget, hbm_budget
+
+
+def exceeds_budget(spec: StencilSpec, grid_shape, itemsize: int,
+                   hbm_budget: int, batch: int = 1,
+                   extra_streams: int = 0) -> bool:
+    """Whether a single-device in-core run of this problem would
+    overflow the HBM budget — a thin wrapper over ``route_decision``
+    so there is exactly one definition of the threshold."""
+    return route_decision(spec, grid_shape, itemsize, hbm_budget,
+                          batch, extra_streams)[0]
+
+
+# Jitted slab dispatchers, LRU-bounded: one compilation serves every
+# tile of every sweep with the same (bts, slab shape) — the key holds
+# the slab-determining dims only (leading extent excluded), so grids
+# differing only in total height share entries. The bound keeps a
+# long-lived serving process (many distinct specs/shapes) from
+# accumulating compiled executables forever.
+_DISPATCHERS: OrderedDict = OrderedDict()
+_DISPATCHER_CAP = 64
+
+
+def _dispatcher(key, spec, bx, bts, variant, interpret, aux_names,
+                donate):
+    fn = _DISPATCHERS.get(key)
+    if fn is not None:
+        _DISPATCHERS.move_to_end(key)
+        return fn
+
+    def call(slab, src, aux_list, scal):
+        aux = dict(zip(aux_names, aux_list)) or None
+        return engine.stencil_call(slab, spec, bx=bx, bt=bts,
+                                   variant=variant, interpret=interpret,
+                                   source=src, aux=aux, scalars=scal)
+
+    # Donate the input slab so the device reuses its HBM for the
+    # output — halving the steady-state footprint on real hardware.
+    # Interpret/CPU donation is a no-op that warns, so skip it there.
+    fn = jax.jit(call, donate_argnums=(0,) if donate else ())
+    _DISPATCHERS[key] = fn
+    if len(_DISPATCHERS) > _DISPATCHER_CAP:
+        _DISPATCHERS.popitem(last=False)
+    return fn
+
+
+def _slab(a: np.ndarray, start: int, end: int, ax: int) -> np.ndarray:
+    """``a[start:end]`` along ``ax`` — slabs are *clipped* to the grid,
+    never padded (see the module docstring's exactness note)."""
+    idx = [slice(None)] * a.ndim
+    idx[ax] = slice(start, end)
+    return a[tuple(idx)]
+
+
+def resolve_tile(x_shape, spec: StencilSpec, *, bx: int, bt: int,
+                 itemsize: int, hbm_budget: int, depth: int = 2,
+                 extra_streams: int = 0) -> Optional[TilePlan]:
+    """The TilePlan ``stencil_run_outofcore`` will use for this problem
+    (None when it fits in-core). Splits a ``[B, *grid]`` shape into
+    (batch, grid) before sizing."""
+    shape = tuple(int(s) for s in x_shape)
+    batch = shape[0] if len(shape) == spec.dims + 1 else 1
+    grid = shape[1:] if len(shape) == spec.dims + 1 else shape
+    return plan_tiles(spec, grid, bx=bx, bt=bt, hbm_budget=hbm_budget,
+                      itemsize=itemsize, batch=batch, depth=depth,
+                      extra_streams=extra_streams)
+
+
+def stencil_run_outofcore(x, spec: StencilSpec, n_steps: int, *,
+                          bx: int, bt: int, variant: str = "revolving",
+                          interpret: bool = True,
+                          tile: int | None = None,
+                          hbm_budget: int | None = None,
+                          source=None, aux=None, scalars=None,
+                          depth: int = 2) -> np.ndarray:
+    """``n_steps`` stencil steps with the grid resident on the *host*.
+
+    The grid (and every operand) lives in host memory; the device only
+    ever holds ``depth`` slabs of ``ghost + tile + ghost`` leading
+    slices at a time. ``tile`` pins the tile extent directly;
+    otherwise it is sized against ``hbm_budget`` via
+    ``core.blocking.plan_tiles`` (largest tile whose double-buffered
+    working set fits). Returns a **host** (numpy) array — the result
+    may not fit on the device either.
+
+    Bitwise-equal to ``ops.stencil_run(x, spec, n_steps, bx=bx, bt=bt,
+    variant=variant)`` for every supported spec; the in-core engine on
+    a forced-small budget is the differential oracle in tests.
+    """
+    if x.ndim not in (spec.dims, spec.dims + 1):
+        raise ValueError(f"grid rank {x.ndim} != spec.dims {spec.dims} "
+                         f"(or {spec.dims + 1} with a leading batch axis)")
+    if n_steps < 1:
+        raise ValueError(f"n_steps must be >= 1, got {n_steps}")
+    batched = x.ndim == spec.dims + 1
+    ga = 1 if batched else 0            # the grid's leading axis
+    # Private host copy: the two buffers below ping-pong between
+    # sweeps, so writing into a caller-owned (or device-backed,
+    # possibly read-only) array is never safe.
+    cur = np.array(x)
+    dtype = cur.dtype
+    grid_shape = cur.shape[1:] if batched else cur.shape
+    extent = grid_shape[0]
+    B = cur.shape[0] if batched else 1
+
+    if tile is None:
+        if hbm_budget is None:
+            raise ValueError("pass tile= or hbm_budget= (nothing to "
+                             "size tiles against otherwise)")
+        tp = resolve_tile(cur.shape, spec, bx=bx, bt=bt,
+                          itemsize=dtype.itemsize,
+                          hbm_budget=hbm_budget, depth=depth,
+                          extra_streams=int(source is not None))
+        tile = extent if tp is None else tp.tile
+    if not 1 <= tile <= extent:
+        raise ValueError(f"tile must be in [1, {extent}], got {tile}")
+
+    # Operand order mirrors engine.stencil_call: legacy source first
+    # (engine pre-sums sources; order is value-irrelevant but keeping
+    # one convention makes the dispatcher key stable), then every
+    # declared aux operand, validated as loudly as the engine would.
+    aux = dict(aux) if aux else {}
+    declared = [op.name for op in spec.aux]
+    unknown = [nm for nm in aux if nm not in declared]
+    if unknown:
+        raise ValueError(f"unknown aux operands {unknown} for spec "
+                         f"{spec.name!r} (declared: {declared})")
+    missing = [nm for nm in declared if nm not in aux]
+    if missing:
+        raise ValueError(f"spec {spec.name!r} requires aux operands "
+                         f"{missing}")
+    for nm, arr in aux.items():
+        if arr.shape != cur.shape:
+            raise ValueError(f"aux operand {nm!r} shape {arr.shape} != "
+                             f"grid shape {cur.shape}")
+    has_src = source is not None
+    src_host = np.asarray(source, dtype) if has_src else None
+    aux_names = tuple(declared)
+    aux_host = [np.asarray(aux[nm], dtype) for nm in aux_names]
+
+    if scalars is not None:
+        scalars = np.asarray(scalars, np.float32)
+        if batched and scalars.ndim == 3:
+            scalars = scalars.reshape(B, n_steps, -1)
+        else:
+            scalars = scalars.reshape(n_steps, -1)
+
+    bt = max(1, min(bt, n_steps))
+    full, rem = divmod(n_steps, bt)
+    schedule = [bt] * full + ([rem] if rem else [])
+    donate = not interpret
+    nxt = np.empty_like(cur)
+    n_tiles = -(-extent // tile)
+
+    off = 0
+    for bts in schedule:
+        g = spec.halo(bts)
+        scal = (_tslice(scalars, off, off + bts)
+                if scalars is not None else None)
+        scal_dev = None if scal is None else jnp.asarray(scal)
+        in_flight: deque = deque()
+
+        def drain_one():
+            t0, t1, start, out = in_flight.popleft()
+            host = np.asarray(out)      # blocks on this tile only
+            src = [slice(None)] * host.ndim
+            src[ga] = slice(t0 - start, t1 - start)   # owned slices
+            dst = [slice(None)] * nxt.ndim
+            dst[ga] = slice(t0, t1)
+            nxt[tuple(dst)] = host[tuple(src)]
+
+        for ti in range(n_tiles):
+            t0 = ti * tile
+            t1 = min(t0 + tile, extent)
+            # The slab is *clipped* to the grid, never ghost-padded:
+            # each slab is a self-contained smaller in-core problem
+            # whose array edges either coincide with true grid edges
+            # (first/last tile — engine boundary handling applies
+            # there, exactly as in-core) or lie >= ghost slices away
+            # from the owned center (interior edges — whatever the
+            # boundary mode fabricates there decays by r slices per
+            # fused step and never reaches the crop). This is what
+            # makes the result *bitwise* equal to the in-core engine:
+            # every slab call is the same jit graph the in-core path
+            # compiles, just on a shorter leading axis. (Presenting
+            # ghost slices through a shifted validity interval instead
+            # is semantically equivalent but compiles top-edge clamp
+            # taps through different XLA ops — measured 1-ulp drift.)
+            start = max(t0 - g, 0)
+            end = min(t1 + g, extent)
+            slab = jax.device_put(_slab(cur, start, end, ga))
+            src_slab = (jax.device_put(_slab(src_host, start, end, ga))
+                        if has_src else None)
+            aux_slabs = [jax.device_put(_slab(a, start, end, ga))
+                         for a in aux_host]
+            # Key = everything that determines the compiled program:
+            # slab length + the non-leading dims (the grid's total
+            # leading extent deliberately excluded — same-slab grids
+            # of different heights share one compilation).
+            other_dims = cur.shape[:ga] + cur.shape[ga + 1:]
+            dispatch = _dispatcher(
+                (spec, bx, bts, variant, interpret, aux_names, donate,
+                 has_src, end - start, other_dims, str(dtype),
+                 None if scal is None else scal.shape),
+                spec, bx, bts, variant, interpret, aux_names, donate)
+            out = dispatch(slab, src_slab, aux_slabs, scal_dev)
+            in_flight.append((t0, t1, start, out))
+            if len(in_flight) >= depth:
+                drain_one()
+        while in_flight:
+            drain_one()
+        cur, nxt = nxt, cur
+        off += bts
+    return cur

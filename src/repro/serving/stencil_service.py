@@ -94,17 +94,32 @@ class StencilService:
     blocking once through ``autotune.plan`` (batch-aware cache).
     ``check=True`` re-runs every request solo and asserts equality —
     the smoke suite's parity gate, not a production mode.
+
+    Buckets whose in-core working set exceeds ``hbm_budget`` (default:
+    the modeled device HBM) are **served out-of-core** instead of
+    being rejected: the dispatch routes through the host-streaming
+    tiled runner (``repro.outofcore``), which is bitwise-equal to the
+    in-core engine — so ``check=True`` passes unchanged and clients
+    cannot tell the difference beyond latency.
+    ``metrics["outofcore_dispatches"]`` counts such buckets.
     """
 
     def __init__(self, *, max_batch: int = 8, backend: str = "auto",
                  bx: Optional[int] = None, bt: Optional[int] = None,
-                 variant: Optional[str] = None, check: bool = False):
+                 variant: Optional[str] = None, check: bool = False,
+                 hbm_budget: Optional[int] = None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         self.max_batch = max_batch
         self.backend = ops.resolve_backend(backend)
         self._blocking = (bx, bt, variant)
         self.check = check
+        # Device HBM available to one bucket (None: the modeled device
+        # HBM, perf_model.V5E.hbm_bytes). Buckets whose in-core working
+        # set exceeds it are served through the out-of-core tiled
+        # runner instead of being rejected — huge simulation requests
+        # succeed, just at host-streaming bandwidth (docs/outofcore.md).
+        self.hbm_budget = hbm_budget
         self._queue: List[StencilRequest] = []
         # (key, bucket) -> jitted dispatcher; the bucket is part of the
         # cache key because B is a static shape (see docs/serving.md).
@@ -113,7 +128,10 @@ class StencilService:
         # with — the check path must reuse it exactly, or the solo run
         # could legally differ in float association (different bt).
         self._resolved: dict = {}
+        # (key, bucket) pairs that route out-of-core (for metrics).
+        self._outofcore: set = set()
         self.metrics = {"dispatches": 0, "problems": 0, "pad_rows": 0,
+                        "outofcore_dispatches": 0,
                         "busy_s": 0.0, "wall_s": 0.0}
 
     # ------------------------------------------------------------------
@@ -145,7 +163,10 @@ class StencilService:
                 aux_sig, scal_sig)
 
     def _dispatcher(self, key, bucket: int):
-        """The jitted batched runner for one (compilation key, bucket)."""
+        """The batched runner for one (compilation key, bucket): a
+        jitted in-core dispatch, or — when the bucket's working set
+        exceeds the HBM budget — the out-of-core host-streaming call
+        (not jitted: it is a host loop that jits per slab inside)."""
         fn = self._dispatchers.get((key, bucket))
         if fn is not None:
             return fn
@@ -154,7 +175,8 @@ class StencilService:
         if bx is None or bt is None:
             from repro.kernels import autotune
             tuned = autotune.plan((bucket,) + shape, spec, dtype=dtype,
-                                  backend=self.backend, n_steps=n_steps)
+                                  backend=self.backend, n_steps=n_steps,
+                                  hbm_budget=self.hbm_budget)
             bx = bx if bx is not None else tuned.bx
             bt = bt if bt is not None else tuned.bt
             variant = variant if variant is not None else tuned.variant
@@ -162,13 +184,28 @@ class StencilService:
         def call(xb, aux_b, scal_b):
             return ops.stencil_run(xb, spec, n_steps, bx=bx, bt=bt,
                                    backend=self.backend, variant=variant,
-                                   aux=aux_b or None, scalars=scal_b)
+                                   aux=aux_b or None, scalars=scal_b,
+                                   hbm_budget=self.hbm_budget)
 
-        # Donate the batch buffer so the device reuses it for the
-        # output — meaningful on real hardware only; CPU donation just
-        # warns and copies.
-        donate = (0,) if self.backend == "pallas" else ()
-        fn = jax.jit(call, donate_argnums=donate)
+        # The SAME predicate ops.stencil_run consults (a divergent copy
+        # here could jit an "in-core" dispatcher whose traced run then
+        # decides out-of-core and crashes converting a tracer to numpy).
+        from repro.outofcore import route_decision
+        routed, _ = route_decision(spec, shape, np.dtype(dtype).itemsize,
+                                   self.hbm_budget, batch=bucket)
+        if self.backend != "reference" and routed:
+            # Oversized bucket: ops.stencil_run auto-routes it through
+            # the out-of-core runner. The call stays un-jitted (its
+            # tile loop runs on the host and returns a host array) and
+            # undonated (the runner manages slab buffers itself).
+            self._outofcore.add((key, bucket))
+            fn = call
+        else:
+            # Donate the batch buffer so the device reuses it for the
+            # output — meaningful on real hardware only; CPU donation
+            # just warns and copies.
+            donate = (0,) if self.backend == "pallas" else ()
+            fn = jax.jit(call, donate_argnums=donate)
         self._dispatchers[(key, bucket)] = fn
         self._resolved[(key, bucket)] = (bx, bt, variant)
         return fn
@@ -219,6 +256,8 @@ class StencilService:
                 out = self._dispatcher(key, bucket)(xb, aux_b, scal_b)
                 in_flight.append((key, chunk, bucket, pad, out))
                 self.metrics["dispatches"] += 1
+                if (key, bucket) in self._outofcore:
+                    self.metrics["outofcore_dispatches"] += 1
                 self.metrics["pad_rows"] += pad
 
         done: List[StencilCompletion] = []

@@ -382,7 +382,7 @@ def test_autotune_cache_key_includes_device_count():
     k1 = autotune._key(spec, (16, 256), "float32", "reference", vm, "v5e")
     k2 = autotune._key(spec, (16, 256), "float32", "reference", vm, "v5e",
                        n_devices=4)
-    assert k1 != k2 and k1.endswith("|nd1") and k2.endswith("|nd4")
+    assert k1 != k2 and "|nd1|" in k1 and "|nd4|" in k2
 
 
 def test_select_config_models_exchange_tradeoff():

@@ -292,9 +292,9 @@ def test_stencil_sweep_defers_to_autotuner(monkeypatch):
     got = ops.stencil_sweep(x, spec, backend="interpret")   # all defaults
     assert calls, "stencil_sweep must resolve (bx, bt) through the tuner"
     # one sweep of the tuned bt steps — compare against the oracle at
-    # whatever bt the tuner picked
-    from repro.kernels.ops import _resolve_blocking
-    bx, bt, _ = _resolve_blocking(x, spec, None, None, None, "interpret")
+    # whatever bt the tuner picked (through the public resolve-once
+    # entry point, the same one apps/benchmarks use)
+    bx, bt, _ = ops.resolve_blocking(x, spec, backend="interpret")
     want = ref.stencil_multistep(x, spec, bt)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-4, atol=1e-4)
@@ -437,7 +437,8 @@ def test_cache_key_carries_ir_fields():
     }
     assert len(keys) == 4        # boundary / layout / aux+scalars split
     k = autotune._key(base, (16, 256), "float32", "reference", vm, "v5e")
-    assert k.endswith("|nd1")    # device suffix stays terminal
+    assert "|nd1|" in k          # device suffix still present
+    assert k.endswith("|hb-")    # HBM-budget suffix terminal (v5)
 
 
 def test_blockplan_counts_aux_traffic():
