@@ -19,7 +19,7 @@ import sys
 import traceback
 
 SUITES = ("smoke", "rodinia", "stencil", "scaling", "serving",
-          "outofcore", "model_accuracy", "projection")
+          "outofcore", "solvers", "model_accuracy", "projection")
 
 
 def _json_row(suite: str, r: dict) -> dict:
@@ -72,6 +72,8 @@ def main(argv=None):
                 from benchmarks import serving as mod
             elif suite == "outofcore":
                 from benchmarks import outofcore as mod
+            elif suite == "solvers":
+                from benchmarks import solvers as mod
             elif suite == "model_accuracy":
                 from benchmarks import model_accuracy as mod
             elif suite == "projection":

@@ -1,0 +1,163 @@
+"""Solver programs: fused vs per-sweep scheduling on the real DAGs.
+
+The program layer's claim is structural: when a solver's sweeps fuse
+(ADI's directional pair), one engine dispatch covers the whole group
+and temporal blocking applies to the group as a unit; when they cannot
+(wave's pressure sweep reads this step's velocities, multigrid's five
+sweeps chain through r and e), the scheduler still runs the whole DAG
+one dispatch per sweep with no host round-trips between fields. This
+suite measures both schedules for all three solvers — same program,
+``fuse=True`` vs ``fuse=False`` — reporting GCell/s (sweep-updates per
+second) and the *counted* engine dispatches per run, so the fusion win
+is visible as fewer dispatches, not just a timing delta.
+
+``--smoke`` is the CI gate: every row's result is asserted against the
+solver's independent NumPy reference (bitwise for ADI/wave/multigrid —
+their power-of-two constants make fma contraction exact — and fused
+vs unfused bitwise-identical in all cases), plus a hard assert that
+ADI's fused schedule issues strictly fewer dispatches than its
+per-sweep loop. Results land in ``BENCH_solvers.json`` (and in
+``benchmarks/run.py --json`` rows via the ``solvers`` suite).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.apps import adi, multigrid, wave
+from repro.kernels import ops
+
+_REPEATS = 3     # best-of-N, same convention as the other suites
+
+
+def _time(fn):
+    fn()                       # warm-up / compile
+    best = float("inf")
+    for _ in range(_REPEATS):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _count(fn):
+    """Engine dispatches issued by one invocation of ``fn``."""
+    ops.reset_dispatch_count()
+    out = fn()
+    jax.block_until_ready(out)
+    return out, ops.dispatch_count()
+
+
+def _cases(smoke: bool):
+    """(name, program, run(fuse), reference(), n_sweeps) per solver."""
+    if smoke:
+        shape, n_steps = (64, 200), 4
+    else:
+        shape, n_steps = (512, 1024), 16
+    bx, bt = 128, 2
+    backend = ops.resolve_backend("auto")
+
+    rng = np.random.default_rng(0)
+    u0 = rng.standard_normal(shape).astype(np.float32)
+    w_fields, sigma = wave.random_problem(shape=shape, seed=1)
+    mg_u, mg_f = multigrid.random_problem(shape=shape, seed=2)
+
+    yield ("adi", adi.adi_program(),
+           lambda fuse: adi.adi_run(jnp.asarray(u0), n_steps,
+                                    backend=backend, bx=bx, bt=bt,
+                                    fuse=fuse),
+           lambda: adi.adi_reference(u0, n_steps),
+           shape, n_steps)
+    yield ("wave", wave.wave_program(),
+           lambda fuse: wave.wave_run(
+               {k: jnp.asarray(v) for k, v in w_fields.items()},
+               n_steps, sigma, backend=backend, bx=bx, fuse=fuse)["p"],
+           lambda: wave.wave_reference(w_fields, n_steps, sigma)["p"],
+           shape, n_steps)
+    yield ("multigrid", multigrid.mg_program(),
+           lambda fuse: multigrid.mg_run(jnp.asarray(mg_u), mg_f,
+                                         n_steps, backend=backend,
+                                         bx=bx, fuse=fuse),
+           lambda: multigrid.mg_reference(mg_u, mg_f, n_steps),
+           shape, n_steps)
+
+
+def run(smoke: bool = False) -> list[dict]:
+    rows = []
+    for name, prog, run_fn, ref_fn, shape, n_steps in _cases(smoke):
+        n_sweeps = len(prog.sweeps)
+        n_groups = len(prog.fuse_groups())
+        updates = float(np.prod(shape)) * n_steps * n_sweeps
+        want = ref_fn() if smoke else None
+
+        per_fuse = {}
+        for fuse in (True, False):
+            out, dispatches = _count(lambda f=fuse: run_fn(f))
+            t = _time(lambda f=fuse: run_fn(f))
+            per_fuse[fuse] = (np.asarray(out), dispatches)
+            label = "fused" if fuse else "persweep"
+            rows.append({
+                "name": f"solver_{name}_{label}",
+                "us": t * 1e6,
+                "derived": (f"{updates / t / 1e9:.3f} GCell/s "
+                            f"(sweep-updates; {n_sweeps} sweeps in "
+                            f"{n_groups} group{'s' * (n_groups > 1)}, "
+                            f"{dispatches} dispatches/run)"),
+                "gcells_per_s": updates / t / 1e9,
+                "dispatches": dispatches,
+                "config": {"shape": list(shape), "n_steps": n_steps,
+                           "fuse": fuse, "n_sweeps": n_sweeps,
+                           "n_groups": n_groups},
+                "roofline": None,
+            })
+
+        if smoke:
+            # Fused and per-sweep schedules are the same math through
+            # the same engine: bitwise, no tolerance.
+            np.testing.assert_array_equal(
+                per_fuse[True][0], per_fuse[False][0],
+                err_msg=f"{name}: fuse=True diverged from fuse=False")
+            # Power-of-two constants make the engine bitwise-equal to
+            # the independent NumPy model — the solver parity gate.
+            np.testing.assert_array_equal(
+                per_fuse[True][0], want,
+                err_msg=f"{name}: engine diverged from NumPy reference")
+            if prog.fully_fused:
+                assert per_fuse[True][1] < per_fuse[False][1], (
+                    f"{name}: fused schedule should issue fewer "
+                    f"dispatches ({per_fuse[True][1]} vs "
+                    f"{per_fuse[False][1]})")
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny run with bitwise NumPy-reference parity "
+                         "and dispatch-count asserts (the CI gate)")
+    ap.add_argument("--json", default="BENCH_solvers.json",
+                    help="machine-readable record path "
+                         "(default: %(default)s; empty disables)")
+    args = ap.parse_args(argv)
+
+    rows = run(smoke=args.smoke)
+    print("name,us_per_run,derived")
+    for r in rows:
+        print(f"{r['name']},{r['us']:.1f},{r['derived']}")
+
+    if args.json:
+        payload = {"generated_by": "benchmarks.solvers",
+                   "smoke": args.smoke, "rows": rows}
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+        print(f"# wrote {args.json} ({len(rows)} rows)", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,227 @@
+"""Two-grid multigrid V-cycle for the 2D Poisson problem, as a program.
+
+Solves ``-lap(u) = f`` (unit spacing, zero Dirichlet boundary) with the
+classic V(1,1) two-grid cycle, expressed entirely as flat-grid stencil
+sweeps: the coarse grid lives *on the fine grid* at even-index points
+(selected by the step-constant ``mask`` input), so restriction,
+coarse-grid relaxation and prolongation are ordinary stencils with
+doubled offsets — no reshapes, no per-level arrays, and the whole cycle
+is one ``StencilProgram`` the engine can schedule.
+
+One V-cycle = five sweeps over fields ``u`` (solution), ``r``
+(residual) and ``e`` (coarse correction):
+
+  1. ``presmooth``  — damped Jacobi on u:
+                      u <- (1-w) u + w (u_N+u_S+u_W+u_E + f) / 4
+  2. ``residual``   — r <- f - (4u - u_N - u_S - u_W - u_E)
+  3. ``restrict``   — full-weighting restriction of r onto coarse
+                      points + the first coarse Jacobi step from a zero
+                      initial guess:  e <- mask * (FW * r)
+                      (FW = 1/16 [1 2 1; 2 4 2; 1 2 1])
+  4. ``coarse``     — damped Jacobi on the coarse system (radius-2
+                      taps: +-2 are the coarse-grid neighbors;
+                      h_c^2 = 4 scales the right-hand side):
+                      e <- mask*((1-w) e + w (e_NN+e_SS+e_WW+e_EE
+                                             + 4 (mask FW r)) / 4)
+  5. ``prolong``    — bilinear interpolation of e back to the fine
+                      grid + coarse-grid correction:
+                      u <- u + P e,  P = [1/4 1/2 1/4] x [1/4 1/2 1/4]
+                      stencil over the (coarse-masked) e
+
+Sweeps 2-5 each read fields written earlier in the same step, so no
+two sweeps fuse: the program is the maximal *unfusable* DAG (five
+dispatches per cycle), the stress case for the program scheduler —
+compare ``apps/adi.py``, its fully-fused dual. ``mg_reference`` is an
+independent NumPy model; tests pin the engine bitwise-equal to it and
+assert the cycle actually contracts the residual.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+from repro.core.stencil import (AuxOperand, StencilProgram, StencilSpec,
+                                Sweep, shift)
+
+# Jacobi damping. 1/2 keeps EVERY multiplicative constant in the cycle
+# a power of two (1/2, 1/8, 1/4, 1/16, 4, 2): power-of-two products are
+# exact in float32, so XLA's fma contraction cannot change a single bit
+# and the engine stays bitwise-equal to the NumPy reference. (0.8 would
+# smooth slightly faster but costs bitwise reproducibility across
+# compilers.)
+OMEGA = 0.5
+
+
+@functools.lru_cache(maxsize=None)
+def mg_program(omega: float = OMEGA) -> StencilProgram:
+    """One V(1,1) two-grid cycle as a five-sweep StencilProgram.
+
+    The closures capture plain Python floats only — trace-time
+    literals; a captured device scalar would be a constant the Pallas
+    kernel cannot take.
+    """
+    w = float(omega)
+    one_w = 1.0 - w
+    wq = w * 0.25
+
+    def nbr_sum(a, d, boundary):
+        return (shift(a, 0, -d, boundary) + shift(a, 0, d, boundary)
+                + shift(a, 1, -d, boundary) + shift(a, 1, d, boundary))
+
+    def fw(a, boundary):
+        s = shift
+        return (0.25 * a
+                + 0.125 * (s(a, 0, -1, boundary) + s(a, 0, 1, boundary)
+                           + s(a, 1, -1, boundary) + s(a, 1, 1, boundary))
+                + 0.0625 * (s(s(a, 0, -1, boundary), 1, -1, boundary)
+                            + s(s(a, 0, -1, boundary), 1, 1, boundary)
+                            + s(s(a, 0, 1, boundary), 1, -1, boundary)
+                            + s(s(a, 0, 1, boundary), 1, 1, boundary)))
+
+    def presmooth(fields, spec):
+        u = fields["x"]
+        return one_w * u + wq * (nbr_sum(u, 1, spec.boundary)
+                                 + fields["f"])
+
+    def residual(fields, spec):
+        u = fields["u"]
+        return fields["f"] - (4.0 * u - nbr_sum(u, 1, spec.boundary))
+
+    def restrict(fields, spec):
+        return fields["mask"] * fw(fields["r"], spec.boundary)
+
+    def coarse(fields, spec):
+        e = fields["x"]
+        rc = fields["mask"] * fw(fields["r"], spec.boundary)
+        return fields["mask"] * (
+            one_w * e + wq * (nbr_sum(e, 2, spec.boundary) + 4.0 * rc))
+
+    def prolong(fields, spec):
+        e = fields["e"]
+        s = spec.boundary
+        row = 0.5 * e + 0.25 * (shift(e, 1, -1, s) + shift(e, 1, 1, s))
+        pe = 0.5 * row + 0.25 * (shift(row, 0, -1, s)
+                                 + shift(row, 0, 1, s))
+        return fields["x"] + 2.0 * pe
+
+    def mk(name, fn, aux, radius=1):
+        return StencilSpec(dims=2, radius=radius, update=fn, name=name,
+                           aux=tuple(AuxOperand(a, role="coeff")
+                                     for a in aux))
+    return StencilProgram(
+        (Sweep("presmooth", mk("mg_presmooth", presmooth, ("f",)),
+               field="u"),
+         Sweep("residual", mk("mg_residual", residual, ("u", "f")),
+               field="r", after=("presmooth",)),
+         Sweep("restrict", mk("mg_restrict", restrict, ("r", "mask")),
+               field="e", after=("residual",)),
+         Sweep("coarse", mk("mg_coarse", coarse, ("r", "mask"), radius=2),
+               field="e", after=("restrict",)),
+         Sweep("prolong", mk("mg_prolong", prolong, ("e",)),
+               field="u", after=("coarse",))),
+        name="multigrid")
+
+
+def coarse_mask(shape) -> np.ndarray:
+    """1.0 at even-even (coarse) points, 0.0 elsewhere."""
+    m = np.zeros(shape, np.float32)
+    m[::2, ::2] = 1.0
+    return m
+
+
+def mg_run(u, f, n_cycles: int, omega: float = OMEGA, **kw):
+    """``n_cycles`` V-cycles through the unified program engine."""
+    from repro.kernels import ops
+    shape = np.shape(u)
+    fields = {"u": u, "r": np.zeros(shape, np.float32),
+              "e": np.zeros(shape, np.float32)}
+    out = ops.stencil_program_run(
+        fields, mg_program(omega), n_cycles,
+        inputs={"f": f, "mask": coarse_mask(shape)}, **kw)
+    return out["u"]
+
+
+def mg_reference(u, f, n_cycles: int, omega: float = OMEGA) -> np.ndarray:
+    """Independent NumPy model of the five sweeps (float32, same
+    association order as the program updates)."""
+    u = np.asarray(u, np.float32)
+    f = np.asarray(f, np.float32)
+    mask = coarse_mask(u.shape)
+    one_w = np.float32(1.0 - float(omega))
+    wq = np.float32(float(omega) * 0.25)
+
+    def zshift(a, axis, off):
+        out = np.zeros_like(a)
+        src = [slice(None)] * a.ndim
+        dst = [slice(None)] * a.ndim
+        n = a.shape[axis]
+        if abs(off) >= n:
+            return out
+        if off >= 0:
+            src[axis], dst[axis] = slice(off, None), slice(None, n - off)
+        else:
+            src[axis], dst[axis] = slice(None, off), slice(-off, None)
+        out[tuple(dst)] = a[tuple(src)]
+        return out
+
+    def nbr_sum(a, d):
+        return (zshift(a, 0, -d) + zshift(a, 0, d)
+                + zshift(a, 1, -d) + zshift(a, 1, d))
+
+    def fw(a):
+        w4, w2, w1 = (np.float32(0.25), np.float32(0.125),
+                      np.float32(0.0625))
+        return (w4 * a
+                + w2 * (zshift(a, 0, -1) + zshift(a, 0, 1)
+                        + zshift(a, 1, -1) + zshift(a, 1, 1))
+                + w1 * (zshift(zshift(a, 0, -1), 1, -1)
+                        + zshift(zshift(a, 0, -1), 1, 1)
+                        + zshift(zshift(a, 0, 1), 1, -1)
+                        + zshift(zshift(a, 0, 1), 1, 1)))
+
+    for _ in range(n_cycles):
+        u = one_w * u + wq * (nbr_sum(u, 1) + f)
+        r = f - (np.float32(4.0) * u - nbr_sum(u, 1))
+        rc = mask * fw(r)
+        e = rc
+        e = mask * (one_w * e + wq * (nbr_sum(e, 2)
+                                      + np.float32(4.0) * rc))
+        half, quar = np.float32(0.5), np.float32(0.25)
+        row = half * e + quar * (zshift(e, 1, -1) + zshift(e, 1, 1))
+        pe = half * row + quar * (zshift(row, 0, -1) + zshift(row, 0, 1))
+        u = u + np.float32(2.0) * pe
+    return u
+
+
+def residual_norm(u, f) -> float:
+    """||f - A u||_2 on the fine grid (zero-Dirichlet 5-point A)."""
+    u = np.asarray(u, np.float64)
+    f = np.asarray(f, np.float64)
+    au = 4.0 * u
+    for ax, off in ((0, -1), (0, 1), (1, -1), (1, 1)):
+        pad = [(0, 0), (0, 0)]
+        shifted = np.zeros_like(u)
+        if off > 0:
+            sl_src = [slice(None)] * 2
+            sl_dst = [slice(None)] * 2
+            sl_src[ax], sl_dst[ax] = slice(1, None), slice(None, -1)
+        else:
+            sl_src = [slice(None)] * 2
+            sl_dst = [slice(None)] * 2
+            sl_src[ax], sl_dst[ax] = slice(None, -1), slice(1, None)
+        shifted[tuple(sl_dst)] = u[tuple(sl_src)]
+        au = au - shifted
+    return float(np.linalg.norm(f - au))
+
+
+def random_problem(shape=(64, 192), seed: int = 0):
+    """A smooth random right-hand side and a zero initial guess."""
+    rng = np.random.default_rng(seed)
+    f = rng.standard_normal(shape).astype(np.float32)
+    # Smooth f a little so the two-grid cycle has low-frequency error
+    # to chew on (pure white noise is all smoother-range).
+    for _ in range(2):
+        f = (f + np.roll(f, 1, 0) + np.roll(f, -1, 0)
+             + np.roll(f, 1, 1) + np.roll(f, -1, 1)) / 5.0
+    return np.zeros(shape, np.float32), f.astype(np.float32)

@@ -43,7 +43,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.apps import problems
-from repro.core.stencil import StencilSpec, shift
+from repro.core.stencil import (AuxOperand, StencilProgram, StencilSpec,
+                                Sweep, shift)
 from repro.kernels import ops
 
 
@@ -162,6 +163,76 @@ def srad_blocked(j_img: jax.Array, n_iter: int, lam: float = 0.5,
                                 variant=variant, backend=resolved,
                                 scalars=scal, n_devices=n_devices)
     return j_img
+
+
+# --- program ("solver DAG") tier --------------------------------------------
+#
+# The same two Rodinia passes, un-fused back into the DAG the original
+# benchmark ships: sweep "coeff" materializes the diffusion-coefficient
+# field c from the image, sweep "update" applies the divergence using
+# it. This is what `srad_blocked` hand-fuses into one radius-2 step —
+# here the *scheduler* owns the structure instead: the sweeps exchange
+# a real intermediate field, so they land in separate fuse groups (one
+# reads the other's freshly-written output) and run as two radius-1
+# dispatches per iteration. Tests pin both tiers bitwise-equal.
+
+
+def _srad_coeff_update(fields, spec):
+    """Pass 1 on the image field ``j`` (the sweep's own field c is
+    fully overwritten, so ``fields["x"]`` is deliberately unused)."""
+    c, _, _, _, _ = _pass1(fields["j"], fields["scalars"][0])
+    return c
+
+
+def _srad_div_update(fields, spec):
+    """Pass 2: gradients recomputed from the image (bitwise-identical
+    to the fused tier's), coefficient read from the c field."""
+    j_img = fields["x"]
+    dn = _clamp_shift(j_img, 0, -1) - j_img
+    ds = _clamp_shift(j_img, 0, 1) - j_img
+    dw = _clamp_shift(j_img, 1, -1) - j_img
+    de = _clamp_shift(j_img, 1, 1) - j_img
+    return _pass2(j_img, fields["c"], dn, ds, dw, de,
+                  fields["scalars"][0])
+
+
+def srad_program() -> StencilProgram:
+    """SRAD's two passes as an (unfusable, by data flow) program."""
+    coeff = StencilSpec(dims=2, radius=1, boundary="clamp",
+                        update=_srad_coeff_update, n_scalars=1,
+                        aux=(AuxOperand("j", role="coeff"),),
+                        name="srad_coeff")
+    div = StencilSpec(dims=2, radius=1, boundary="clamp",
+                      update=_srad_div_update, n_scalars=1,
+                      aux=(AuxOperand("c", role="coeff"),),
+                      name="srad_div")
+    return StencilProgram(
+        (Sweep("coeff", coeff, field="c"),
+         Sweep("update", div, field="j", after=("coeff",))),
+        name="srad")
+
+
+def srad_program_run(j_img: jax.Array, n_iter: int, lam: float = 0.5,
+                     bt: int | None = None, bx: int | None = None,
+                     backend: str = "auto",
+                     n_devices: int | None = None) -> jax.Array:
+    """SRAD through the program scheduler: two dispatches per iteration.
+
+    Numerically identical (bitwise) to ``srad_blocked`` — the per-
+    iteration q0^2 reduction again caps each program call at one
+    iteration, so this loops ``n_steps=1`` calls with fresh scalars.
+    """
+    prog = srad_program()
+    lam32 = jnp.asarray(lam, jnp.float32)
+    fields = {"j": j_img,
+              "c": jnp.zeros_like(j_img)}   # overwritten by sweep 1
+    for _ in range(n_iter):
+        q0 = _q0sqr(fields["j"]).astype(jnp.float32).reshape(1, 1)
+        fields = ops.stencil_program_run(
+            fields, prog, 1, bx=bx, bt=bt, backend=backend,
+            n_devices=n_devices,
+            scalars={"coeff": q0, "update": lam32.reshape(1, 1)})
+    return fields["j"]
 
 
 random_problem = problems.srad

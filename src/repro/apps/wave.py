@@ -1,0 +1,146 @@
+"""2D acoustic wave propagator with sponge absorption, as a program.
+
+First-order velocity/pressure formulation on a staggered-style grid
+(the seismic-stencil workload class of Zohouri et al., arXiv:1802.00438
+/ arXiv:2002.05983), with a PML-like absorbing layer: a damping field
+``sigma`` ramps up near the domain edges and attenuates both velocity
+and pressure there, so outgoing waves die in the sponge instead of
+reflecting. Per time step:
+
+    vx <- (1 - dt sigma) vx - (dt/h)      (p_E  - p)
+    vy <- (1 - dt sigma) vy - (dt/h)      (p_S  - p)
+    p  <- (1 - dt sigma) p  - (dt c^2/h) ((vx - vx_W) + (vy - vy_N))
+
+Three radius-1 custom sweeps over fields ``vx``/``vy``/``p`` with the
+step-constant input ``sigma``; the pressure sweep reads the velocity
+fields *just written this step* (``after=("vx", "vy")``), which makes
+the program unfusable by construction — the canonical multi-group DAG
+the scheduler must run one dispatch per sweep per step.
+
+``wave_program`` is memoized so repeated calls with equal parameters
+return the *same* program object (specs hold closures; caching keeps
+them hashable-stable across calls for jit and serving keys).
+``wave_reference`` is an independent NumPy model; tests pin the engine
+bitwise-equal to it.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+from repro.core.stencil import (AuxOperand, StencilProgram, StencilSpec,
+                                Sweep, shift)
+
+DT = 0.2      # time step (stable: dt * c * sqrt(2) / h < 1)
+C = 1.0       # wave speed
+H = 1.0       # grid spacing
+
+
+@functools.lru_cache(maxsize=None)
+def wave_program(dt: float = DT, c: float = C, h: float = H
+                 ) -> StencilProgram:
+    """vx/vy/p update sweeps as one StencilProgram.
+
+    The closures capture plain Python floats only — they fold into
+    trace-time literals; a captured device scalar would be a constant
+    the Pallas kernel cannot take.
+    """
+    dt = float(dt)
+    cvel = float(dt * c * c / h)
+    cgrd = float(dt / h)
+
+    def vx_update(fields, spec):
+        p = fields["p"]
+        damp = 1.0 - dt * fields["sigma"]
+        return damp * fields["x"] - cgrd * (
+            shift(p, 1, 1, spec.boundary) - p)
+
+    def vy_update(fields, spec):
+        p = fields["p"]
+        damp = 1.0 - dt * fields["sigma"]
+        return damp * fields["x"] - cgrd * (
+            shift(p, 0, 1, spec.boundary) - p)
+
+    def p_update(fields, spec):
+        vx, vy = fields["vx"], fields["vy"]
+        damp = 1.0 - dt * fields["sigma"]
+        div = ((vx - shift(vx, 1, -1, spec.boundary))
+               + (vy - shift(vy, 0, -1, spec.boundary)))
+        return damp * fields["x"] - cvel * div
+
+    mk = lambda name, fn, aux: StencilSpec(
+        dims=2, radius=1, update=fn, name=name,
+        aux=tuple(AuxOperand(a, role="coeff") for a in aux))
+    return StencilProgram(
+        (Sweep("vx", mk("wave_vx", vx_update, ("p", "sigma")), field="vx"),
+         Sweep("vy", mk("wave_vy", vy_update, ("p", "sigma")), field="vy"),
+         Sweep("p", mk("wave_p", p_update, ("vx", "vy", "sigma")),
+               field="p", after=("vx", "vy"))),
+        name="wave")
+
+
+def sponge(shape, width: int = 8, strength: float = 0.5) -> np.ndarray:
+    """Damping field: 0 in the interior, ramping to ``strength`` at the
+    edges over ``width`` cells (quadratic ramp, the usual sponge)."""
+    ny, nx = shape
+    d = np.ones(shape, np.float32) * np.inf
+    for ax, n in ((0, ny), (1, nx)):
+        idx = np.arange(n, dtype=np.float32)
+        edge = np.minimum(idx, n - 1 - idx)
+        d = np.minimum(d, np.expand_dims(edge, 1 - ax))
+    ramp = np.clip((width - d) / width, 0.0, 1.0).astype(np.float32)
+    return np.float32(strength) * ramp * ramp
+
+
+def wave_run(fields, n_steps: int, sigma, dt: float = DT, c: float = C,
+             h: float = H, **kw):
+    """``n_steps`` wave steps through the unified program engine.
+
+    ``fields``: dict with ``p`` (and optionally ``vx``/``vy``, which
+    default to zero). ``kw`` forwards to ``ops.stencil_program_run``.
+    """
+    from repro.kernels import ops
+    return ops.stencil_program_run(fields, wave_program(dt, c, h),
+                                   n_steps, inputs={"sigma": sigma}, **kw)
+
+
+def wave_reference(fields, n_steps: int, sigma, dt: float = DT,
+                   c: float = C, h: float = H) -> dict:
+    """Independent NumPy model of the three sweeps, float32 throughout
+    with the same association order as the program updates."""
+    sigma = np.asarray(sigma, np.float32)
+    p = np.asarray(fields["p"], np.float32)
+    vx = np.asarray(fields.get("vx", np.zeros_like(p)), np.float32)
+    vy = np.asarray(fields.get("vy", np.zeros_like(p)), np.float32)
+    dt32, cvel, cgrd = (np.float32(dt), np.float32(dt * c * c / h),
+                        np.float32(dt / h))
+    damp = np.float32(1.0) - dt32 * sigma
+
+    def zshift(a, axis, off):
+        out = np.zeros_like(a)
+        src = [slice(None)] * a.ndim
+        dst = [slice(None)] * a.ndim
+        if off >= 0:
+            src[axis], dst[axis] = slice(off, None), slice(None, a.shape[axis] - off)
+        else:
+            src[axis], dst[axis] = slice(None, off), slice(-off, None)
+        out[tuple(dst)] = a[tuple(src)]
+        return out
+
+    for _ in range(n_steps):
+        vx = damp * vx - cgrd * (zshift(p, 1, 1) - p)
+        vy = damp * vy - cgrd * (zshift(p, 0, 1) - p)
+        div = (vx - zshift(vx, 1, -1)) + (vy - zshift(vy, 0, -1))
+        p = damp * p - cvel * div
+    return {"vx": vx, "vy": vy, "p": p}
+
+
+def random_problem(shape=(96, 256), seed: int = 0):
+    """A point-source pressure pulse inside a sponge-lined domain."""
+    rng = np.random.default_rng(seed)
+    p = np.zeros(shape, np.float32)
+    cy, cx = shape[0] // 2, shape[1] // 2
+    p[cy - 2: cy + 3, cx - 2: cx + 3] = rng.standard_normal(
+        (5, 5)).astype(np.float32)
+    return {"p": p}, sponge(shape)

@@ -351,3 +351,292 @@ ALL_BENCH_SPECS = tuple(
     + [diffusion(3, r) for r in (1, 2, 3, 4)]
     + [hotspot2d(), hotspot3d()]
 )
+
+
+# ---------------------------------------------------------------------------
+# Multi-sweep solver programs (the DAG layer above single sweeps).
+#
+# A ``StencilProgram`` names a list of sweeps, each a StencilSpec applied
+# to one *evolving field*; sweeps may read other evolving fields or
+# step-constant program inputs through their spec's aux operands (names
+# resolve to evolving fields first, then to inputs). One "program step"
+# runs every sweep once, in declaration order — the DAG edges (implicit
+# producer/consumer ones plus explicit ``after``) are validated to be
+# consistent with that order, following Kamalakkannan et al.'s
+# multi-sweep chaining (arXiv:2101.01177).
+#
+# Cross-sweep *fusion*: maximal runs of consecutive sweeps that pass
+# ``_can_fuse`` execute as ONE engine dispatch per program step (the
+# engine re-imposes each sweep's own boundary fill before its apply, so
+# fused execution is bitwise-equal to the per-sweep dispatch loop).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Sweep:
+    """One named application of a ``StencilSpec`` to an evolving field.
+
+    ``field`` is the grid this sweep overwrites (the update's ``"x"``).
+    ``after`` lists names of *earlier* sweeps this one must follow —
+    pure documentation/validation, since execution order is declaration
+    order. ``barrier=True`` forbids fusing this sweep with its
+    predecessor even when ``_can_fuse`` would allow it.
+    """
+
+    name: str
+    spec: StencilSpec
+    field: str = "u"
+    after: Tuple[str, ...] = ()
+    barrier: bool = False
+
+    def __post_init__(self):
+        object.__setattr__(self, "after", tuple(self.after))
+        if not self.name or not isinstance(self.name, str):
+            raise ValueError("sweep name must be a non-empty string")
+        if not self.field or not isinstance(self.field, str):
+            raise ValueError(
+                f"sweep {self.name!r}: field must be a non-empty string")
+        if self.field in ("x", "scalars"):
+            raise ValueError(
+                f'sweep {self.name!r}: field names "x" and "scalars" are '
+                f"reserved")
+
+
+def _can_fuse(program: "StencilProgram", group, sweep: Sweep) -> bool:
+    """May ``sweep`` join the fused ``group`` (run of earlier sweeps)?
+
+    Legality rules (see docs/solvers.md):
+      * no barrier, and same evolving field as the group;
+      * no sweep in the group nor the candidate reads ANY evolving
+        field through aux — fused stages see the previous stage's
+        window rim, which is stale for other fields;
+      * 3D additionally: equal radii, same boundary, star/box layouts
+        only, no aux operands, no scalars (the plane-streaming kernel
+        cycles one homogeneous stage shape).
+    """
+    if sweep.barrier:
+        return False
+    if sweep.field != group[0].field:
+        return False
+    for s in (*group, sweep):
+        if program.evolving_reads(s):
+            return False
+    if program.dims == 3:
+        a, b = group[0].spec, sweep.spec
+        for sp in (a, b):
+            if sp.layout == "custom" or sp.aux or sp.n_scalars:
+                return False
+        if b.radius != a.radius or b.boundary != a.boundary:
+            return False
+    return True
+
+
+@dataclasses.dataclass(frozen=True)
+class StencilProgram:
+    """A small DAG of named sweeps over named evolving fields.
+
+    Hashable and comparable by value (sweep list + name), so a program
+    is a valid jit static argument, autotune cache key component and
+    serving bucket key.
+    """
+
+    sweeps: Tuple[Sweep, ...]
+    name: str = "program"
+
+    def __post_init__(self):
+        object.__setattr__(self, "sweeps", tuple(self.sweeps))
+        if not self.sweeps:
+            raise ValueError("a StencilProgram needs at least one sweep")
+        names = [s.name for s in self.sweeps]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate sweep names: {names}")
+        dims = {s.spec.dims for s in self.sweeps}
+        if len(dims) != 1:
+            raise ValueError(
+                f"all sweeps must share one dims, got {sorted(dims)}")
+        fields = set(s.field for s in self.sweeps)
+        by_pos = {s.name: i for i, s in enumerate(self.sweeps)}
+        for i, s in enumerate(self.sweeps):
+            for op in s.spec.aux:
+                if op.name == s.field:
+                    raise ValueError(
+                        f"sweep {s.name!r} reads its own field "
+                        f"{s.field!r} as an aux operand; the written "
+                        f'field is the update\'s "x"')
+            for dep in s.after:
+                if dep not in by_pos:
+                    raise ValueError(
+                        f"sweep {s.name!r}: after={dep!r} names no sweep "
+                        f"in {names}")
+                if by_pos[dep] >= i:
+                    raise ValueError(
+                        f"sweep {s.name!r}: after={dep!r} must name an "
+                        f"earlier sweep (execution order is declaration "
+                        f"order)")
+        for f in fields:
+            if f in ("x", "scalars"):
+                raise ValueError(f"field name {f!r} is reserved")
+
+    # ---- namespace ------------------------------------------------------
+
+    @property
+    def dims(self) -> int:
+        return self.sweeps[0].spec.dims
+
+    @property
+    def fields(self) -> Tuple[str, ...]:
+        """Evolving field names, in first-written order."""
+        return tuple(dict.fromkeys(s.field for s in self.sweeps))
+
+    @property
+    def n_fields(self) -> int:
+        return len(self.fields)
+
+    @property
+    def input_names(self) -> Tuple[str, ...]:
+        """Step-constant program inputs (aux names that are not fields)."""
+        fields = set(self.fields)
+        out = []
+        for s in self.sweeps:
+            for op in s.spec.aux:
+                if op.name not in fields and op.name not in out:
+                    out.append(op.name)
+        return tuple(out)
+
+    def evolving_reads(self, sweep: Sweep) -> Tuple[str, ...]:
+        """Names of evolving fields ``sweep`` reads through aux."""
+        fields = set(self.fields)
+        return tuple(op.name for op in sweep.spec.aux if op.name in fields)
+
+    def dependencies(self) -> dict:
+        """sweep name -> names of earlier sweeps whose writes it consumes
+        (implicit RAW/WAW edges plus the explicit ``after`` edges)."""
+        last_writer: dict = {}
+        deps = {}
+        for s in self.sweeps:
+            d = set(s.after)
+            if s.field in last_writer:
+                d.add(last_writer[s.field])
+            for nm in self.evolving_reads(s):
+                if nm in last_writer:
+                    d.add(last_writer[nm])
+            deps[s.name] = tuple(sorted(d))
+            last_writer[s.field] = s.name
+        return deps
+
+    @property
+    def n_scalars(self) -> int:
+        return sum(s.spec.n_scalars for s in self.sweeps)
+
+    # ---- fusion ---------------------------------------------------------
+
+    def fuse_groups(self) -> Tuple[Tuple[Sweep, ...], ...]:
+        """Maximal runs of consecutive fusable sweeps (each run = one
+        engine dispatch per program step)."""
+        groups: list = []
+        for s in self.sweeps:
+            if groups and _can_fuse(self, groups[-1], s):
+                groups[-1].append(s)
+            else:
+                groups.append([s])
+        return tuple(tuple(g) for g in groups)
+
+    @property
+    def fully_fused(self) -> bool:
+        return len(self.fuse_groups()) == 1
+
+    @staticmethod
+    def group_radius(group) -> int:
+        """Halo consumed by one pass over a fused group."""
+        return sum(s.spec.radius for s in group)
+
+    @property
+    def max_group_radius(self) -> int:
+        return max(self.group_radius(g) for g in self.fuse_groups())
+
+    # ---- planning & caching --------------------------------------------
+
+    def cache_token(self) -> str:
+        """Autotune cache-key head: every field of every sweep that can
+        change the winning plan (same name-as-weights-proxy convention
+        as StencilSpec — weight *values* ride on the spec name)."""
+        parts = []
+        for s in self.sweeps:
+            sp = s.spec
+            ax = ",".join(f"{op.name}:{op.role[0]}" for op in sp.aux) or "-"
+            parts.append(
+                f"{s.name}>{s.field}@{sp.name}"
+                f"(d{sp.dims},r{sp.radius},b{sp.boundary},L{sp.layout},"
+                f"ax[{ax}],sc{sp.n_scalars}{',B' if s.barrier else ''})")
+        return f"P[{self.name}]{{{';'.join(parts)}}}"
+
+    def plan_proxy(self) -> "ProgramPlanProxy":
+        """A StencilSpec-shaped view for the blocking/roofline planners.
+
+        ``radius`` is the worst per-dispatch halo (max over fuse groups
+        of the group's summed radii); ``points``/``flops_per_cell``
+        count every sweep of one program step; ``aux`` holds the
+        step-constant inputs plus one synthetic coeff entry per evolving
+        field beyond the first (they are HBM-resident too).
+        """
+        fields = self.fields
+        aux: list = []
+        seen = set()
+        for s in self.sweeps:
+            for op in s.spec.aux:
+                if op.name in fields or op.name in seen:
+                    continue
+                seen.add(op.name)
+                aux.append(op)
+        for f in fields[1:]:
+            aux.append(AuxOperand(name=f"__field__{f}", role="coeff"))
+        return ProgramPlanProxy(
+            dims=self.dims,
+            radius=self.max_group_radius,
+            points=sum(s.spec.points for s in self.sweeps),
+            flops_per_cell=sum(s.spec.flops_per_cell for s in self.sweeps),
+            aux=tuple(aux),
+            n_scalars=self.n_scalars,
+            boundary=self.sweeps[0].spec.boundary,
+            name=f"program:{self.name}",
+        )
+
+    @staticmethod
+    def single(spec: StencilSpec, field: str = "u",
+               name: Optional[str] = None) -> "StencilProgram":
+        """The one-sweep program equivalent to running ``spec``."""
+        return StencilProgram(
+            sweeps=(Sweep(name=spec.name, spec=spec, field=field),),
+            name=name if name is not None else spec.name)
+
+
+@dataclasses.dataclass(frozen=True)
+class ProgramPlanProxy:
+    """Duck-typed StencilSpec stand-in for ``core.blocking`` planners.
+
+    ``BlockPlan`` / ``select_config`` / ``plan_tiles`` only read the
+    attributes below; a fused group's combined radius may exceed
+    StencilSpec's own radius cap (4), hence a separate type rather than
+    a synthesized spec.
+    """
+
+    dims: int
+    radius: int
+    points: int
+    flops_per_cell: int
+    aux: Tuple[AuxOperand, ...]
+    n_scalars: int
+    boundary: str
+    name: str
+    layout: str = "program"
+
+    def halo(self, bt: int) -> int:
+        return bt * self.radius
+
+    @property
+    def source_operands(self) -> Tuple[AuxOperand, ...]:
+        return tuple(op for op in self.aux if op.role == "source")
+
+    @property
+    def coeff_operands(self) -> Tuple[AuxOperand, ...]:
+        return tuple(op for op in self.aux if op.role == "coeff")

@@ -142,31 +142,41 @@ def exchange_halos(xs: jax.Array, h: int, n: int, axis_name: str = AXIS,
     return from_above, from_below
 
 
-def _engine_call(slab, spec, bx, bts, variant, interpret, extras, scal,
+def _engine_call(slab, specs, bx, bts, variant, interpret, extras, scals,
                  lo, hi):
-    """Run the single-device engine on one slab; ``extras`` maps
-    operand names (aux names + the legacy-source sentinel) to slabs."""
+    """Run the single-device engine on one slab.
+
+    ``specs``: the fuse group's spec tuple (a 1-tuple for plain
+    single-spec runs). ``extras`` maps operand names (aux names + the
+    legacy-source sentinel) to slabs. ``scals``: per-spec scalars
+    tuple, or None.
+    """
     extras = dict(extras)
     src = extras.pop(_LEGACY_SRC, None)
-    return engine.stencil_call(slab, spec, bx=bx, bt=bts, variant=variant,
-                               interpret=interpret, source=src,
-                               aux=extras or None, scalars=scal,
-                               valid_lo=lo, valid_hi=hi)
+    return engine.stencil_call_program(
+        slab, specs, bx=bx, bt=bts, variant=variant, interpret=interpret,
+        source=src, aux=extras or None, scalars=scals,
+        valid_lo=lo, valid_hi=hi)
 
 
-def _sweep(xs, spec, *, bx, bts, variant, interpret, idx, n, S, extent,
-           overlap, axis_name, extras, scal, ax=0):
-    """One blocked sweep (``bts`` fused steps) on this device's shard.
+def _sweep(xs, specs, *, bx, bts, variant, interpret, idx, n, S, extent,
+           overlap, axis_name, extras, scals, ax=0):
+    """One blocked sweep (``bts`` fused steps of the ``specs`` group)
+    on this device's shard.
 
     ``extras``: list of ``(name, from_above, from_below, shard)`` for
-    every step-constant operand (halos pre-exchanged at max depth).
-    ``scal``: this sweep's ``(bts, n_scalars)`` slice (or ``(B, bts,
-    n_scalars)`` per-problem rows), or None. ``ax``: the sharded axis
-    within each array — 0 for plain grids, 1 for ``[B, *grid]`` batches
-    (the validity interval the engine receives is about the *grid*
-    leading axis either way, which is exactly axis ``ax``).
+    every operand the group reads — step-constant operands arrive with
+    halos pre-exchanged at max depth, evolving-field operands with
+    halos the caller exchanged just before this dispatch (``slabs``
+    below only takes the innermost ``h`` slices, so any depth >= h
+    works). ``scals``: per-spec tuple of this sweep's ``(bts,
+    n_scalars)`` slices (or ``(B, bts, n_scalars)`` per-problem rows),
+    or None. ``ax``: the sharded axis within each array — 0 for plain
+    grids, 1 for ``[B, *grid]`` batches (the validity interval the
+    engine receives is about the *grid* leading axis either way, which
+    is exactly axis ``ax``).
     """
-    h = spec.halo(bts)
+    h = bts * sum(sp.radius for sp in specs)
     row0 = idx * S                    # global coordinate of shard row 0
 
     def slabs(lo_sl, hi_sl):
@@ -184,8 +194,8 @@ def _sweep(xs, spec, *, bx, bts, variant, interpret, idx, n, S, extent,
         slab = jnp.concatenate([fa, xs, fb], axis=ax)
         lo = jnp.clip(h - row0, 0, S + 2 * h)
         hi = jnp.clip(extent - row0 + h, 0, S + 2 * h)
-        out = _engine_call(slab, spec, bx, bts, variant, interpret,
-                           slabs(0, S + 2 * h), scal, lo, hi)
+        out = _engine_call(slab, specs, bx, bts, variant, interpret,
+                           slabs(0, S + 2 * h), scals, lo, hi)
         return _sl(out, h, h + S, ax)
 
     # Overlapped schedule: kick off the halo ppermutes, compute the
@@ -194,9 +204,9 @@ def _sweep(xs, spec, *, bx, bts, variant, interpret, idx, n, S, extent,
     if S > 2 * h:      # interior rows [h, S-h) need no halo at all
         hi_own = jnp.clip(extent - row0, 0, S)
         interior = [_sl(_engine_call(
-            xs, spec, bx, bts, variant, interpret,
+            xs, specs, bx, bts, variant, interpret,
             {name: es for name, _, _, es in extras},
-            scal, 0, hi_own), h, S - h, ax)]
+            scals, 0, hi_own), h, S - h, ax)]
     else:              # S == 2h: the two edge strips cover the shard
         interior = []
     tslab = jnp.concatenate([fa, _sl(xs, None, 2 * h, ax)],
@@ -205,13 +215,13 @@ def _sweep(xs, spec, *, bx, bts, variant, interpret, idx, n, S, extent,
                             axis=ax)                      # rows [S-2h, S+h)
     lo_t = jnp.clip(h - row0, 0, 3 * h)
     hi_t = jnp.clip(extent - row0 + h, 0, 3 * h)
-    top = _sl(_engine_call(tslab, spec, bx, bts, variant, interpret,
-                           slabs(0, 3 * h), scal, lo_t, hi_t),
+    top = _sl(_engine_call(tslab, specs, bx, bts, variant, interpret,
+                           slabs(0, 3 * h), scals, lo_t, hi_t),
               h, 2 * h, ax)
     lo_b = jnp.clip(2 * h - row0 - S, 0, 3 * h)
     hi_b = jnp.clip(extent - row0 - S + 2 * h, 0, 3 * h)
-    bot = _sl(_engine_call(bslab, spec, bx, bts, variant, interpret,
-                           slabs(S - h, S + 2 * h), scal, lo_b, hi_b),
+    bot = _sl(_engine_call(bslab, specs, bx, bts, variant, interpret,
+                           slabs(S - h, S + 2 * h), scals, lo_b, hi_b),
               h, 2 * h, ax)
     return jnp.concatenate([top] + interior + [bot], axis=ax)
 
@@ -369,8 +379,8 @@ def _sharded_runner(spec, mesh, *, key, h_max, schedule, bx, variant,
             off = 0
             for bts in schedule:
                 xs = _engine_call(
-                    xs, spec, bx, bts, variant, interpret, extras_d,
-                    _tsl(scal, off, off + bts) if scal is not None
+                    xs, (spec,), bx, bts, variant, interpret, extras_d,
+                    (_tsl(scal, off, off + bts),) if scal is not None
                     else None, None, None)
                 off += bts
             return xs
@@ -392,12 +402,12 @@ def _sharded_runner(spec, mesh, *, key, h_max, schedule, bx, variant,
                 extras.append((name, ea, eb, es))
             off = 0
             for bts in schedule:
-                xs = _sweep(xs, spec, bx=bx, bts=bts, variant=variant,
+                xs = _sweep(xs, (spec,), bx=bx, bts=bts, variant=variant,
                             interpret=interpret, idx=idx, n=n, S=S,
                             extent=extent, overlap=overlap,
                             axis_name=axis_name, extras=extras,
-                            scal=(_tsl(scal, off, off + bts)
-                                  if scal is not None else None), ax=ga)
+                            scals=((_tsl(scal, off, off + bts),)
+                                   if scal is not None else None), ax=ga)
                 off += bts
             return xs
 
@@ -412,5 +422,240 @@ def _sharded_runner(spec, mesh, *, key, h_max, schedule, bx, variant,
     fn = jax.jit(compat.shard_map(
         body, mesh=mesh, in_specs=in_specs,
         out_specs=out_spec, check_vma=False))
+    _RUNNERS[key] = fn
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Program runner: a StencilProgram sharded over devices. Fuse groups
+# dispatch exactly as in kernels.ops.stencil_program_run; the new
+# wrinkle is that a group may read *evolving* fields written by earlier
+# groups, whose halos must be re-exchanged before every dispatch (the
+# pre-exchange-once trick only applies to step-constant inputs).
+# ---------------------------------------------------------------------------
+
+def stencil_program_run_sharded(fields: dict, program, n_steps: int, *,
+                                n_devices: int, bx: int = 256, bt: int = 1,
+                                variant: str = "revolving",
+                                interpret: bool = True, inputs=None,
+                                scalars=None, devices=None,
+                                overlap: bool = True, fuse: bool = True,
+                                axis_name: str = AXIS) -> dict:
+    """``n_steps`` program steps with every field sharded over devices.
+
+    The program analog of ``stencil_run_sharded``: per program step,
+    every fuse group runs as one slab dispatch (``fuse=False`` forces
+    one dispatch per sweep). A fully-fused program temporally blocks
+    ``bt`` steps per dispatch with halo depth ``bt * sum(radii)``;
+    multi-group programs are forced to ``bt=1`` because their sweeps
+    must alternate every step. Step-constant ``inputs`` have their
+    halos exchanged once per call at max depth; evolving fields are
+    exchanged per dispatch at the current depth, right after the group
+    that last wrote them. ``scalars``: dict mapping a sweep name to its
+    ``(n_steps, n_scalars)`` values (per-problem ``(B, n_steps, k)``
+    over a batch-sharded batch).
+
+    Returns the fields dict. Unbatched grids shard the leading grid
+    axis; a ``[B, *grid]`` batch requires ``B % n_devices == 0`` and
+    shards whole problems (grid-sharding a batched multi-field program
+    is not implemented — pad the batch or drop to one device).
+    """
+    from repro.core.stencil import StencilProgram
+    from repro.kernels.ops import _tslice as _tsl
+    if not isinstance(program, StencilProgram):
+        raise TypeError(f"expected a StencilProgram, got {type(program)}")
+    if n_devices < 1:
+        raise ValueError(f"n_devices must be >= 1, got {n_devices}")
+    fields = dict(fields)
+    missing = [f for f in program.fields if f not in fields]
+    if missing:
+        raise ValueError(f"program {program.name!r} evolves fields "
+                         f"{missing} that were not provided")
+    inputs = dict(inputs) if inputs else {}
+    need = [nm for nm in program.input_names if nm not in inputs]
+    if need:
+        raise ValueError(f"program {program.name!r} requires inputs "
+                         f"{need}")
+    dims = program.dims
+    field_names = program.fields
+    input_names = program.input_names
+    primary = fields[field_names[0]]
+    if primary.ndim not in (dims, dims + 1):
+        raise ValueError(f"grid rank {primary.ndim} != program dims "
+                         f"{dims} (or {dims + 1} with a leading batch "
+                         f"axis)")
+    for nm, arr in list(fields.items()) + list(inputs.items()):
+        if arr.shape != primary.shape:
+            raise ValueError(f"operand {nm!r} shape {arr.shape} != "
+                             f"primary field shape {primary.shape}")
+    batched = primary.ndim == dims + 1
+    n = n_devices
+
+    groups = (program.fuse_groups() if fuse
+              else tuple((s,) for s in program.sweeps))
+    if len(groups) > 1:
+        bt = 1                      # groups must alternate every step
+    group_meta = []
+    for g in groups:
+        aux_names = tuple(dict.fromkeys(
+            op.name for s in g for op in s.spec.aux))
+        scal_keys = tuple(s.name if s.spec.n_scalars else None for s in g)
+        group_meta.append((tuple(s.spec for s in g), g[0].field,
+                           aux_names, scal_keys,
+                           sum(s.spec.radius for s in g)))
+    group_meta = tuple(group_meta)
+    max_gr = max(m[4] for m in group_meta)
+
+    if batched:
+        if primary.shape[0] % n:
+            raise NotImplementedError(
+                f"batched sharded program runs need B % n_devices == 0 "
+                f"(got B={primary.shape[0]}, n_devices={n}); pad the "
+                f"batch or run on one device")
+        strategy, extent, S = "batch", primary.shape[0], primary.shape[0]
+    else:
+        strategy = "grid"
+        extent = primary.shape[0]
+        S = shard_extent(extent, n)
+        if max_gr > S:
+            raise ValueError(
+                f"fused group radius {max_gr} exceeds the {S}-deep "
+                f"shard a {n}-way split of the {extent}-deep leading "
+                f"axis leaves per device; reduce n_devices "
+                f"(<= {extent // max_gr})")
+        bt = min(bt, max(1, S // max_gr))
+    bt = max(1, min(bt, n_steps or 1))
+    h_max = bt * max_gr
+    full, rem = divmod(n_steps, bt)
+    schedule = tuple([bt] * full + ([rem] if rem else []))
+
+    scalars = dict(scalars) if scalars else {}
+    scal_names = tuple(s.name for s in program.sweeps if s.spec.n_scalars)
+    unknown = [k for k in scalars if k not in scal_names]
+    if unknown:
+        raise ValueError(f"scalars given for sweeps {unknown} that take "
+                         f"no scalars (expected: {list(scal_names)})")
+    need = [k for k in scal_names if k not in scalars]
+    if need:
+        raise ValueError(f"program {program.name!r} requires scalars "
+                         f"for sweeps {need}")
+    scal_arrays = []
+    per_scal = []
+    for k in scal_names:
+        a = jnp.asarray(scalars[k], jnp.float32)
+        if strategy == "batch" and a.ndim == 3:
+            a = a.reshape(primary.shape[0], n_steps, -1)
+            per_scal.append(True)
+        else:
+            a = a.reshape(n_steps, -1)
+            per_scal.append(False)
+        scal_arrays.append(a)
+
+    if strategy == "grid" and S * n != extent:
+        pad = [(0, 0)] * primary.ndim
+        pad[0] = (0, S * n - extent)
+        padf = lambda a: jnp.pad(a, pad)
+    else:
+        padf = lambda a: a
+    dt = primary.dtype
+    args = tuple(padf(fields[f].astype(dt)) for f in field_names)
+    args += tuple(padf(inputs[nm].astype(dt)) for nm in input_names)
+    args += tuple(scal_arrays)
+
+    mesh = _device_mesh(n, devices)
+    key = ("program", program, tuple(a.shape for a in args),
+           str(dt), bx, schedule, variant, interpret, n, S, extent,
+           overlap, axis_name, fuse, strategy, tuple(per_scal),
+           tuple(int(d.id) for d in np.asarray(mesh.devices).flat))
+    runner = _program_sharded_runner(
+        program, mesh, key=key, group_meta=group_meta, h_max=h_max,
+        schedule=schedule, bx=bx, variant=variant, interpret=interpret,
+        n=n, S=S, extent=extent, overlap=overlap, axis_name=axis_name,
+        field_names=field_names, input_names=input_names,
+        scal_names=scal_names, per_scal=tuple(per_scal),
+        strategy=strategy)
+    outs = runner(*args)
+    if strategy == "grid" and S * n != extent:
+        outs = tuple(_sl(o, None, extent, 0) for o in outs)
+    return dict(zip(field_names, outs))
+
+
+def _program_sharded_runner(program, mesh, *, key, group_meta, h_max,
+                            schedule, bx, variant, interpret, n, S,
+                            extent, overlap, axis_name, field_names,
+                            input_names, scal_names, per_scal, strategy):
+    fn = _RUNNERS.get(key)
+    if fn is not None:
+        return fn
+    from repro.kernels.ops import _tslice as _tsl
+    nf, ni = len(field_names), len(input_names)
+
+    def group_scals(scal_d, scal_keys, off, bts):
+        if not any(k is not None for k in scal_keys):
+            return None
+        return tuple(_tsl(scal_d[k], off, off + bts)
+                     if k is not None else None for k in scal_keys)
+
+    if strategy == "batch":
+        # Whole problems per device: the single-device batched engine
+        # needs no halos, so aux operands pass through unchanged.
+        def body(*arrs):
+            fs = dict(zip(field_names, arrs[:nf]))
+            ins = dict(zip(input_names, arrs[nf:nf + ni]))
+            scal_d = dict(zip(scal_names, arrs[nf + ni:]))
+            off = 0
+            for bts in schedule:
+                for specs, fld, aux_names, scal_keys, _ in group_meta:
+                    extras = {nm: (fs[nm] if nm in fs else ins[nm])
+                              for nm in aux_names}
+                    fs[fld] = _engine_call(
+                        fs[fld], specs, bx, bts, variant, interpret,
+                        extras, group_scals(scal_d, scal_keys, off, bts),
+                        None, None)
+                off += bts
+            return tuple(fs[f] for f in field_names)
+
+        in_specs = (P(axis_name),) * (nf + ni)
+        in_specs += tuple(P(axis_name) if p else P() for p in per_scal)
+        out_specs = (P(axis_name),) * nf
+    else:
+        def body(*arrs):
+            idx = jax.lax.axis_index(axis_name)
+            fs = dict(zip(field_names, arrs[:nf]))
+            ins = dict(zip(input_names, arrs[nf:nf + ni]))
+            scal_d = dict(zip(scal_names, arrs[nf + ni:]))
+            ins_ex = {}
+            for nm in input_names:     # step-constant: exchange once
+                ea, eb = exchange_halos(ins[nm], h_max, n, axis_name, 0)
+                ins_ex[nm] = (ea, eb, ins[nm])
+            off = 0
+            for bts in schedule:
+                for specs, fld, aux_names, scal_keys, g_r in group_meta:
+                    h = bts * g_r
+                    extras = []
+                    for nm in aux_names:
+                        if nm in fs:   # evolving: exchange fresh value
+                            ea, eb = exchange_halos(fs[nm], h, n,
+                                                    axis_name, 0)
+                            extras.append((nm, ea, eb, fs[nm]))
+                        else:
+                            extras.append((nm,) + ins_ex[nm])
+                    fs[fld] = _sweep(
+                        fs[fld], specs, bx=bx, bts=bts, variant=variant,
+                        interpret=interpret, idx=idx, n=n, S=S,
+                        extent=extent, overlap=overlap,
+                        axis_name=axis_name, extras=extras,
+                        scals=group_scals(scal_d, scal_keys, off, bts),
+                        ax=0)
+                off += bts
+            return tuple(fs[f] for f in field_names)
+
+        in_specs = (P(axis_name),) * (nf + ni)
+        in_specs += (P(),) * len(scal_names)
+        out_specs = (P(axis_name),) * nf
+
+    fn = jax.jit(compat.shard_map(
+        body, mesh=mesh, in_specs=in_specs,
+        out_specs=out_specs, check_vma=False))
     _RUNNERS[key] = fn
     return fn

@@ -51,13 +51,16 @@ from repro.core.stencil import StencilSpec
 
 _LOG = logging.getLogger("repro.autotune")
 
-_CACHE_VERSION = 5   # v5: cache keys grew the HBM budget (|hb{n}) and
+_CACHE_VERSION = 6   # v6: multi-sweep StencilPrograms join the key
+# space — a program entry's head is ``program.cache_token()`` (every
+# sweep's name/field/spec fields), so two programs over identical grids
+# can never share a winner. v5 grew the HBM budget (|hb{n}) and
 # winners may carry an out-of-core tile size ("tile"); v4 added the
 # batch size (|B{n}), v3 the IR fields (boundary, tap layout,
 # aux-operand signature, n_scalars), v2 |nd{n_devices}. A version
 # mismatch drops the whole file (with a logged found-vs-expected
-# notice) — a v4 entry must never be *misread* as an answer for a
-# budget-constrained problem.
+# notice) — a v5 entry must never be *misread* as an answer for a
+# program (nor a v4 one for a budget-constrained problem).
 # Grids above this cell count are never timed on the host — the model
 # prior picks alone (measuring a 8192^2 interpret-mode sweep on CPU
 # would dwarf the run it is meant to speed up).
@@ -147,10 +150,10 @@ def clear_cache() -> None:
         pass
 
 
-def _key(spec: StencilSpec, shape, dtype: str, backend: str,
+def _key(spec, shape, dtype: str, backend: str,
          vmem_budget: int, tpu_name: str, n_devices: int = 1,
          batch: int = 1, hbm_budget: int | None = None,
-         extra_streams: int = 0) -> str:
+         extra_streams: int = 0, head: str | None = None) -> str:
     sh = "x".join(str(s) for s in shape)
     # IR fields: boundary mode and tap layout change the kernel's work
     # per cell; the aux-operand signature and per-step scalar count
@@ -165,11 +168,15 @@ def _key(spec: StencilSpec, shape, dtype: str, backend: str,
     # A caller-side legacy ``source=`` grid streams exactly like a
     # declared source operand, so it appends a trailing "s" to the
     # aux signature rather than growing the schema another field.
+    # ``head`` overrides the leading name field — StencilPrograms pass
+    # their ``cache_token()`` (per-sweep name/field/spec fields), the
+    # v6 schema extension.
     aux_sig = ",".join([op.role[0] for op in spec.aux]
                        + ["s"] * extra_streams) or "-"
     ir = (f"b{spec.boundary}|L{spec.layout}|ax{aux_sig}|"
           f"sc{spec.n_scalars}")
-    return (f"{spec.name}|d{spec.dims}|r{spec.radius}|{ir}|{sh}|{dtype}|"
+    name = head if head is not None else spec.name
+    return (f"{name}|d{spec.dims}|r{spec.radius}|{ir}|{sh}|{dtype}|"
             f"{backend}|vm{vmem_budget}|{tpu_name}|B{batch}|"
             f"nd{n_devices}|hb{'-' if hbm_budget is None else hbm_budget}")
 
@@ -187,14 +194,16 @@ def _variants_for(spec: StencilSpec, backend: str) -> tuple[str, ...]:
 
 def _measure(x, spec, plans, variants, backend, timer,
              repeats: int = 2, n_devices: int = 1,
-             hbm_budget: int | None = None, extra_streams: int = 0):
+             hbm_budget: int | None = None, extra_streams: int = 0,
+             program=None):
     """Time each (plan, variant); return (winner, winner_variant,
     {(bx, bt): best seconds-per-step}). With ``n_devices > 1`` each
     candidate is one sweep of the sharded deep-halo runner (collective
     cost included); with an ``hbm_budget`` the run auto-routes through
     the out-of-core runner, so tile streaming cost is *in* the
     measurement; candidates that cannot run — e.g. too few visible
-    devices — just leave the race."""
+    devices — just leave the race. With a ``program`` each candidate
+    is ``p.bt`` program steps of ``ops.stencil_program_run``."""
     from repro.kernels import ops
     timings: Dict[Tuple[int, int], float] = {}
     best = (None, None, float("inf"))
@@ -208,6 +217,20 @@ def _measure(x, spec, plans, variants, backend, timer,
     for p in plans:
         for v in variants:
             def run(p=p, v=v):
+                if program is not None:
+                    fields = {f: x for f in program.fields}
+                    ins = {n: x for n in program.input_names} or None
+                    scals = {s.name: jnp.ones((p.bt, s.spec.n_scalars),
+                                              jnp.float32)
+                             for s in program.sweeps
+                             if s.spec.n_scalars} or None
+                    return jax.block_until_ready(
+                        ops.stencil_program_run(
+                            fields, program, p.bt, inputs=ins,
+                            scalars=scals, bx=p.bx, bt=p.bt,
+                            backend=backend, variant=v,
+                            n_devices=n_devices,
+                            hbm_budget=hbm_budget))
                 scal = (jnp.ones((p.bt, spec.n_scalars), jnp.float32)
                         if spec.n_scalars else None)
                 # jax.block_until_ready (not the method): the
@@ -233,7 +256,7 @@ def _measure(x, spec, plans, variants, backend, timer,
     return best[0], best[1], timings
 
 
-def plan(shape, spec: StencilSpec, *, dtype="float32",
+def plan(shape, spec, *, dtype="float32",
          backend: str = "auto", n_steps: int = 16, top_k: int = 3,
          measure: bool | None = None, use_cache: bool = True,
          vmem_budget: int | None = None, tpu: TpuSpec = V5E,
@@ -279,8 +302,20 @@ def plan(shape, spec: StencilSpec, *, dtype="float32",
     version of the thesis's temporal-blocking tradeoff. The winning
     tile rides on ``TunedPlan.tile`` and in the cache value; the
     budget joins the cache key (``|hb{n}``).
+
+    ``spec`` may also be a ``core.stencil.StencilProgram``: the whole
+    program shares ONE tuned plan. Planning then runs against the
+    program's ``plan_proxy()`` (worst per-dispatch fused halo, summed
+    work, union of resident operands), the cache key head is
+    ``program.cache_token()`` (v6 schema), a multi-group program keeps
+    only ``bt == 1`` plans (its groups must alternate every step), and
+    measurement times ``ops.stencil_program_run``.
     """
+    from repro.core.stencil import StencilProgram
     from repro.kernels import ops
+    program = spec if isinstance(spec, StencilProgram) else None
+    if program is not None:
+        spec = program.plan_proxy()
     shape = tuple(int(s) for s in shape)
     if len(shape) not in (spec.dims, spec.dims + 1):
         raise ValueError(
@@ -313,7 +348,8 @@ def plan(shape, spec: StencilSpec, *, dtype="float32",
     # the same entry — and an entry's meaning must not silently shift
     # if a TpuSpec's default HBM is ever revised.
     key = _key(spec, grid, dtype, backend, budget, tpu.name, n_devices,
-               batch or 1, hbm, extra_streams)
+               batch or 1, hbm, extra_streams,
+               head=None if program is None else program.cache_token())
 
     def _mk(bx, bt, variant, source, timings=None, tile=None):
         bp = BlockPlan(spec, grid, bx=bx, bt=bt, itemsize=itemsize)
@@ -337,6 +373,10 @@ def plan(shape, spec: StencilSpec, *, dtype="float32",
     eff_nd, eff_batch = n_devices, batch or 1
     if batch is not None and n_devices > 1 and batch % n_devices == 0:
         eff_nd, eff_batch = 1, batch // n_devices
+    # A multi-group program can't temporally block a dispatch: its
+    # groups must alternate every program step, so only bt == 1 plans
+    # are executable and anything else would be tuned garbage.
+    multi_group = program is not None and not program.fully_fused
     tiles: dict = {}
     if outofcore:
         # Budget-aware planning: every VMEM-legal (bx, bt) — not the
@@ -352,6 +392,8 @@ def plan(shape, spec: StencilSpec, *, dtype="float32",
                                vmem_budget=vmem_budget,
                                n_devices=eff_nd, batch=eff_batch,
                                hbm_budget=2 ** 62, itemsize=itemsize):
+            if multi_group and p.bt != 1:
+                continue
             try:
                 tp = plan_tiles(spec, grid, bx=p.bx, bt=p.bt,
                                 hbm_budget=hbm, itemsize=itemsize,
@@ -372,6 +414,11 @@ def plan(shape, spec: StencilSpec, *, dtype="float32",
         ranked.sort(key=lambda t: t[0])
         shortlist = [p for _, p, _ in ranked[:top_k]]
         tiles = {(tp.bx, tp.bt): tp.tile for _, _, tp in ranked}
+    elif multi_group:
+        shortlist = [p for p in select_config(
+            spec, grid, n_steps, tpu=tpu, top_k=1 << 30,
+            vmem_budget=vmem_budget, n_devices=eff_nd, batch=eff_batch,
+            hbm_budget=hbm, itemsize=itemsize) if p.bt == 1][:top_k]
     else:
         shortlist = select_config(
             spec, grid, n_steps, tpu=tpu, top_k=top_k,
@@ -396,7 +443,7 @@ def plan(shape, spec: StencilSpec, *, dtype="float32",
         winner, w_variant, timings = _measure(
             x, spec, shortlist, variants, backend, timer,
             n_devices=n_devices, hbm_budget=hbm,
-            extra_streams=extra_streams)
+            extra_streams=extra_streams, program=program)
         if winner is not None:
             tuned = _mk(winner.bx, winner.bt, w_variant, "measured",
                         timings, tile=_tile_of(winner))

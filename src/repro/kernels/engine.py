@@ -128,27 +128,40 @@ def boundary_fill(win, boundary: str, tile_idx, bx: int, halo: int,
     return jnp.where(mask, win, jnp.zeros_like(win))
 
 
-def fused_steps(win, spec: StencilSpec, bt: int, apply_fn, fill,
-                src=None, coeff=None, scalars=None):
-    """``bt`` fused steps on a window.
+def fused_steps(win, specs, bt: int, apply_fns, fills,
+                srcs=None, coeffs=None, scalars=None):
+    """``bt`` fused program-group steps on a window.
 
-    ``fill``: the boundary-fill closure for this window's position —
-    applied to the input and to every step's output, so out-of-grid
-    cells behave per ``spec.boundary`` at *every* step. ``src``: the
-    pre-filled sum of source-role windows (added after each step).
-    ``coeff``: pre-filled step-constant coefficient windows by name.
-    ``scalars``: ``(bt, n_scalars)`` per-step values for custom updates.
+    ``specs``/``apply_fns``/``fills``/``srcs``/``coeffs``/``scalars``
+    hold one entry per *stage* — one sweep of a fused program group
+    (a single-sweep call is the one-stage case). Per step, every stage
+    re-imposes its own true-grid boundary on its input window
+    (fill-between-sweeps), applies its update, then adds its pre-filled
+    source sum; after the last fused step the last stage's fill runs
+    once more on the result. For one stage this is exactly the
+    historical ``fill, (apply, +src, fill) * bt`` sequence, so
+    single-sweep execution stays bit-identical; for several stages it
+    is bitwise-equal to dispatching the sweeps one at a time, because
+    each fill rebuilds out-of-grid cells purely from in-grid cells.
     """
-    win = fill(win)
+    M = len(specs)
+    if srcs is None:
+        srcs = (None,) * M
+    if coeffs is None:
+        coeffs = (None,) * M
+    if scalars is None:
+        scalars = (None,) * M
 
     def body(t, g):
-        srow = scalars[t] if scalars is not None else None
-        out = apply_fn(g, spec, coeff, srow)
-        if src is not None:
-            out = out + src
-        return fill(out)
+        for m in range(M):
+            g = fills[m](g)
+            srow = scalars[m][t] if scalars[m] is not None else None
+            g = apply_fns[m](g, specs[m], coeffs[m], srow)
+            if srcs[m] is not None:
+                g = g + srcs[m]
+        return g
 
-    return jax.lax.fori_loop(0, bt, body, win)
+    return fills[-1](jax.lax.fori_loop(0, bt, body, win))
 
 
 def _z_clamped_window(window, z_out, d_lo, d_hi, r: int):
@@ -171,16 +184,25 @@ def _z_clamped_window(window, z_out, d_lo, d_hi, r: int):
 # 2D kernel bodies
 # ---------------------------------------------------------------------------
 
-def _unpack_2d(refs, has_scal: bool, n_per: int, has_src: bool,
-               n_coeff: int):
-    """Split the flat pallas ref list into named groups; ``n_per`` is
-    refs per streamed operand (3 for multioperand, 1 for revolving)."""
+def _unpack_2d(refs, stages, n_per: int):
+    """Split the flat pallas ref list into named per-stage groups.
+
+    ``stages``: one ``(has_src, coeff_meta, has_scal)`` triple per
+    fused sweep; ``n_per`` is refs per streamed operand (3 for
+    multioperand, 1 for revolving). Ref order: validity limits,
+    per-stage scalars, the evolving grid, then per stage its source
+    and coeff streams, then the output.
+    """
     it = iter(refs)
     lim = next(it)
-    scal = next(it) if has_scal else None
+    scal = [next(it) if has_scal else None for (_, _, has_scal) in stages]
     xg = tuple(next(it) for _ in range(n_per))
-    sg = tuple(next(it) for _ in range(n_per)) if has_src else None
-    cgs = [tuple(next(it) for _ in range(n_per)) for _ in range(n_coeff)]
+    sg, cgs = [], []
+    for (has_src, coeff_meta, _) in stages:
+        sg.append(tuple(next(it) for _ in range(n_per))
+                  if has_src else None)
+        cgs.append([tuple(next(it) for _ in range(n_per))
+                    for _ in coeff_meta])
     out = next(it)
     return lim, scal, xg, sg, cgs, out, it
 
@@ -193,15 +215,13 @@ def _reader(batched: bool):
     return lambda ref: ref[...]
 
 
-def _kernel_2d_multi(*refs, spec, bx, bt, true_w, has_src, coeff_meta,
-                     has_scal, apply_fn, batched=False):
-    lim_ref, scal_ref, xg, sg, cgs, o_ref, _ = _unpack_2d(
-        refs, has_scal, 3, has_src, len(coeff_meta))
+def _kernel_2d_multi(*refs, specs, bx, bt, halo, true_w, stages,
+                     apply_fns, batched=False):
+    lim_ref, scal_refs, xg, sgs, cgss, o_ref, _ = _unpack_2d(
+        refs, stages, 3)
     rd = _reader(batched)
     row_lo, row_hi = lim_ref[0, 0], lim_ref[0, 1]
     i = pl.program_id(1 if batched else 0)
-    halo = spec.halo(bt)
-    rows = xg[1].shape[-2]
 
     def window(tri):
         cat = jnp.concatenate([rd(tri[0]), rd(tri[1]), rd(tri[2])],
@@ -212,37 +232,38 @@ def _kernel_2d_multi(*refs, spec, bx, bt, true_w, has_src, coeff_meta,
         return lambda w: boundary_fill(w, boundary, i, bx, halo, true_w,
                                        row_lo, row_hi)
 
-    fill = fill_for(spec.boundary)
-    src = fill_for("dirichlet0")(window(sg)) if has_src else None
-    coeff = {name: fill_for(bnd)(window(tri))
-             for (name, bnd), tri in zip(coeff_meta, cgs)}
-    scal = rd(scal_ref) if has_scal else None
-    win = fused_steps(window(xg), spec, bt, apply_fn, fill,
-                      src=src, coeff=coeff or None, scalars=scal)
+    fills = [fill_for(sp.boundary) for sp in specs]
+    srcs = [fill_for("dirichlet0")(window(sg)) if sg is not None else None
+            for sg in sgs]
+    coeffs = [{name: fill_for(bnd)(window(tri))
+               for (name, bnd), tri in zip(meta, cgs)} or None
+              for (_, meta, _), cgs in zip(stages, cgss)]
+    scals = [rd(sr) if sr is not None else None for sr in scal_refs]
+    win = fused_steps(window(xg), specs, bt, apply_fns, fills,
+                      srcs=srcs, coeffs=coeffs, scalars=scals)
     if batched:
         o_ref[0] = win[:, halo: halo + bx]
     else:
         o_ref[...] = win[:, halo: halo + bx]
 
 
-def _kernel_2d_revolving(*refs, spec, bx, bt, true_w, has_src, coeff_meta,
-                         has_scal, apply_fn, batched=False):
-    n_coeff = len(coeff_meta)
-    lim_ref, scal_ref, (x_ref,), sg, cgs, o_ref, it = _unpack_2d(
-        refs, has_scal, 1, has_src, n_coeff)
+def _kernel_2d_revolving(*refs, specs, bx, bt, halo, true_w, stages,
+                         apply_fns, batched=False):
+    lim_ref, scal_refs, (x_ref,), sgs, cgss, o_ref, it = _unpack_2d(
+        refs, stages, 1)
     rd = _reader(batched)
-    s_ref = sg[0] if has_src else None
-    c_refs = [tri[0] for tri in cgs]
-    bufs = [next(it)]                       # main revolving scratch
-    if has_src:
-        bufs.append(next(it))
-    bufs += [next(it) for _ in range(n_coeff)]
+    # stream/scratch order: evolving grid, then per stage [src?]+coeffs.
+    streams = [x_ref]
+    for sg, cgs in zip(sgs, cgss):
+        if sg is not None:
+            streams.append(sg[0])
+        streams += [tri[0] for tri in cgs]
+    bufs = [next(it) for _ in streams]
     row_lo, row_hi = lim_ref[0, 0], lim_ref[0, 1]
     # The batch axis is the *outer* grid dimension, so tiles run
     # 0..nt per batch row and the i == 0 init below re-arms the
     # revolving scratches for every problem — slabs can't leak.
     i = pl.program_id(1 if batched else 0)
-    halo = spec.halo(bt)
     rows = x_ref.shape[-2]
 
     @pl.when(i == 0)
@@ -262,7 +283,6 @@ def _kernel_2d_revolving(*refs, spec, bx, bt, true_w, has_src, coeff_meta,
     cols = col0 + jax.lax.broadcasted_iota(jnp.int32, (rows, bx), 1)
     rr = jax.lax.broadcasted_iota(jnp.int32, (rows, bx), 0)
     inb = (cols < true_w) & (rr >= row_lo) & (rr < row_hi)
-    streams = [x_ref] + ([s_ref] if has_src else []) + c_refs
     for b, r_in in zip(bufs, streams):
         b[:, 2 * bx:] = jnp.where(inb, rd(r_in), 0)
 
@@ -274,14 +294,18 @@ def _kernel_2d_revolving(*refs, spec, bx, bt, true_w, has_src, coeff_meta,
         return lambda w: boundary_fill(w, boundary, i - 1, bx, halo,
                                        true_w, row_lo, row_hi)
 
-    fill = fill_for(spec.boundary)
-    src = fill_for("dirichlet0")(window(bufs[1])) if has_src else None
-    cbufs = bufs[1 + int(has_src):]
-    coeff = {name: fill_for(bnd)(window(b))
-             for (name, bnd), b in zip(coeff_meta, cbufs)}
-    scal = rd(scal_ref) if has_scal else None
-    win = fused_steps(window(bufs[0]), spec, bt, apply_fn, fill,
-                      src=src, coeff=coeff or None, scalars=scal)
+    fills = [fill_for(sp.boundary) for sp in specs]
+    bi = iter(bufs)
+    xwin = window(next(bi))
+    srcs, coeffs = [], []
+    for (has_src, meta, _) in stages:
+        srcs.append(fill_for("dirichlet0")(window(next(bi)))
+                    if has_src else None)
+        coeffs.append({name: fill_for(bnd)(window(next(bi)))
+                       for (name, bnd) in meta} or None)
+    scals = [rd(sr) if sr is not None else None for sr in scal_refs]
+    win = fused_steps(xwin, specs, bt, apply_fns, fills,
+                      srcs=srcs, coeffs=coeffs, scalars=scals)
     if batched:
         o_ref[0] = win[:, halo: halo + bx]
     else:
@@ -298,8 +322,8 @@ def _kernel_2d_revolving(*refs, spec, bx, bt, true_w, has_src, coeff_meta,
 # scalars (custom updates) are 2D-only; ``core.stencil`` enforces that.
 # ---------------------------------------------------------------------------
 
-def _kernel_3d_stream(*refs, spec, bx, bt, true_h, true_w, has_src,
-                      apply_fn, batched=False):
+def _kernel_3d_stream(*refs, specs, bx, bt, halo, true_h, true_w, has_src,
+                      apply_fns, batched=False):
     if has_src:
         (lim_ref, xl_ref, xc_ref, xr_ref, sl_ref, sc_ref, sr_ref, o_ref,
          win_ref, src_ref) = refs
@@ -313,10 +337,16 @@ def _kernel_3d_stream(*refs, spec, bx, bt, true_h, true_w, has_src,
     d_lo, d_hi = lim_ref[0, 0], lim_ref[0, 1]
     i = pl.program_id(1 if batched else 0)       # x tile
     k = pl.program_id(2 if batched else 1)       # z pipeline step
-    r = spec.radius
-    halo = spec.halo(bt)
+    # A fused group cycles its M sweeps through bt program steps:
+    # pipeline stage s applies sweep s % M. The 3D fuse rule (see
+    # core.stencil._can_fuse) guarantees one radius and one boundary
+    # across the group, so every stage lags its producer by the same r.
+    M = len(specs)
+    n_stages = bt * M
+    r = specs[0].radius
     rows = xc_ref.shape[-2]
-    clamp = spec.boundary == "clamp"
+    boundary = specs[0].boundary
+    clamp = boundary == "clamp"
 
     @pl.when(k == 0)
     def _init():
@@ -327,7 +357,7 @@ def _kernel_3d_stream(*refs, spec, bx, bt, true_h, true_w, has_src,
     def fill_xy(plane):
         # In-plane boundary (y rows / x cols are never sharded, so the
         # bounds are static); the z boundary is owned by the pipeline.
-        return boundary_fill(plane, spec.boundary, i, bx, halo, true_w,
+        return boundary_fill(plane, boundary, i, bx, halo, true_w,
                              0, true_h)
 
     # ---- assemble the input plane window for z = k (stage-0 input) ----
@@ -344,19 +374,21 @@ def _kernel_3d_stream(*refs, spec, bx, bt, true_h, true_w, has_src,
         plane = jnp.where(xymask & zin, plane, zero)
 
     if has_src:
-        # Rolling source-plane buffer (Hotspot3D power): slot bt*r holds
+        # Rolling source-plane buffer (Hotspot3D power): slot halo holds
         # plane k; stage s reads its output plane's source at the
-        # *static* slot bt*r - (s+1)*r. Sources are center-tap only, so
+        # *static* slot halo - (s+1)*r. Sources are center-tap only, so
         # they are zero-filled outside the grid in either boundary mode.
+        # (Aux operands are single-sweep-only in 3D — fuse rule.)
         scat = jnp.concatenate([rd(sl_ref), rd(sc_ref), rd(sr_ref)], axis=1)
         splane = scat[:, bx - halo: 2 * bx + halo]
         splane = jnp.where(xymask & zin, splane, zero)
-        for j in range(bt * r):
+        for j in range(halo):
             src_ref[j] = src_ref[j + 1]
-        src_ref[bt * r] = splane
+        src_ref[halo] = splane
 
     # ---- pipeline: stage s consumes window[s], emits plane k-(s+1)*r ----
-    for s in range(bt):
+    for s in range(n_stages):
+        sp = specs[s % M]
         # push the producer plane into stage s's rolling window
         for j in range(2 * r):
             win_ref[s, j] = win_ref[s, j + 1]
@@ -365,9 +397,9 @@ def _kernel_3d_stream(*refs, spec, bx, bt, true_h, true_w, has_src,
         stage_win = win_ref[s][...]
         if clamp:
             stage_win = _z_clamped_window(stage_win, z_out, d_lo, d_hi, r)
-        updated = apply_fn(stage_win, spec, None, None)
+        updated = apply_fns[s % M](stage_win, sp, None, None)
         if has_src:
-            updated = updated + src_ref[bt * r - (s + 1) * r]
+            updated = updated + src_ref[halo - (s + 1) * r]
         if clamp:
             plane = fill_xy(updated)
         else:
@@ -392,19 +424,22 @@ def _limits(lo, hi, true_n: int) -> jax.Array:
                       jnp.asarray(hi, jnp.int32)]).reshape(1, 2)
 
 
-def _run_2d(x, spec, plan: BlockPlan, bx, bt, variant, interpret, source,
-            coeffs, scalars, apply_fn, valid_lo, valid_hi):
+def _run_2d(x, specs, plan: BlockPlan, bx, bt, variant, interpret, sources,
+            coeffss, scalarss, apply_fns, valid_lo, valid_hi):
     batched = x.ndim == 3
     true_h, true_w = x.shape[-2:]
     hp, wp = plan.padded_rows, plan.padded_width
     pad2 = ((0, 0),) * (x.ndim - 2) + ((0, hp - true_h), (0, wp - true_w))
     xp = jnp.pad(x, pad2)
-    has_src = source is not None
-    sp = jnp.pad(source.astype(x.dtype), pad2) if has_src else None
-    cps = [jnp.pad(c.astype(x.dtype), pad2) for c in coeffs]
-    coeff_meta = tuple((op.name, op.boundary_of(spec))
-                       for op in spec.coeff_operands)
-    has_scal = scalars is not None
+    # One fused dispatch consumes bt * sum(radii) halo columns: each
+    # stage shrinks validity by its own radius, bt times over.
+    halo = bt * sum(sp.radius for sp in specs)
+    stages = tuple(
+        (src is not None,
+         tuple((op.name, op.boundary_of(sp))
+               for op in sp.coeff_operands),
+         scal is not None)
+        for sp, src, scal in zip(specs, sources, scalarss))
     rows, nt = plan.padded_rows, plan.n_tiles
 
     # The batch axis lowers as the outermost grid dimension: every
@@ -420,21 +455,26 @@ def _run_2d(x, spec, plan: BlockPlan, bx, bt, variant, interpret, source,
     lim_spec = pl.BlockSpec((1, 2), lambda *_: (0, 0))
     head_specs = [lim_spec]
     head_args = [lim]
-    if has_scal:
+    for scal in scalarss:
+        if scal is None:
+            continue
         if batched:          # per-problem (B, bt, n_scalars) rows
             head_specs.append(pl.BlockSpec(
-                (1,) + scalars.shape[1:], lambda b, i: (b, 0, 0)))
+                (1,) + scal.shape[1:], lambda b, i: (b, 0, 0)))
         else:
-            head_specs.append(pl.BlockSpec(scalars.shape,
+            head_specs.append(pl.BlockSpec(scal.shape,
                                            lambda *_: (0, 0)))
-        head_args.append(scalars)
+        head_args.append(scal)
     params = tpu_compiler_params(
         dimension_semantics=("arbitrary",) * (2 if batched else 1))
-    kern_kw = dict(spec=spec, bx=bx, bt=bt, true_w=true_w,
-                   has_src=has_src, coeff_meta=coeff_meta,
-                   has_scal=has_scal, apply_fn=apply_fn, batched=batched)
-    n_streamed = 1 + int(has_src) + len(cps)
-    streamed = [xp] + ([sp] if has_src else []) + cps
+    kern_kw = dict(specs=specs, bx=bx, bt=bt, halo=halo, true_w=true_w,
+                   stages=stages, apply_fns=apply_fns, batched=batched)
+    streamed = [xp]
+    for src, cps in zip(sources, coeffss):
+        if src is not None:
+            streamed.append(jnp.pad(src.astype(x.dtype), pad2))
+        streamed += [jnp.pad(c.astype(x.dtype), pad2) for c in cps]
+    n_streamed = len(streamed)
     grid = ((x.shape[0],) if batched else ()) + (nt,)
 
     if variant == "multioperand":
@@ -477,15 +517,19 @@ def _run_2d(x, spec, plan: BlockPlan, bx, bt, variant, interpret, source,
     return out[..., :true_h, :true_w]
 
 
-def _run_3d(x, spec, plan: BlockPlan, bx, bt, variant, interpret, source,
-            apply_fn, valid_lo, valid_hi):
+def _run_3d(x, specs, plan: BlockPlan, bx, bt, variant, interpret, sources,
+            apply_fns, valid_lo, valid_hi):
     if variant not in VARIANTS_3D:
         raise ValueError(f"unknown 3D variant {variant!r}; "
                          f"expected one of {VARIANTS_3D}")
     batched = x.ndim == 4
     true_d, true_h, true_w = x.shape[-3:]
-    rows, nt, r = plan.padded_rows, plan.n_tiles, spec.radius
-    fill = bt * r
+    rows, nt = plan.padded_rows, plan.n_tiles
+    M = len(specs)
+    r = specs[0].radius       # equal across the fused group (3D rule)
+    n_stages = bt * M
+    fill = n_stages * r       # pipeline depth == x halo
+    source = sources[0] if M == 1 else None
     has_src = source is not None
     pad3 = ((0, 0),) * (x.ndim - 2) + (
         (0, rows - true_h), (0, plan.padded_width - true_w))
@@ -500,9 +544,9 @@ def _run_3d(x, spec, plan: BlockPlan, bx, bt, variant, interpret, source,
     lim = _limits(valid_lo, valid_hi, true_d)
     lim_spec = pl.BlockSpec((1, 2), lambda *_: (0, 0))
 
-    kern = functools.partial(_kernel_3d_stream, spec=spec, bx=bx, bt=bt,
-                             true_h=true_h, true_w=true_w,
-                             has_src=has_src, apply_fn=apply_fn,
+    kern = functools.partial(_kernel_3d_stream, specs=specs, bx=bx, bt=bt,
+                             halo=fill, true_h=true_h, true_w=true_w,
+                             has_src=has_src, apply_fns=apply_fns,
                              batched=batched)
     tri_specs = [
         pl.BlockSpec(block, im(lambda i, k: (
@@ -512,10 +556,11 @@ def _run_3d(x, spec, plan: BlockPlan, bx, bt, variant, interpret, source,
         pl.BlockSpec(block, im(lambda i, k: (
             jnp.minimum(k, true_d - 1), 0, jnp.minimum(i + 1, nt - 1)))),
     ]
-    scratch = [pltpu.VMEM((bt, 2 * r + 1, rows, bx + 2 * bt * r), xp.dtype)]
+    scratch = [pltpu.VMEM((n_stages, 2 * r + 1, rows, bx + 2 * fill),
+                          xp.dtype)]
     if has_src:
         scratch.append(
-            pltpu.VMEM((bt * r + 1, rows, bx + 2 * bt * r), xp.dtype))
+            pltpu.VMEM((fill + 1, rows, bx + 2 * fill), xp.dtype))
     grid = ((x.shape[0],) if batched else ()) + (nt, true_d + fill)
     out = pl.pallas_call(
         kern,
@@ -533,8 +578,160 @@ def _run_3d(x, spec, plan: BlockPlan, bx, bt, variant, interpret, source,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("spec", "bx", "bt", "variant",
-                                    "interpret", "apply_fn"))
+                   static_argnames=("specs", "bx", "bt", "variant",
+                                    "interpret", "apply_fns"))
+def stencil_call_program(x: jax.Array, specs, *, bx: int, bt: int,
+                         variant: str = "revolving",
+                         interpret: bool = True,
+                         source: jax.Array | None = None, aux=None,
+                         scalars=None, apply_fns=None,
+                         valid_lo=None, valid_hi=None) -> jax.Array:
+    """Run ``bt`` fused program steps of a fused sweep group.
+
+    ``specs`` is the spec tuple of one legal fuse group (see
+    ``core.stencil._can_fuse``); each program step applies every spec
+    once, in order, with each spec's own true-grid boundary re-imposed
+    before its apply (fill-between-sweeps) — bitwise-equal to
+    dispatching the sweeps one at a time. One dispatch consumes a
+    ``bt * sum(radii)`` halo.
+
+    ``aux`` maps the union of all sweeps' declared operand names to
+    same-shape grids (a name declared by several sweeps shares one
+    grid). ``scalars`` is a tuple with one entry per spec: ``None`` or
+    that sweep's ``(bt, n_scalars)`` (or per-problem ``(B, bt,
+    n_scalars)``) values. ``apply_fns``: one plugin per spec (``None``
+    entries default to the matching stencil module's IR apply).
+    ``source`` is the legacy single-spec additive grid.
+
+    ``valid_lo``/``valid_hi``: leading-axis validity interval [lo, hi)
+    — rows (2D) / planes (3D) outside it behave as outside the grid
+    at every fused step (zero or edge-replicate per each spec's
+    boundary). May be traced scalars; defaults to the full extent.
+    Used by ``distributed/halo.py`` to mark ghost halos and shard
+    padding under one SPMD program.
+
+    **Batched execution**: ``x`` of rank ``dims + 1`` is a batch of
+    ``B`` independent problems sharing one program and grid shape,
+    lowered as the outermost Pallas grid dimension (module docstring);
+    every aux operand must then be ``[B, *grid]`` too. Each problem's
+    result is bitwise-identical to its solo run.
+    """
+    specs = tuple(specs)
+    if not specs:
+        raise ValueError("specs must hold at least one StencilSpec")
+    M = len(specs)
+    dims = specs[0].dims
+    if any(sp.dims != dims for sp in specs):
+        raise ValueError("all fused specs must share one dims")
+    if source is not None and M != 1:
+        raise ValueError("legacy `source` is single-spec only; declare "
+                         "source-role aux operands instead")
+    if M > 1 and dims == 3:
+        r0, b0 = specs[0].radius, specs[0].boundary
+        for sp in specs:
+            if (sp.radius != r0 or sp.boundary != b0 or sp.aux
+                    or sp.n_scalars or sp.layout == "custom"):
+                raise ValueError(
+                    "3D fused groups need equal radii, one boundary, "
+                    "star/box layouts and no aux/scalars (see "
+                    "core.stencil._can_fuse)")
+    if x.ndim not in (dims, dims + 1):
+        raise ValueError(
+            f"grid rank {x.ndim} != spec.dims {dims} (or "
+            f"{dims + 1} with a leading batch axis)")
+    batched = x.ndim == dims + 1
+    if batched and x.shape[0] == 0:
+        raise ValueError("batched grid must have at least one problem")
+    halo = bt * sum(sp.radius for sp in specs)
+    if halo > bx:
+        raise ValueError(
+            f"fused halo {halo} (bt={bt} x radii {[sp.radius for sp in specs]}) "
+            f"exceeds the tile width bx={bx}")
+    label = specs[0].name if M == 1 else "+".join(sp.name for sp in specs)
+    aux = dict(aux) if aux else {}
+    declared = []
+    for sp in specs:
+        for op in sp.aux:
+            if op.name not in declared:
+                declared.append(op.name)
+    missing = [n for n in declared if n not in aux]
+    if missing:
+        raise ValueError(f"spec {label!r} requires aux operands "
+                         f"{missing}")
+    extra = [n for n in aux if n not in declared]
+    if extra:
+        raise ValueError(f"unknown aux operands {extra} for spec "
+                         f"{label!r} (declared: {declared})")
+    for n, a in aux.items():
+        if a.shape != x.shape:
+            raise ValueError(f"aux operand {n!r} shape {a.shape} != grid "
+                             f"shape {x.shape}")
+    if scalars is None:
+        scalars = (None,) * M
+    scalars = tuple(scalars)
+    if len(scalars) != M:
+        raise ValueError(f"scalars must hold one entry per spec ({M}), "
+                         f"got {len(scalars)}")
+
+    sources, coeffss, scalarss = [], [], []
+    for m, sp in enumerate(specs):
+        scal = scalars[m]
+        srcs = [aux[op.name] for op in sp.source_operands]
+        if m == 0 and source is not None:
+            srcs.append(source)
+        combined = None
+        if srcs:
+            combined = srcs[0]
+            for s in srcs[1:]:
+                combined = combined + s
+        sources.append(combined)
+        coeffss.append([aux[op.name] for op in sp.coeff_operands])
+        if sp.n_scalars:
+            if scal is None:
+                raise ValueError(f"spec {sp.name!r} requires scalars of "
+                                 f"shape ({bt}, {sp.n_scalars})")
+            scal = jnp.asarray(scal, jnp.float32)
+            if batched:
+                B = x.shape[0]
+                if scal.ndim == 3:
+                    if scal.shape[0] != B:
+                        raise ValueError(
+                            f"scalars batch dim {scal.shape[0]} != grid "
+                            f"batch dim {B}")
+                    scal = scal.reshape(B, bt, sp.n_scalars)
+                else:     # shared across the batch: broadcast per problem
+                    scal = jnp.broadcast_to(
+                        scal.reshape(bt, sp.n_scalars),
+                        (B, bt, sp.n_scalars))
+            else:
+                scal = scal.reshape(bt, sp.n_scalars)
+            scalarss.append(scal)
+        else:
+            if scal is not None:
+                raise ValueError("scalars passed but spec.n_scalars == 0")
+            scalarss.append(None)
+
+    plan = BlockPlan(specs[0], x.shape[-dims:], bx=bx, bt=bt,
+                     itemsize=x.dtype.itemsize)
+    if apply_fns is None:
+        apply_fns = (None,) * M
+    if len(apply_fns) != M:
+        raise ValueError(f"apply_fns must hold one entry per spec ({M}), "
+                         f"got {len(apply_fns)}")
+    if dims == 2:
+        from repro.kernels.stencil2d import _apply_2d
+        apply_fns = tuple(f if f is not None else _apply_2d
+                          for f in apply_fns)
+        return _run_2d(x, specs, plan, bx, bt, variant, interpret,
+                       sources, coeffss, scalarss, apply_fns,
+                       valid_lo, valid_hi)
+    from repro.kernels.stencil3d import _apply_3d
+    apply_fns = tuple(f if f is not None else _apply_3d
+                      for f in apply_fns)
+    return _run_3d(x, specs, plan, bx, bt, variant, interpret, sources,
+                   apply_fns, valid_lo, valid_hi)
+
+
 def stencil_call(x: jax.Array, spec: StencilSpec, *, bx: int, bt: int,
                  variant: str = "revolving", interpret: bool = True,
                  source: jax.Array | None = None, aux=None,
@@ -542,97 +739,19 @@ def stencil_call(x: jax.Array, spec: StencilSpec, *, bx: int, bt: int,
                  apply_fn=None, valid_lo=None, valid_hi=None) -> jax.Array:
     """Run ``bt`` fused time steps of ``spec`` over a 2D or 3D grid.
 
-    ``aux``: dict mapping every operand declared in ``spec.aux`` to a
-    same-shape grid. All source-role operands (plus the legacy
-    ``source`` kwarg, kept for specs that don't declare operands) are
-    summed into one additive grid; each step computes
-    ``g <- update(g) + sources``. Coeff-role operands are windowed,
-    boundary-filled once, and handed to the plugin / custom update.
-    ``scalars``: ``(bt, spec.n_scalars)`` per-step values (custom
-    updates only — SRAD's per-iteration ``q0^2``).
-    ``apply_fn``: the dimension-specific plugin (defaults to the IR
-    apply of the matching stencil module).
-    ``valid_lo``/``valid_hi``: leading-axis validity interval [lo, hi)
-    — rows (2D) / planes (3D) outside it behave as outside the grid
-    at every fused step (zero or edge-replicate per ``spec.boundary``).
-    May be traced scalars; defaults to the full extent. Used by
-    ``distributed/halo.py`` to mark ghost halos and shard padding
-    under one SPMD program.
-
-    **Batched execution**: ``x`` of rank ``spec.dims + 1`` is a batch
-    of ``B`` independent problems sharing one spec and grid shape. The
-    batch lowers as the outermost Pallas grid dimension (module
-    docstring); every aux/source operand must then be ``[B, *grid]``
-    too, and ``scalars`` is either shared ``(bt, n_scalars)`` or
-    per-problem ``(B, bt, n_scalars)``. Each problem's result is
-    bitwise-identical to its solo run. ``valid_lo``/``valid_hi`` keep
-    their meaning — they bound the *grid's* leading axis (rows/planes),
-    which all problems in a batch share.
+    The single-sweep front door — a thin wrapper over
+    :func:`stencil_call_program` with a one-spec group, kept because
+    nearly every call site runs one sweep. All semantics (aux operands,
+    legacy ``source``, per-step ``scalars``, validity interval, batch
+    axis) are documented there; the lowering is bit-identical to the
+    pre-program engine.
     """
-    if x.ndim not in (spec.dims, spec.dims + 1):
-        raise ValueError(
-            f"grid rank {x.ndim} != spec.dims {spec.dims} (or "
-            f"{spec.dims + 1} with a leading batch axis)")
-    batched = x.ndim == spec.dims + 1
-    if batched and x.shape[0] == 0:
-        raise ValueError("batched grid must have at least one problem")
-    aux = dict(aux) if aux else {}
-    names = [op.name for op in spec.aux]
-    missing = [n for n in names if n not in aux]
-    if missing:
-        raise ValueError(f"spec {spec.name!r} requires aux operands "
-                         f"{missing}")
-    extra = [n for n in aux if n not in names]
-    if extra:
-        raise ValueError(f"unknown aux operands {extra} for spec "
-                         f"{spec.name!r} (declared: {names})")
-    for n, a in aux.items():
-        if a.shape != x.shape:
-            raise ValueError(f"aux operand {n!r} shape {a.shape} != grid "
-                             f"shape {x.shape}")
-    srcs = [aux[op.name] for op in spec.source_operands]
-    if source is not None:
-        srcs.append(source)
-    combined_src = None
-    if srcs:
-        combined_src = srcs[0]
-        for s in srcs[1:]:
-            combined_src = combined_src + s
-    coeffs = [aux[op.name] for op in spec.coeff_operands]
-    if spec.n_scalars:
-        if scalars is None:
-            raise ValueError(f"spec {spec.name!r} requires scalars of "
-                             f"shape ({bt}, {spec.n_scalars})")
-        scalars = jnp.asarray(scalars, jnp.float32)
-        if batched:
-            B = x.shape[0]
-            if scalars.ndim == 3:
-                if scalars.shape[0] != B:
-                    raise ValueError(
-                        f"scalars batch dim {scalars.shape[0]} != grid "
-                        f"batch dim {B}")
-                scalars = scalars.reshape(B, bt, spec.n_scalars)
-            else:     # shared across the batch: broadcast per problem
-                scalars = jnp.broadcast_to(
-                    scalars.reshape(bt, spec.n_scalars),
-                    (B, bt, spec.n_scalars))
-        else:
-            scalars = scalars.reshape(bt, spec.n_scalars)
-    elif scalars is not None:
-        raise ValueError("scalars passed but spec.n_scalars == 0")
-
-    plan = BlockPlan(spec, x.shape[-spec.dims:], bx=bx, bt=bt,
-                     itemsize=x.dtype.itemsize)
-    if spec.dims == 2:
-        if apply_fn is None:
-            from repro.kernels.stencil2d import _apply_2d as apply_fn
-        return _run_2d(x, spec, plan, bx, bt, variant, interpret,
-                       combined_src, coeffs, scalars, apply_fn,
-                       valid_lo, valid_hi)
-    if apply_fn is None:
-        from repro.kernels.stencil3d import _apply_3d as apply_fn
-    return _run_3d(x, spec, plan, bx, bt, variant, interpret,
-                   combined_src, apply_fn, valid_lo, valid_hi)
+    return stencil_call_program(
+        x, (spec,), bx=bx, bt=bt, variant=variant, interpret=interpret,
+        source=source, aux=aux,
+        scalars=None if scalars is None else (scalars,),
+        apply_fns=None if apply_fn is None else (apply_fn,),
+        valid_lo=valid_lo, valid_hi=valid_hi)
 
 
 def stencil_call_vmap(x: jax.Array, spec: StencilSpec, *, bx: int, bt: int,

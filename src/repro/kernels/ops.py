@@ -59,6 +59,32 @@ from repro.kernels.stencil2d import stencil2d as _stencil2d
 from repro.kernels.stencil3d import stencil3d as _stencil3d
 
 
+# ---------------------------------------------------------------------------
+# Engine-dispatch accounting. Counts live here (host side), not inside
+# jitted code — a counter in a kernel body would tick at trace time
+# only. One tick per blocked engine dispatch issued by this module:
+# a fused sweep, one fused program group, or one sharded/out-of-core
+# blocked sweep (the out-of-core runner's per-tile fan-out is not
+# counted; fused-vs-looped program comparisons stay apples-to-apples).
+# ---------------------------------------------------------------------------
+
+_DISPATCHES = 0
+
+
+def reset_dispatch_count() -> None:
+    global _DISPATCHES
+    _DISPATCHES = 0
+
+
+def dispatch_count() -> int:
+    return _DISPATCHES
+
+
+def _count_dispatch(n: int = 1) -> None:
+    global _DISPATCHES
+    _DISPATCHES += n
+
+
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
@@ -196,11 +222,13 @@ def stencil_sweep(x: jax.Array, spec: StencilSpec, bx: int | None = None,
     interpret = backend == "interpret"
     if nd > 1:
         from repro.distributed import halo
+        _count_dispatch()
         return halo.stencil_run_sharded(
             x, spec, bt, n_devices=nd, bx=bx, bt=bt, variant=variant,
             interpret=interpret, source=source, aux=aux, scalars=scalars,
             devices=devices, overlap=overlap)
     fn = _stencil2d if spec.dims == 2 else _stencil3d
+    _count_dispatch()
     return fn(x, spec, bx=bx, bt=bt, variant=variant,
               interpret=interpret, source=source, aux=aux, scalars=scalars)
 
@@ -267,6 +295,7 @@ def stencil_run(x: jax.Array, spec: StencilSpec, n_steps: int,
                     f"(docs/outofcore.md tracks the planned "
                     f"composition)")
             from repro.outofcore import stencil_run_outofcore
+            _count_dispatch(-(-n_steps // bt))
             return stencil_run_outofcore(
                 x, spec, n_steps, bx=bx, bt=bt, variant=variant,
                 interpret=backend == "interpret", hbm_budget=budget,
@@ -280,6 +309,8 @@ def stencil_run(x: jax.Array, spec: StencilSpec, n_steps: int,
             scalars = scalars.reshape(n_steps, -1)
     if nd > 1 and backend != "reference":
         from repro.distributed import halo
+        full, rem = divmod(n_steps, bt)
+        _count_dispatch(full + (1 if rem else 0))
         return halo.stencil_run_sharded(
             x, spec, n_steps, n_devices=nd, bx=bx, bt=bt, variant=variant,
             interpret=backend == "interpret", source=source, aux=aux,
@@ -298,6 +329,206 @@ def stencil_run(x: jax.Array, spec: StencilSpec, n_steps: int,
                           scalars=(_tslice(scalars, done, done + rem)
                                    if scalars is not None else None))
     return x
+
+
+def stencil_program_run(x_or_fields, program, n_steps: int, *,
+                        inputs=None, scalars=None,
+                        bx: int | None = None, bt: int | None = None,
+                        backend: str = "auto", variant: str | None = None,
+                        n_devices: int | None = None, devices=None,
+                        overlap: bool = True,
+                        hbm_budget: int | None = None,
+                        fuse: bool = True):
+    """``n_steps`` program steps of a ``StencilProgram``.
+
+    The program analog of ``stencil_run``, with the same backend /
+    batch / ``n_devices`` / ``hbm_budget`` routing. Each program step
+    applies every sweep once, in declaration order; maximal legal fuse
+    groups (``program.fuse_groups()``) run as ONE engine dispatch each,
+    and a program that fuses into a single group additionally uses
+    temporal blocking (``bt`` program steps per dispatch). Multi-group
+    programs dispatch with ``bt=1`` — their groups must alternate every
+    step. ``fuse=False`` forces one dispatch per sweep per step (the
+    benchmark baseline and the bitwise parity gate: both paths are
+    exactly equal).
+
+    ``x_or_fields``: a dict mapping every evolving field name to its
+    grid (missing fields are zero-initialized), or a bare array for
+    single-field programs. The result has the same form. ``inputs``:
+    dict of step-constant program inputs. ``scalars``: dict mapping a
+    sweep name to its ``(n_steps, n_scalars)`` per-step values (or
+    per-problem ``(B, n_steps, n_scalars)`` over a batch).
+
+    One shared autotuned plan covers the whole program: ``bx``/``bt``/
+    ``variant`` resolve through ``autotune.plan`` with the program's
+    cache token as the key head (cache schema v6).
+    """
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.core.stencil import StencilProgram
+
+    if not isinstance(program, StencilProgram):
+        raise TypeError(f"stencil_program_run needs a StencilProgram, "
+                        f"got {type(program).__name__}")
+    bare = not isinstance(x_or_fields, dict)
+    if bare:
+        if program.n_fields != 1:
+            raise ValueError(
+                f"program {program.name!r} evolves fields "
+                f"{list(program.fields)}; pass a dict of grids")
+        fields = {program.fields[0]: x_or_fields}
+    else:
+        fields = dict(x_or_fields)
+    unknown = [f for f in fields if f not in program.fields]
+    if unknown:
+        raise ValueError(f"unknown fields {unknown} for program "
+                         f"{program.name!r} (evolves: "
+                         f"{list(program.fields)})")
+    if not fields:
+        raise ValueError("at least one evolving field must be provided")
+    primary = next(iter(fields.values()))
+    dims = program.dims
+    if primary.ndim not in (dims, dims + 1):
+        raise ValueError(
+            f"field rank {primary.ndim} matches neither program dims "
+            f"{dims} nor {dims + 1} (a [B, *grid] batch)")
+    B = primary.shape[0] if primary.ndim == dims + 1 else None
+    for f in program.fields:
+        if f not in fields:
+            fields[f] = jnp.zeros_like(primary)
+    for n, a in fields.items():
+        if a.shape != primary.shape:
+            raise ValueError(f"field {n!r} shape {a.shape} != "
+                             f"{primary.shape}")
+    inputs = dict(inputs) if inputs else {}
+    missing = [n for n in program.input_names if n not in inputs]
+    if missing:
+        raise ValueError(f"program {program.name!r} requires inputs "
+                         f"{missing}")
+    extra = [n for n in inputs if n not in program.input_names]
+    if extra:
+        raise ValueError(f"unknown inputs {extra} for program "
+                         f"{program.name!r} (declared: "
+                         f"{list(program.input_names)})")
+    for n, a in inputs.items():
+        if a.shape != primary.shape:
+            raise ValueError(f"input {n!r} shape {a.shape} != "
+                             f"{primary.shape}")
+    scalars = dict(scalars) if scalars else {}
+    by_name = {s.name: s for s in program.sweeps}
+    for n in scalars:
+        if n not in by_name:
+            raise ValueError(f"scalars for unknown sweep {n!r} "
+                             f"(sweeps: {list(by_name)})")
+        if not by_name[n].spec.n_scalars:
+            raise ValueError(f"sweep {n!r} takes no scalars")
+    need = [s.name for s in program.sweeps
+            if s.spec.n_scalars and s.name not in scalars]
+    if need:
+        raise ValueError(f"program {program.name!r} requires scalars "
+                         f"for sweeps {need}")
+    norm = {}
+    for n, v in scalars.items():
+        v = jnp.asarray(v, jnp.float32)
+        k = by_name[n].spec.n_scalars
+        if B is not None and v.ndim == 3:
+            v = v.reshape(B, n_steps, k)
+        else:
+            v = v.reshape(n_steps, k)
+        norm[n] = v
+    scalars = norm
+
+    backend = _resolve(backend)
+    if backend == "reference":
+        out = _ref.stencil_program_multistep(
+            fields, program, n_steps, inputs=inputs or None,
+            scalars=scalars or None)
+        return out[program.fields[0]] if bare else out
+
+    nd = 1 if n_devices is None else n_devices
+    if bx is None or bt is None or variant is None:
+        from repro.kernels import autotune
+        tuned = autotune.plan(primary.shape, program, dtype=primary.dtype,
+                              backend=backend, n_steps=n_steps,
+                              n_devices=nd, hbm_budget=hbm_budget)
+        bx = bx if bx is not None else tuned.bx
+        bt = bt if bt is not None else tuned.bt
+        variant = variant if variant is not None else tuned.variant
+    groups = (program.fuse_groups() if fuse
+              else tuple((s,) for s in program.sweeps))
+    if len(groups) > 1:
+        bt = 1       # groups must alternate every program step
+    bt = max(1, min(bt, n_steps) if n_steps else bt)
+    interpret = backend == "interpret"
+
+    from repro.outofcore import route_decision
+    grid = primary.shape[1:] if B is not None else primary.shape
+    routed, budget = route_decision(
+        program.plan_proxy(), grid, primary.dtype.itemsize, hbm_budget,
+        batch=B or 1, n_devices=nd)
+    if routed:
+        if nd > 1:
+            raise NotImplementedError(
+                f"out-of-core program execution (per-device working set "
+                f"of {primary.shape} over {nd} devices exceeds "
+                f"hbm_budget={budget}) cannot yet be combined with "
+                f"sharding (docs/outofcore.md)")
+        # Host-streaming fallback: one out-of-core blocked sweep per
+        # sweep per program step; evolving fields ride as aux operands
+        # and live as host numpy arrays between sweeps.
+        from repro.outofcore import stencil_run_outofcore
+        fields = {n: np.asarray(a) for n, a in fields.items()}
+        for t in range(n_steps):
+            for s in program.sweeps:
+                aux = {op.name: (fields[op.name] if op.name in fields
+                                 else inputs[op.name])
+                       for op in s.spec.aux}
+                scal = None
+                if s.spec.n_scalars:
+                    scal = _tslice(scalars[s.name], t, t + 1)
+                _count_dispatch()
+                fields[s.field] = stencil_run_outofcore(
+                    fields[s.field], s.spec, 1, bx=bx, bt=1,
+                    variant=variant, interpret=interpret,
+                    hbm_budget=budget, aux=aux or None, scalars=scal)
+        return fields[program.fields[0]] if bare else fields
+
+    if nd > 1:
+        from repro.distributed import halo
+        _count_dispatch(sum(-(-n_steps // bt) for _ in groups))
+        out = halo.stencil_program_run_sharded(
+            fields, program, n_steps, n_devices=nd, bx=bx, bt=bt,
+            variant=variant, interpret=interpret, inputs=inputs or None,
+            scalars=scalars or None, devices=devices, overlap=overlap,
+            fuse=fuse)
+        return out[program.fields[0]] if bare else out
+
+    from repro.kernels import engine
+    full, rem = divmod(n_steps, bt)
+    schedule = [bt] * full + ([rem] if rem else [])
+    done = 0
+    for bts in schedule:
+        for group in groups:
+            specs = tuple(s.spec for s in group)
+            fname = group[0].field
+            aux = {}
+            for s in group:
+                for op in s.spec.aux:
+                    aux[op.name] = (fields[op.name]
+                                    if op.name in fields
+                                    else inputs[op.name])
+            scal = tuple(
+                (_tslice(scalars[s.name], done, done + bts)
+                 if s.spec.n_scalars else None)
+                for s in group)
+            _count_dispatch()
+            fields[fname] = engine.stencil_call_program(
+                fields[fname], specs, bx=bx, bt=bts, variant=variant,
+                interpret=interpret, aux=aux or None,
+                scalars=(scal if any(c is not None for c in scal)
+                         else None))
+        done += bts
+    return fields[program.fields[0]] if bare else fields
 
 
 def stencil_auto(x: jax.Array, spec: StencilSpec, n_steps: int,

@@ -125,6 +125,86 @@ def stencil_multistep(x: jax.Array, spec: StencilSpec, n_steps: int,
 
 
 # ---------------------------------------------------------------------------
+# Program oracle: per-sweep composition of stencil_step, in declaration
+# order — the ground truth the fused multi-sweep engine is tested
+# against (see core.stencil.StencilProgram).
+# ---------------------------------------------------------------------------
+
+def stencil_program_step(fields: dict, program, inputs=None,
+                         scalars_t=None) -> dict:
+    """One program step: every sweep once, in declaration order.
+
+    ``fields``: dict mapping every evolving field name to its grid.
+    ``inputs``: dict mapping every step-constant program input to a
+    grid. ``scalars_t``: dict mapping a sweep name to this step's
+    ``(n_scalars,)`` vector (sweeps with custom updates only). Sweep
+    aux names resolve to evolving fields first, then to inputs —
+    exactly the namespace rule of ``StencilProgram``.
+    """
+    fields = dict(fields)
+    inputs = inputs or {}
+    scalars_t = scalars_t or {}
+    for s in program.sweeps:
+        aux = {}
+        for op in s.spec.aux:
+            aux[op.name] = (fields[op.name] if op.name in fields
+                            else inputs[op.name])
+        fields[s.field] = stencil_step(fields[s.field], s.spec,
+                                       aux or None,
+                                       scalars_t.get(s.name))
+    return fields
+
+
+@functools.partial(jax.jit, static_argnames=("program", "n_steps"))
+def stencil_program_multistep(fields: dict, program, n_steps: int,
+                              inputs=None, scalars=None) -> dict:
+    """``n_steps`` program steps (the oracle for fused program runs).
+
+    ``scalars``: dict mapping a sweep name to its ``(n_steps,
+    n_scalars)`` per-step values (or per-problem ``(B, n_steps,
+    n_scalars)`` over a batch). Rank-``dims+1`` fields are a ``[B,
+    *grid]`` batch: the oracle maps itself over the leading axis
+    (inputs batch along with the fields).
+    """
+    missing = [f for f in program.fields if f not in fields]
+    if missing:
+        raise ValueError(f"program {program.name!r} evolves fields "
+                         f"{missing} that were not provided")
+    inputs = dict(inputs) if inputs else None
+    need = [n for n in program.input_names
+            if n not in (inputs or {})]
+    if need:
+        raise ValueError(f"program {program.name!r} requires inputs "
+                         f"{need}")
+    dims = program.dims
+    f0 = fields[program.fields[0]]
+    if f0.ndim == dims + 1:
+        scalars = dict(scalars) if scalars else None
+        per = {k: jnp.ndim(v) == 3 for k, v in (scalars or {}).items()}
+
+        def one(fs, ins, scs):
+            return stencil_program_multistep(fs, program, n_steps, ins,
+                                             scs)
+
+        in_axes = ({k: 0 for k in fields},
+                   None if inputs is None else {k: 0 for k in inputs},
+                   None if scalars is None else
+                   {k: (0 if per[k] else None) for k in scalars})
+        return jax.vmap(one, in_axes=in_axes)(fields, inputs, scalars)
+
+    if scalars:
+        scalars = {k: jnp.asarray(v, jnp.float32).reshape(n_steps, -1)
+                   for k, v in scalars.items()}
+
+    def body(t, fs):
+        sc_t = ({k: v[t] for k, v in scalars.items()}
+                if scalars else None)
+        return stencil_program_step(fs, program, inputs, sc_t)
+
+    return jax.lax.fori_loop(0, n_steps, body, dict(fields))
+
+
+# ---------------------------------------------------------------------------
 # Oracle for the streaming-attention kernel (kernels/flash_attention.py).
 # ---------------------------------------------------------------------------
 

@@ -52,7 +52,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.stencil import StencilSpec
+from repro.core.stencil import StencilProgram, StencilSpec
 from repro.kernels import ops
 
 
@@ -66,14 +66,21 @@ def bucket_size(n: int, max_batch: int = 8) -> int:
 
 @dataclasses.dataclass
 class StencilRequest:
-    """One client problem: ``n_steps`` of ``spec`` over grid ``x``."""
+    """One client problem: ``n_steps`` of ``spec`` over grid ``x``.
+
+    Exactly one of ``spec`` / ``program`` must be set. A ``program``
+    request runs a whole ``StencilProgram`` (single evolving field,
+    no per-sweep scalars); its ``aux`` dict supplies the program's
+    step-constant inputs.
+    """
 
     uid: int
     x: jax.Array
-    spec: StencilSpec
-    n_steps: int
+    spec: Optional[StencilSpec] = None
+    n_steps: int = 1
     aux: Optional[Dict[str, jax.Array]] = None
     scalars: Optional[jax.Array] = None      # (n_steps, spec.n_scalars)
+    program: Optional[StencilProgram] = None
 
 
 @dataclasses.dataclass
@@ -136,10 +143,29 @@ class StencilService:
 
     # ------------------------------------------------------------------
     def submit(self, req: StencilRequest) -> None:
-        if req.x.ndim != req.spec.dims:
+        if (req.spec is None) == (req.program is None):
             raise ValueError(
-                f"request {req.uid}: grid rank {req.x.ndim} != spec.dims "
-                f"{req.spec.dims} (submit single problems; the service "
+                f"request {req.uid}: set exactly one of spec / program")
+        if req.program is not None:
+            if req.program.n_fields != 1:
+                raise ValueError(
+                    f"request {req.uid}: program {req.program.name!r} "
+                    f"evolves {req.program.n_fields} fields; the service "
+                    f"batches single-field programs only")
+            if req.program.n_scalars:
+                raise ValueError(
+                    f"request {req.uid}: program {req.program.name!r} "
+                    f"takes per-sweep scalars, which the service does "
+                    f"not batch yet")
+            if req.scalars is not None:
+                raise ValueError(
+                    f"request {req.uid}: program requests pass no "
+                    f"request-level scalars")
+        dims = (req.program or req.spec).dims
+        if req.x.ndim != dims:
+            raise ValueError(
+                f"request {req.uid}: grid rank {req.x.ndim} != dims "
+                f"{dims} (submit single problems; the service "
                 f"does the batching)")
         self._queue.append(req)
 
@@ -159,7 +185,11 @@ class StencilService:
         dtype = getattr(r.x, "dtype", None)
         if dtype is None:
             dtype = np.asarray(r.x).dtype
-        return (r.spec, tuple(np.shape(r.x)), str(dtype), int(r.n_steps),
+        # The leading element is the whole program (or spec): two
+        # programs that differ in ANY sweep hash differently, so they
+        # can never share a bucket even on identical grids/dtypes.
+        work = r.program if r.program is not None else r.spec
+        return (work, tuple(np.shape(r.x)), str(dtype), int(r.n_steps),
                 aux_sig, scal_sig)
 
     def _dispatcher(self, key, bucket: int):
@@ -170,11 +200,12 @@ class StencilService:
         fn = self._dispatchers.get((key, bucket))
         if fn is not None:
             return fn
-        spec, shape, dtype, n_steps, aux_names, scal_sig = key
+        work, shape, dtype, n_steps, aux_names, scal_sig = key
+        program = work if isinstance(work, StencilProgram) else None
         bx, bt, variant = self._blocking
         if bx is None or bt is None:
             from repro.kernels import autotune
-            tuned = autotune.plan((bucket,) + shape, spec, dtype=dtype,
+            tuned = autotune.plan((bucket,) + shape, work, dtype=dtype,
                                   backend=self.backend, n_steps=n_steps,
                                   hbm_budget=self.hbm_budget)
             bx = bx if bx is not None else tuned.bx
@@ -182,7 +213,12 @@ class StencilService:
             variant = variant if variant is not None else tuned.variant
 
         def call(xb, aux_b, scal_b):
-            return ops.stencil_run(xb, spec, n_steps, bx=bx, bt=bt,
+            if program is not None:
+                return ops.stencil_program_run(
+                    xb, program, n_steps, bx=bx, bt=bt,
+                    backend=self.backend, variant=variant,
+                    inputs=aux_b or None, hbm_budget=self.hbm_budget)
+            return ops.stencil_run(xb, work, n_steps, bx=bx, bt=bt,
                                    backend=self.backend, variant=variant,
                                    aux=aux_b or None, scalars=scal_b,
                                    hbm_budget=self.hbm_budget)
@@ -191,8 +227,9 @@ class StencilService:
         # here could jit an "in-core" dispatcher whose traced run then
         # decides out-of-core and crashes converting a tracer to numpy).
         from repro.outofcore import route_decision
-        routed, _ = route_decision(spec, shape, np.dtype(dtype).itemsize,
-                                   self.hbm_budget, batch=bucket)
+        routed, _ = route_decision(
+            work if program is None else program.plan_proxy(), shape,
+            np.dtype(dtype).itemsize, self.hbm_budget, batch=bucket)
         if self.backend != "reference" and routed:
             # Oversized bucket: ops.stencil_run auto-routes it through
             # the out-of-core runner. The call stays un-jitted (its
@@ -271,10 +308,16 @@ class StencilService:
                 res = out[j]
                 if self.check:
                     bx, bt, variant = self._resolved[(key, bucket)]
-                    solo = ops.stencil_run(
-                        jnp.asarray(r.x), r.spec, r.n_steps, bx=bx,
-                        bt=bt, variant=variant, backend=self.backend,
-                        aux=r.aux, scalars=r.scalars)
+                    if r.program is not None:
+                        solo = ops.stencil_program_run(
+                            jnp.asarray(r.x), r.program, r.n_steps,
+                            bx=bx, bt=bt, variant=variant,
+                            backend=self.backend, inputs=r.aux)
+                    else:
+                        solo = ops.stencil_run(
+                            jnp.asarray(r.x), r.spec, r.n_steps, bx=bx,
+                            bt=bt, variant=variant, backend=self.backend,
+                            aux=r.aux, scalars=r.scalars)
                     np.testing.assert_array_equal(
                         np.asarray(res), np.asarray(solo),
                         err_msg=f"served result for request {r.uid} "
