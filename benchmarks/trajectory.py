@@ -1,0 +1,244 @@
+"""Collapse every suite's ``BENCH_*.json`` into the committed perf
+trajectory (``perf/trajectory.json``) — the measurement spine the CI
+perf gate (``tools/perf_gate.py``) checks against.
+
+Every benchmark suite already writes a machine-readable record
+(``BENCH_stencil.json``, ``BENCH_serving.json``, ``BENCH_outofcore
+.json``, ``BENCH_solvers.json``). Those files are per-run and
+disposable; this module distills them into one **append-only**
+committed history, so "did PR N make the stencil suite slower?" is
+answerable from the repo itself:
+
+  * each trajectory **entry** is one labeled measurement epoch
+    (typically one PR), holding every tracked metric;
+  * each **metric** is ``{suite}/{row-name}/{field}`` with a kind —
+    ``time`` (lower is better: ``us_per_call``), ``rate`` (higher is
+    better: ``gcells_per_s``, ``requests_per_s``, ``host_gb_per_s``)
+    or ``count`` (deterministic, lower is better: ``dispatches``);
+  * re-running with the same ``--label`` appends a **sample** to the
+    open entry instead of a new entry — the per-metric spread of those
+    repeated runs IS the noise band the gate allows timing metrics to
+    wander inside (counts are exact and carry no band);
+  * each entry also records the per-suite headline: best GCell/s and
+    the modeled roofline of the row that achieved it, when the suite
+    computes one.
+
+Usage::
+
+    python -m benchmarks.trajectory --label pr7            # append
+    python -m benchmarks.trajectory --label pr7            # 2nd sample
+    python -m benchmarks.trajectory --show                 # inspect
+
+Entries are never rewritten (append-only): a new label closes the
+previous entry. The gate compares fresh BENCH files against the LAST
+entry only; older entries are the history.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+TRAJECTORY_VERSION = 1
+
+# BENCH row fields that become tracked metrics, by kind. ``time`` and
+# ``rate`` get a noise band; ``count`` metrics are deterministic
+# engine-dispatch accounting and are gated exactly.
+TIME_FIELDS = ("us_per_call", "us")
+RATE_FIELDS = ("gcells_per_s", "requests_per_s", "host_gb_per_s")
+COUNT_FIELDS = ("dispatches",)
+
+# A single sample can't measure its own spread; until a second run
+# lands, timing metrics carry this relative band (counts carry 0).
+DEFAULT_NOISE = 0.10
+
+
+def _suite_of(payload: dict, row: dict) -> str:
+    if "suite" in row and row["suite"]:
+        return row["suite"]
+    gen = payload.get("generated_by", "unknown")
+    return gen.split(".")[-1]       # "benchmarks.serving" -> "serving"
+
+
+def extract_metrics(payload: dict) -> dict:
+    """``{suite}/{row-name}/{field}`` -> {"value", "kind"} for every
+    tracked field present in this BENCH payload's rows."""
+    out: dict = {}
+    for row in payload.get("rows", ()):
+        suite = _suite_of(payload, row)
+        name = row.get("name", "?")
+        for field, kind in (
+                [(f, "time") for f in TIME_FIELDS]
+                + [(f, "rate") for f in RATE_FIELDS]
+                + [(f, "count") for f in COUNT_FIELDS]):
+            v = row.get(field)
+            if v is None:
+                continue
+            # "us" and "us_per_call" are the same quantity under two
+            # suite schemas; normalize on one metric name.
+            mfield = "us_per_call" if field == "us" else field
+            out[f"{suite}/{name}/{mfield}"] = {
+                "value": float(v), "kind": kind}
+    return out
+
+
+def collect(bench_dir: str) -> dict:
+    """Union of tracked metrics across every BENCH_*.json in a dir."""
+    metrics: dict = {}
+    for path in sorted(glob.glob(os.path.join(bench_dir,
+                                              "BENCH_*.json"))):
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+        except (OSError, ValueError) as e:
+            print(f"# skipping unreadable {path}: {e}", file=sys.stderr)
+            continue
+        metrics.update(extract_metrics(payload))
+    return metrics
+
+
+def _suite_headlines(metrics: dict, bench_dir: str) -> dict:
+    """Per-suite best GCell/s (+ that row's modeled roofline when the
+    suite recorded one) — the entry's human-readable summary."""
+    best: dict = {}
+    for key, m in metrics.items():
+        suite, name, field = key.rsplit("/", 2)
+        if field != "gcells_per_s":
+            continue
+        cur = best.get(suite)
+        if cur is None or m["value"] > cur["best_gcells_per_s"]:
+            best[suite] = {"best_gcells_per_s": m["value"],
+                           "best_row": name, "roofline": None}
+    # Attach the winning row's roofline, if its suite recorded one.
+    for path in sorted(glob.glob(os.path.join(bench_dir,
+                                              "BENCH_*.json"))):
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+        except (OSError, ValueError):
+            continue
+        for row in payload.get("rows", ()):
+            suite = _suite_of(payload, row)
+            h = best.get(suite)
+            if (h is not None and row.get("name") == h["best_row"]
+                    and row.get("roofline") is not None):
+                h["roofline"] = row["roofline"]
+    return best
+
+
+def noise_band(samples: list, kind: str) -> float:
+    """Relative half-spread of repeated samples: the band a future
+    measurement may wander inside without counting as a regression.
+    Counts are deterministic — any drift is a real change."""
+    if kind == "count":
+        return 0.0
+    vals = [s for s in samples if s]
+    if len(vals) < 2:
+        return DEFAULT_NOISE
+    mean = sum(vals) / len(vals)
+    if mean == 0:
+        return DEFAULT_NOISE
+    return max((max(vals) - min(vals)) / abs(mean), DEFAULT_NOISE)
+
+
+def load_trajectory(path: str) -> dict:
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except OSError:
+        return {"version": TRAJECTORY_VERSION, "entries": []}
+    if (not isinstance(data, dict)
+            or data.get("version") != TRAJECTORY_VERSION):
+        raise SystemExit(
+            f"{path}: expected a version {TRAJECTORY_VERSION} "
+            f"trajectory object, found "
+            f"{data.get('version') if isinstance(data, dict) else data!r}")
+    return data
+
+
+def append(trajectory: dict, metrics: dict, headlines: dict,
+           label: str) -> dict:
+    """Append-only merge: same label as the open (last) entry -> one
+    more sample per metric (noise bands re-derive); new label -> new
+    entry. Prior entries are never touched."""
+    entries = trajectory["entries"]
+    if entries and entries[-1]["label"] == label:
+        entry = entries[-1]
+    else:
+        entry = {"label": label, "metrics": {}, "suites": {}}
+        entries.append(entry)
+    for key, m in metrics.items():
+        slot = entry["metrics"].setdefault(
+            key, {"kind": m["kind"], "samples": []})
+        slot["samples"].append(m["value"])
+        # The representative value: a count must be exact (samples
+        # agree or the gate should trip), timing takes the best —
+        # machine noise only ever adds time.
+        if m["kind"] == "count":
+            slot["value"] = m["value"]
+        elif m["kind"] == "time":
+            slot["value"] = min(slot["samples"])
+        else:
+            slot["value"] = max(slot["samples"])
+        slot["noise"] = noise_band(slot["samples"], m["kind"])
+    entry["suites"] = headlines
+    return trajectory
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="fold BENCH_*.json into the committed perf "
+                    "trajectory")
+    ap.add_argument("--bench-dir", default=".",
+                    help="directory holding BENCH_*.json "
+                         "(default: %(default)s)")
+    ap.add_argument("--out", default="perf/trajectory.json",
+                    help="trajectory path (default: %(default)s)")
+    ap.add_argument("--label", default=None,
+                    help="entry label (e.g. pr7); required to append")
+    ap.add_argument("--show", action="store_true",
+                    help="print the latest entry and exit")
+    args = ap.parse_args(argv)
+
+    trajectory = load_trajectory(args.out)
+    if args.show:
+        if not trajectory["entries"]:
+            print("trajectory is empty")
+            return
+        last = trajectory["entries"][-1]
+        print(f"entry {last['label']!r}: "
+              f"{len(last['metrics'])} tracked metrics")
+        for suite, h in sorted(last["suites"].items()):
+            print(f"  {suite}: {h['best_gcells_per_s']:.3f} GCell/s "
+                  f"({h['best_row']})")
+        for key in sorted(last["metrics"]):
+            m = last["metrics"][key]
+            print(f"  {key}: {m['value']:.6g} [{m['kind']}, "
+                  f"noise={m['noise']:.2f}, "
+                  f"n={len(m['samples'])}]")
+        return
+    if args.label is None:
+        ap.error("--label is required to append (or pass --show)")
+
+    metrics = collect(args.bench_dir)
+    if not metrics:
+        raise SystemExit(
+            f"no tracked metrics found in {args.bench_dir}/BENCH_*"
+            f".json — run the benchmark suites first")
+    headlines = _suite_headlines(metrics, args.bench_dir)
+    append(trajectory, metrics, headlines, args.label)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(trajectory, f, indent=1, sort_keys=True)
+        f.write("\n")
+    n = len(trajectory["entries"][-1]["metrics"])
+    k = max(len(m["samples"])
+            for m in trajectory["entries"][-1]["metrics"].values())
+    print(f"# {args.out}: entry {args.label!r} now tracks {n} metrics "
+          f"({k} sample{'s' * (k != 1)})", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -14,7 +14,13 @@ jax 0.4.3x through current; known drift handled:
     does not know (e.g. ``dimension_semantics`` spelling changes);
   * ``shard_map``: ``jax.experimental.shard_map.shard_map`` (0.4.x) vs
     public ``jax.shard_map`` (0.5+), including the ``check_rep`` ->
-    ``check_vma`` keyword rename, via :func:`shard_map`.
+    ``check_vma`` keyword rename, via :func:`shard_map`;
+  * the Pallas GPU (Triton) lowering: ``pallas.triton`` (new) vs
+    ``pallas.gpu`` (0.4.x) vs absent (CPU-only builds), re-exported as
+    ``pltriton`` (``None`` when absent) with
+    :func:`gpu_compiler_params` / :func:`compiler_params_for` /
+    :func:`available_backends` as the backend-portability surface the
+    engine builds on (docs/portability.md).
 
 Keep this module dependency-light: importing it must never require a
 TPU, and must stay side-effect free.
@@ -34,8 +40,24 @@ import jax
 from jax.experimental import pallas as pl                   # noqa: F401
 from jax.experimental.pallas import tpu as pltpu            # noqa: F401
 
-__all__ = ["pl", "pltpu", "jax_version", "tpu_compiler_params",
-           "shard_map", "axis_size"]
+# The GPU (Triton) lowering has moved homes across releases —
+# ``jax.experimental.pallas.triton`` (new) vs ``.gpu`` (0.4.x) — and
+# may be absent entirely (CPU-only builds). Resolved here once, like
+# everything else; ``None`` means "no GPU pallas in this install" and
+# every GPU-backend entry point degrades to a loud, catchable error
+# rather than an import crash (docs/portability.md).
+try:
+    from jax.experimental.pallas import triton as pltriton  # noqa: F401
+except ImportError:                                # pragma: no cover
+    try:
+        from jax.experimental.pallas import gpu as pltriton  # noqa: F401
+    except ImportError:
+        pltriton = None
+
+__all__ = ["pl", "pltpu", "pltriton", "jax_version",
+           "tpu_compiler_params", "gpu_compiler_params",
+           "compiler_params_for", "has_gpu_pallas", "platform",
+           "available_backends", "shard_map", "axis_size"]
 
 
 def jax_version() -> tuple[int, ...]:
@@ -63,12 +85,84 @@ def tpu_compiler_params(**kwargs: Any):
     caller can request e.g. ``dimension_semantics`` uniformly and still
     run on a jax whose params class predates/renamed that field.
     """
-    cls = _compiler_params_cls()
+    return _filtered_construct(_compiler_params_cls(), kwargs)
+
+
+def _filtered_construct(cls, kwargs):
+    """Instantiate a compiler-params class, dropping unknown kwargs."""
     if dataclasses.is_dataclass(cls):
         known = {f.name for f in dataclasses.fields(cls)}
     else:  # pragma: no cover - non-dataclass future versions
         known = set(inspect.signature(cls).parameters)
     return cls(**{k: v for k, v in kwargs.items() if k in known})
+
+
+def gpu_compiler_params(**kwargs: Any):
+    """Construct the Triton compiler-params object, whatever its name.
+
+    Mirrors :func:`tpu_compiler_params`: unknown keywords are dropped so
+    callers can request e.g. ``num_warps`` / ``num_stages`` uniformly.
+    Raises ``ImportError`` when this jax has no GPU pallas at all.
+    """
+    if pltriton is None:
+        raise ImportError(
+            "this jax install has no Pallas GPU (Triton) lowering; "
+            "the 'gpu' engine backend is unavailable "
+            "(see docs/portability.md)")
+    for name in ("CompilerParams", "TritonCompilerParams",
+                 "GPUCompilerParams"):
+        cls = getattr(pltriton, name, None)
+        if cls is not None:
+            return _filtered_construct(cls, kwargs)
+    return None   # pragma: no cover - very old pallas.gpu: params-free
+
+
+def compiler_params_for(backend: str, n_grid: int = 1):
+    """Platform-appropriate ``pallas_call`` compiler params.
+
+    ``backend`` is a *resolved* engine backend (``kernels.ops``
+    dispatch): ``pallas``/``interpret`` get the TPU params (interpret
+    mode ignores them, but keeping one object per family means the
+    interpreted kernel traces exactly what the compiled one would);
+    ``gpu`` gets the Triton params. ``n_grid`` is the pallas grid rank
+    — TPU marks every dimension "arbitrary" (sequential semantics the
+    revolving/streaming kernels rely on), which has no Triton analog:
+    GPU grid dimensions are parallel, which is exactly why the engine
+    restricts the GPU backend to scratch-free variants.
+    """
+    if backend == "gpu":
+        return gpu_compiler_params()
+    return tpu_compiler_params(
+        dimension_semantics=("arbitrary",) * n_grid)
+
+
+def has_gpu_pallas() -> bool:
+    """Whether this jax install ships a Pallas GPU (Triton) lowering."""
+    return pltriton is not None
+
+
+def platform() -> str:
+    """The host's default jax platform: "cpu" | "gpu" | "tpu"."""
+    return jax.default_backend()
+
+
+def available_backends() -> tuple[str, ...]:
+    """Engine backends runnable on THIS host, ground truth first.
+
+    ``interpret`` (the Pallas interpreter on CPU — the oracle every
+    other backend is differential-tested against) and ``reference``
+    (the jit-compiled jnp oracle) are always available; ``pallas``
+    joins on a TPU host, ``gpu`` on a GPU host whose jax ships the
+    Triton lowering. ``tests/test_backends.py`` runs its matrix over
+    exactly this list.
+    """
+    out = ["interpret", "reference"]
+    plat = platform()
+    if plat == "tpu":
+        out.append("pallas")
+    elif plat == "gpu" and has_gpu_pallas():
+        out.append("gpu")
+    return tuple(out)
 
 
 def axis_size(axis_name) -> int:

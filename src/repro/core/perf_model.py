@@ -58,6 +58,59 @@ V5P_PROJECTION = TpuSpec(name="tpu-v5p-projection",
                          vmem_bytes=128 * 2 ** 20, hbm_bytes=95 * 2 ** 30,
                          tdp_watts=350.0)
 
+# ---------------------------------------------------------------------------
+# Per-backend device specs (the portability study's "one source, many
+# backends, continuously measured"). The same TpuSpec-shaped constants
+# describe whichever device an engine backend runs on; the autotuner
+# keys its cache on the spec's name, so a plan tuned against one
+# device's ratios can never be misread as another's (cache schema v7,
+# docs/portability.md).
+# ---------------------------------------------------------------------------
+
+# Server-class x86 host: the interpret/reference backends' device. The
+# compute/bandwidth ratios are what matter to the model prior (AVX-class
+# vector FLOPs vs DDR bandwidth); vmem_bytes models the L2/L3 working
+# set a blocked tile should stay inside, and hbm_bytes deliberately
+# matches V5E's 16 GiB so the *default* in-core/out-of-core routing
+# threshold (outofcore.route_decision) is one number everywhere.
+CPU_HOST = TpuSpec(name="cpu-host",
+                   peak_flops_bf16=2e12, peak_flops_f32=1e12,
+                   vpu_flops_f32=0.5e12, hbm_bw=100e9,
+                   ici_bw=25e9, ici_links=1,
+                   vmem_bytes=96 * 2 ** 20, hbm_bytes=16 * 2 ** 30,
+                   tdp_watts=250.0, dispatch_overhead_s=20e-6,
+                   host_bw=100e9)   # "host streaming" is a memcpy here
+
+# A100-class part for the Pallas/Triton GPU lowering (where present).
+# Stencils are CUDA-core (not tensor-core) work, mirroring the VPU
+# reasoning on TPU; vmem_bytes models the L2 + SMEM budget a block
+# plan should fit.
+GPU_GENERIC = TpuSpec(name="gpu-a100-class",
+                      peak_flops_bf16=312e12, peak_flops_f32=19.5e12,
+                      vpu_flops_f32=19.5e12, hbm_bw=1555e9,
+                      ici_bw=300e9, ici_links=1,
+                      vmem_bytes=40 * 2 ** 20, hbm_bytes=40 * 2 ** 30,
+                      tdp_watts=400.0, dispatch_overhead_s=8e-6,
+                      host_bw=25e9)
+
+# Engine-backend name (kernels/ops.py dispatch) -> device spec.
+DEVICE_SPECS = {
+    "pallas": V5E,
+    "interpret": CPU_HOST,
+    "reference": CPU_HOST,
+    "gpu": GPU_GENERIC,
+}
+
+
+def device_spec_for(backend: str) -> TpuSpec:
+    """The device spec a resolved engine backend runs against.
+
+    Unknown backends fall back to V5E (the historical default) rather
+    than raising — the model prior degrades gracefully; the cache key
+    still records whichever spec name was actually used.
+    """
+    return DEVICE_SPECS.get(backend, V5E)
+
 
 @dataclasses.dataclass(frozen=True)
 class RooflineTerms:

@@ -45,22 +45,27 @@ import jax.numpy as jnp
 
 from repro.core.blocking import (BlockPlan, TilePlan,
                                  incore_resident_bytes, plan_tiles)
-from repro.core.perf_model import (TpuSpec, V5E, outofcore_roofline,
-                                   select_config)
+from repro.core.perf_model import (TpuSpec, V5E, device_spec_for,
+                                   outofcore_roofline, select_config)
 from repro.core.stencil import StencilSpec
 
 _LOG = logging.getLogger("repro.autotune")
 
-_CACHE_VERSION = 6   # v6: multi-sweep StencilPrograms join the key
-# space — a program entry's head is ``program.cache_token()`` (every
-# sweep's name/field/spec fields), so two programs over identical grids
-# can never share a winner. v5 grew the HBM budget (|hb{n}) and
-# winners may carry an out-of-core tile size ("tile"); v4 added the
-# batch size (|B{n}), v3 the IR fields (boundary, tap layout,
-# aux-operand signature, n_scalars), v2 |nd{n_devices}. A version
-# mismatch drops the whole file (with a logged found-vs-expected
-# notice) — a v5 entry must never be *misread* as an answer for a
-# program (nor a v4 one for a budget-constrained problem).
+_CACHE_VERSION = 7   # v7: the device spec defaults per *backend*
+# (``perf_model.device_spec_for``: pallas→V5E, interpret/reference→
+# CPU_HOST, gpu→GPU_GENERIC) instead of V5E everywhere, so the spec
+# name the key carries — and the ranking behind each winner — changed
+# for every non-pallas entry. v6: multi-sweep StencilPrograms join the
+# key space — a program entry's head is ``program.cache_token()``
+# (every sweep's name/field/spec fields), so two programs over
+# identical grids can never share a winner. v5 grew the HBM budget
+# (|hb{n}) and winners may carry an out-of-core tile size ("tile");
+# v4 added the batch size (|B{n}), v3 the IR fields (boundary, tap
+# layout, aux-operand signature, n_scalars), v2 |nd{n_devices}. A
+# version mismatch drops the whole file (with a logged
+# found-vs-expected notice) — a v6 entry must never be *misread* as an
+# answer ranked under the wrong device model (nor a v5 one for a
+# program).
 # Grids above this cell count are never timed on the host — the model
 # prior picks alone (measuring a 8192^2 interpret-mode sweep on CPU
 # would dwarf the run it is meant to speed up).
@@ -111,7 +116,26 @@ def _load_cache() -> dict:
     try:
         with open(path) as f:
             data = json.load(f)
-    except (OSError, ValueError):
+    except OSError:
+        data = {}                    # no cache file yet: a normal miss
+    except ValueError as e:
+        # A truncated write, editor mishap, or plain garbage must not
+        # crash planning — the cache is an accelerator, never a
+        # dependency. Same found-vs-expected discipline as the version
+        # mismatch below: say what was found and what happens next.
+        _LOG.warning(
+            "autotune cache %s is not valid JSON (%s); found corrupt "
+            "bytes where version %s entries were expected — ignoring "
+            "the file, all plans re-tune on demand (benchmarks/run.py "
+            "--retune forces a full re-search; see docs/autotuning.md)",
+            path, e, _CACHE_VERSION)
+        data = {}
+    if not isinstance(data, dict):
+        _LOG.warning(
+            "autotune cache %s holds a JSON %s but this build expects "
+            "a version %s object of winners; ignoring the file, all "
+            "plans re-tune on demand (see docs/autotuning.md)",
+            path, type(data).__name__, _CACHE_VERSION)
         data = {}
     if data and data.get("version") != _CACHE_VERSION:
         # Name both versions so "why did everything re-tune?" is
@@ -124,6 +148,21 @@ def _load_cache() -> dict:
             "a full re-search; see docs/autotuning.md)",
             path, data.get("version"), _CACHE_VERSION)
         data = {}
+    # Entry-level hardening: a hand-edited file can hold the right
+    # version yet malformed winners; dropping just those keeps every
+    # intact entry serving.
+    bad = [k for k, v in data.items()
+           if k != "version" and not (isinstance(v, dict)
+                                      and {"bx", "bt", "variant"}
+                                      <= set(v))]
+    if bad:
+        _LOG.warning(
+            "autotune cache %s: dropping %d malformed entr%s (expected "
+            "{bx, bt, variant} objects): %s — the rest of the cache "
+            "still serves; dropped keys re-tune on demand",
+            path, len(bad), "y" if len(bad) == 1 else "ies", bad)
+        for k in bad:
+            del data[k]
     _MEM[path] = data
     return data
 
@@ -259,7 +298,7 @@ def _measure(x, spec, plans, variants, backend, timer,
 def plan(shape, spec, *, dtype="float32",
          backend: str = "auto", n_steps: int = 16, top_k: int = 3,
          measure: bool | None = None, use_cache: bool = True,
-         vmem_budget: int | None = None, tpu: TpuSpec = V5E,
+         vmem_budget: int | None = None, tpu: TpuSpec | None = None,
          n_devices: int = 1, hbm_budget: int | None = None,
          extra_streams: int = 0,
          timer: Callable[[], float] = time.perf_counter) -> TunedPlan:
@@ -325,6 +364,12 @@ def plan(shape, spec, *, dtype="float32",
     grid = shape[1:] if batch is not None else shape
     dtype = str(jnp.dtype(dtype).name)
     backend = ops.resolve_backend(backend)
+    if tpu is None:
+        # Per-backend device model (perf_model.DEVICE_SPECS): ranking
+        # ratios — and the spec name inside the cache key — now match
+        # the device the backend actually runs on. An explicit tpu=
+        # still overrides, for what-if planning.
+        tpu = device_spec_for(backend)
     budget = vmem_budget if vmem_budget is not None else tpu.vmem_bytes
     itemsize = jnp.dtype(dtype).itemsize
     hbm = hbm_budget if hbm_budget is not None else tpu.hbm_bytes
@@ -337,12 +382,12 @@ def plan(shape, spec, *, dtype="float32",
     if outofcore and n_devices > 1:
         # Measuring would dispatch stencil_run, which raises this same
         # error per candidate — every one would silently leave the
-        # race and an unusable "winner" would come back. Fail first.
-        raise NotImplementedError(
-            f"out-of-core tiling (per-device working set of {shape} "
-            f"over {n_devices} devices exceeds hbm_budget={hbm}) "
-            f"cannot yet be combined with sharding; see "
-            f"docs/outofcore.md")
+        # race and an unusable "winner" would come back. Fail first,
+        # with the one shared message (outofcore.sharded_outofcore_
+        # error) the execution paths raise, so the remedy reads the
+        # same wherever the combination is hit.
+        from repro.outofcore import sharded_outofcore_error
+        raise sharded_outofcore_error(shape, n_devices, hbm)
     # Keyed on the *effective* budget: plan(hbm_budget=None) and
     # plan(hbm_budget=tpu.hbm_bytes) are the same problem and must hit
     # the same entry — and an entry's meaning must not silently shift

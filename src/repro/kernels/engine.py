@@ -75,7 +75,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.compat import pl, pltpu, tpu_compiler_params
+from repro import compat
+from repro.compat import pl, pltpu
 from repro.core.blocking import BlockPlan
 from repro.core.stencil import StencilSpec
 
@@ -83,8 +84,33 @@ VARIANTS_2D = ("revolving", "multioperand")
 VARIANTS_3D = ("revolving",)   # one streaming kernel; see module docstring
 
 
-def variants_for(dims: int) -> tuple[str, ...]:
+def variants_for(dims: int, backend: str | None = None) -> tuple[str, ...]:
+    """Kernel variants legal for ``dims`` on ``backend`` (None: TPU).
+
+    The GPU (Triton) lowering has no sequential-grid semantics and no
+    persistent cross-block scratch, so everything built on them is off
+    the table there: the 2D ``revolving`` variant (its shift-register
+    scratch survives across x-tiles) and the whole 3D streaming kernel
+    (a z pipeline threaded through a rolling scratch window). 2D keeps
+    ``multioperand`` — scratch-free, every block independent — which is
+    exactly the portability tradeoff docs/portability.md tabulates.
+    """
+    if backend == "gpu":
+        return ("multioperand",) if dims == 2 else ()
     return VARIANTS_2D if dims == 2 else VARIANTS_3D
+
+
+def _resolve_engine_backend(backend: str | None, interpret: bool) -> str:
+    """Backward-compatible backend resolution: callers that predate the
+    multi-backend engine pass only ``interpret``."""
+    if backend is None:
+        return "interpret" if interpret else "pallas"
+    if backend not in ("interpret", "pallas", "gpu"):
+        raise ValueError(
+            f"unknown engine backend {backend!r}; expected one of "
+            f"('interpret', 'pallas', 'gpu') — 'reference' and 'auto' "
+            f"resolve in kernels.ops, not here")
+    return backend
 
 
 # ---------------------------------------------------------------------------
@@ -424,8 +450,9 @@ def _limits(lo, hi, true_n: int) -> jax.Array:
                       jnp.asarray(hi, jnp.int32)]).reshape(1, 2)
 
 
-def _run_2d(x, specs, plan: BlockPlan, bx, bt, variant, interpret, sources,
+def _run_2d(x, specs, plan: BlockPlan, bx, bt, variant, backend, sources,
             coeffss, scalarss, apply_fns, valid_lo, valid_hi):
+    interpret = backend == "interpret"
     batched = x.ndim == 3
     true_h, true_w = x.shape[-2:]
     hp, wp = plan.padded_rows, plan.padded_width
@@ -465,8 +492,7 @@ def _run_2d(x, specs, plan: BlockPlan, bx, bt, variant, interpret, sources,
             head_specs.append(pl.BlockSpec(scal.shape,
                                            lambda *_: (0, 0)))
         head_args.append(scal)
-    params = tpu_compiler_params(
-        dimension_semantics=("arbitrary",) * (2 if batched else 1))
+    params = compat.compiler_params_for(backend, 2 if batched else 1)
     kern_kw = dict(specs=specs, bx=bx, bt=bt, halo=halo, true_w=true_w,
                    stages=stages, apply_fns=apply_fns, batched=batched)
     streamed = [xp]
@@ -517,11 +543,12 @@ def _run_2d(x, specs, plan: BlockPlan, bx, bt, variant, interpret, sources,
     return out[..., :true_h, :true_w]
 
 
-def _run_3d(x, specs, plan: BlockPlan, bx, bt, variant, interpret, sources,
+def _run_3d(x, specs, plan: BlockPlan, bx, bt, variant, backend, sources,
             apply_fns, valid_lo, valid_hi):
     if variant not in VARIANTS_3D:
         raise ValueError(f"unknown 3D variant {variant!r}; "
                          f"expected one of {VARIANTS_3D}")
+    interpret = backend == "interpret"
     batched = x.ndim == 4
     true_d, true_h, true_w = x.shape[-3:]
     rows, nt = plan.padded_rows, plan.n_tiles
@@ -570,8 +597,7 @@ def _run_3d(x, specs, plan: BlockPlan, bx, bt, variant, interpret, sources,
             jnp.maximum(k - fill, 0), 0, i))),
         out_shape=jax.ShapeDtypeStruct(xp.shape, xp.dtype),
         scratch_shapes=scratch,
-        compiler_params=tpu_compiler_params(
-            dimension_semantics=("arbitrary",) * len(grid)),
+        compiler_params=compat.compiler_params_for(backend, len(grid)),
         interpret=interpret,
     )(*((lim, xp, xp, xp, sp, sp, sp) if has_src else (lim, xp, xp, xp)))
     return out[..., :true_d, :true_h, :true_w]
@@ -579,10 +605,11 @@ def _run_3d(x, specs, plan: BlockPlan, bx, bt, variant, interpret, sources,
 
 @functools.partial(jax.jit,
                    static_argnames=("specs", "bx", "bt", "variant",
-                                    "interpret", "apply_fns"))
+                                    "interpret", "backend", "apply_fns"))
 def stencil_call_program(x: jax.Array, specs, *, bx: int, bt: int,
                          variant: str = "revolving",
                          interpret: bool = True,
+                         backend: str | None = None,
                          source: jax.Array | None = None, aux=None,
                          scalars=None, apply_fns=None,
                          valid_lo=None, valid_hi=None) -> jax.Array:
@@ -616,11 +643,32 @@ def stencil_call_program(x: jax.Array, specs, *, bx: int, bt: int,
     every aux operand must then be ``[B, *grid]`` too. Each problem's
     result is bitwise-identical to its solo run.
     """
+    backend = _resolve_engine_backend(backend, interpret)
     specs = tuple(specs)
     if not specs:
         raise ValueError("specs must hold at least one StencilSpec")
     M = len(specs)
     dims = specs[0].dims
+    if backend == "gpu":
+        legal = variants_for(dims, "gpu")
+        if not legal:
+            raise NotImplementedError(
+                "the 3D streaming kernel needs sequential-grid "
+                "semantics and persistent scratch, which the Triton "
+                "lowering does not offer; the 'gpu' backend is 2D-only "
+                "(docs/portability.md tabulates the matrix)")
+        if variant not in legal:
+            raise ValueError(
+                f"variant {variant!r} is not available on the 'gpu' "
+                f"backend (its revolving scratch must persist across "
+                f"grid blocks — a TPU sequential-grid capability); "
+                f"legal: {legal}")
+        if compat.platform() != "gpu":
+            raise RuntimeError(
+                f"engine backend 'gpu' requires a GPU host platform, "
+                f"but jax.default_backend() is "
+                f"{compat.platform()!r}; use 'interpret' (the oracle) "
+                f"or 'auto' here")
     if any(sp.dims != dims for sp in specs):
         raise ValueError("all fused specs must share one dims")
     if source is not None and M != 1:
@@ -722,18 +770,19 @@ def stencil_call_program(x: jax.Array, specs, *, bx: int, bt: int,
         from repro.kernels.stencil2d import _apply_2d
         apply_fns = tuple(f if f is not None else _apply_2d
                           for f in apply_fns)
-        return _run_2d(x, specs, plan, bx, bt, variant, interpret,
+        return _run_2d(x, specs, plan, bx, bt, variant, backend,
                        sources, coeffss, scalarss, apply_fns,
                        valid_lo, valid_hi)
     from repro.kernels.stencil3d import _apply_3d
     apply_fns = tuple(f if f is not None else _apply_3d
                       for f in apply_fns)
-    return _run_3d(x, specs, plan, bx, bt, variant, interpret, sources,
+    return _run_3d(x, specs, plan, bx, bt, variant, backend, sources,
                    apply_fns, valid_lo, valid_hi)
 
 
 def stencil_call(x: jax.Array, spec: StencilSpec, *, bx: int, bt: int,
                  variant: str = "revolving", interpret: bool = True,
+                 backend: str | None = None,
                  source: jax.Array | None = None, aux=None,
                  scalars: jax.Array | None = None,
                  apply_fn=None, valid_lo=None, valid_hi=None) -> jax.Array:
@@ -748,7 +797,7 @@ def stencil_call(x: jax.Array, spec: StencilSpec, *, bx: int, bt: int,
     """
     return stencil_call_program(
         x, (spec,), bx=bx, bt=bt, variant=variant, interpret=interpret,
-        source=source, aux=aux,
+        backend=backend, source=source, aux=aux,
         scalars=None if scalars is None else (scalars,),
         apply_fns=None if apply_fn is None else (apply_fn,),
         valid_lo=valid_lo, valid_hi=valid_hi)

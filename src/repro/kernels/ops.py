@@ -6,7 +6,11 @@ Backend dispatch:
                        (the validation mode used throughout this repo);
   * ``"reference"``  — the pure-jnp oracle (kernels/ref.py), i.e. the
                        thesis's "NDRange-like" data-parallel formulation;
-  * ``"auto"``       — pallas on TPU, interpret elsewhere.
+  * ``"gpu"``        — compile the Pallas kernel through the Triton
+                       lowering (GPU hosts only; 2D multioperand — see
+                       docs/portability.md for the support matrix);
+  * ``"auto"``       — pallas on TPU, gpu on a GPU host with the
+                       Triton lowering, interpret elsewhere.
 
 Blocking parameters: **one resolution rule for every entry point**
 (``stencil_sweep``, ``stencil_run``, ``stencil_auto``): pass explicit
@@ -90,12 +94,36 @@ def _on_tpu() -> bool:
 
 
 def _resolve(backend: str) -> str:
+    """Resolve "auto" to the best compiled backend this host offers:
+    ``pallas`` on TPU, ``gpu`` on a GPU host whose jax ships the
+    Pallas/Triton lowering, ``interpret`` (the oracle) elsewhere."""
     if backend == "auto":
-        return "pallas" if _on_tpu() else "interpret"
+        if _on_tpu():
+            return "pallas"
+        from repro import compat
+        if compat.platform() == "gpu" and compat.has_gpu_pallas():
+            return "gpu"
+        return "interpret"
     return backend
 
 
 resolve_backend = _resolve
+
+
+def backend_pairs() -> tuple[tuple[str, str], ...]:
+    """(oracle, other) backend pairs differentially testable HERE.
+
+    ``interpret`` — the Pallas kernel body executed in Python — is the
+    ground-truth backend every other one is measured against
+    (docs/portability.md):  the jit-compiled jnp ``reference`` is
+    always runnable, ``pallas`` joins on a TPU host, ``gpu`` on a GPU
+    host. ``tests/test_backends.py`` parametrizes its acceptance
+    matrix over exactly this list, so the differential pass widens by
+    itself on bigger hosts.
+    """
+    from repro import compat
+    return tuple(("interpret", b) for b in compat.available_backends()
+                 if b != "interpret")
 
 
 def batch_of(x, spec: StencilSpec):
@@ -221,6 +249,12 @@ def stencil_sweep(x: jax.Array, spec: StencilSpec, bx: int | None = None,
                                       scalars=scalars)
     interpret = backend == "interpret"
     if nd > 1:
+        if backend == "gpu":
+            raise NotImplementedError(
+                "the deep-halo sharded runner is not wired to the 'gpu' "
+                "backend yet: shard_map + Triton-lowered pallas_call is "
+                "untested here. Run the sharded path on 'pallas' or "
+                "'interpret', or the gpu backend on one device.")
         from repro.distributed import halo
         _count_dispatch()
         return halo.stencil_run_sharded(
@@ -230,7 +264,8 @@ def stencil_sweep(x: jax.Array, spec: StencilSpec, bx: int | None = None,
     fn = _stencil2d if spec.dims == 2 else _stencil3d
     _count_dispatch()
     return fn(x, spec, bx=bx, bt=bt, variant=variant,
-              interpret=interpret, source=source, aux=aux, scalars=scalars)
+              interpret=interpret, backend=backend,
+              source=source, aux=aux, scalars=scalars)
 
 
 def stencil_run(x: jax.Array, spec: StencilSpec, n_steps: int,
@@ -286,19 +321,13 @@ def stencil_run(x: jax.Array, spec: StencilSpec, n_steps: int,
             extra_streams=int(source is not None), n_devices=nd)
         if routed:
             if nd > 1:
-                raise NotImplementedError(
-                    f"out-of-core tiling (per-device working set of "
-                    f"{x.shape} over {nd} devices exceeds hbm_budget="
-                    f"{budget}) cannot yet be combined with sharding: "
-                    f"run out-of-core on one device, or raise the "
-                    f"budget / device count so each shard fits "
-                    f"(docs/outofcore.md tracks the planned "
-                    f"composition)")
+                from repro.outofcore import sharded_outofcore_error
+                raise sharded_outofcore_error(x.shape, nd, budget)
             from repro.outofcore import stencil_run_outofcore
             _count_dispatch(-(-n_steps // bt))
             return stencil_run_outofcore(
                 x, spec, n_steps, bx=bx, bt=bt, variant=variant,
-                interpret=backend == "interpret", hbm_budget=budget,
+                backend=backend, hbm_budget=budget,
                 source=source, aux=aux, scalars=scalars)
     if scalars is not None:
         import jax.numpy as jnp
@@ -308,6 +337,12 @@ def stencil_run(x: jax.Array, spec: StencilSpec, n_steps: int,
         else:
             scalars = scalars.reshape(n_steps, -1)
     if nd > 1 and backend != "reference":
+        if backend == "gpu":
+            raise NotImplementedError(
+                "the deep-halo sharded runner is not wired to the 'gpu' "
+                "backend yet: shard_map + Triton-lowered pallas_call is "
+                "untested here. Run the sharded path on 'pallas' or "
+                "'interpret', or the gpu backend on one device.")
         from repro.distributed import halo
         full, rem = divmod(n_steps, bt)
         _count_dispatch(full + (1 if rem else 0))
@@ -361,7 +396,7 @@ def stencil_program_run(x_or_fields, program, n_steps: int, *,
 
     One shared autotuned plan covers the whole program: ``bx``/``bt``/
     ``variant`` resolve through ``autotune.plan`` with the program's
-    cache token as the key head (cache schema v6).
+    cache token as the key head (cache schema v7).
     """
     import numpy as np
     import jax.numpy as jnp
@@ -468,11 +503,8 @@ def stencil_program_run(x_or_fields, program, n_steps: int, *,
         batch=B or 1, n_devices=nd)
     if routed:
         if nd > 1:
-            raise NotImplementedError(
-                f"out-of-core program execution (per-device working set "
-                f"of {primary.shape} over {nd} devices exceeds "
-                f"hbm_budget={budget}) cannot yet be combined with "
-                f"sharding (docs/outofcore.md)")
+            from repro.outofcore import sharded_outofcore_error
+            raise sharded_outofcore_error(primary.shape, nd, budget)
         # Host-streaming fallback: one out-of-core blocked sweep per
         # sweep per program step; evolving fields ride as aux operands
         # and live as host numpy arrays between sweeps.
@@ -489,11 +521,17 @@ def stencil_program_run(x_or_fields, program, n_steps: int, *,
                 _count_dispatch()
                 fields[s.field] = stencil_run_outofcore(
                     fields[s.field], s.spec, 1, bx=bx, bt=1,
-                    variant=variant, interpret=interpret,
+                    variant=variant, backend=backend,
                     hbm_budget=budget, aux=aux or None, scalars=scal)
         return fields[program.fields[0]] if bare else fields
 
     if nd > 1:
+        if backend == "gpu":
+            raise NotImplementedError(
+                "the deep-halo sharded runner is not wired to the 'gpu' "
+                "backend yet: shard_map + Triton-lowered pallas_call is "
+                "untested here. Run the sharded path on 'pallas' or "
+                "'interpret', or the gpu backend on one device.")
         from repro.distributed import halo
         _count_dispatch(sum(-(-n_steps // bt) for _ in groups))
         out = halo.stencil_program_run_sharded(
@@ -524,7 +562,7 @@ def stencil_program_run(x_or_fields, program, n_steps: int, *,
             _count_dispatch()
             fields[fname] = engine.stencil_call_program(
                 fields[fname], specs, bx=bx, bt=bts, variant=variant,
-                interpret=interpret, aux=aux or None,
+                interpret=interpret, backend=backend, aux=aux or None,
                 scalars=(scal if any(c is not None for c in scal)
                          else None))
         done += bts

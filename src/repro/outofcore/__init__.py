@@ -6,7 +6,8 @@ its block RAM. See ``runner.py`` and ``docs/outofcore.md``.
 """
 from repro.core.blocking import TilePlan, plan_tiles
 from repro.outofcore.runner import (exceeds_budget, route_decision,
+                                    sharded_outofcore_error,
                                     stencil_run_outofcore)
 
 __all__ = ["TilePlan", "plan_tiles", "exceeds_budget", "route_decision",
-           "stencil_run_outofcore"]
+           "sharded_outofcore_error", "stencil_run_outofcore"]

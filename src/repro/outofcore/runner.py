@@ -111,6 +111,30 @@ def route_decision(spec: StencilSpec, grid_shape, itemsize: int,
     return per_device > hbm_budget, hbm_budget
 
 
+def sharded_outofcore_error(shape, n_devices: int,
+                            hbm_budget: int) -> NotImplementedError:
+    """The ONE deferral error for out-of-core × ``n_devices > 1``.
+
+    ``autotune.plan``, ``ops.stencil_run`` and ``ops.stencil_program_run``
+    all hit this wall; building the exception here keeps their messages
+    identical (they used to drift word by word) and guarantees every
+    path names the same remedy: the ROADMAP's "Out-of-core ×
+    multi-device" item — each device streaming its own slab's tiles
+    with halo exchanges at tile granularity. Callers ``raise`` the
+    returned exception (returning rather than raising keeps tracebacks
+    pointing at the caller that hit the wall, not at this builder).
+    """
+    return NotImplementedError(
+        f"out-of-core tiling (per-device working set of {tuple(shape)} "
+        f"over {n_devices} devices exceeds hbm_budget={hbm_budget}) "
+        f"cannot yet be combined with sharding: run out-of-core on one "
+        f"device, or raise the budget / device count so each shard "
+        f"fits. The planned composition — each device streaming its "
+        f"own slab's tiles, exchanging r*bt-deep halos at tile "
+        f"granularity — is ROADMAP.md's 'Out-of-core x multi-device' "
+        f"item (see also docs/outofcore.md)")
+
+
 def exceeds_budget(spec: StencilSpec, grid_shape, itemsize: int,
                    hbm_budget: int, batch: int = 1,
                    extra_streams: int = 0) -> bool:
@@ -131,7 +155,7 @@ _DISPATCHERS: OrderedDict = OrderedDict()
 _DISPATCHER_CAP = 64
 
 
-def _dispatcher(key, spec, bx, bts, variant, interpret, aux_names,
+def _dispatcher(key, spec, bx, bts, variant, backend, aux_names,
                 donate):
     fn = _DISPATCHERS.get(key)
     if fn is not None:
@@ -141,7 +165,7 @@ def _dispatcher(key, spec, bx, bts, variant, interpret, aux_names,
     def call(slab, src, aux_list, scal):
         aux = dict(zip(aux_names, aux_list)) or None
         return engine.stencil_call(slab, spec, bx=bx, bt=bts,
-                                   variant=variant, interpret=interpret,
+                                   variant=variant, backend=backend,
                                    source=src, aux=aux, scalars=scal)
 
     # Donate the input slab so the device reuses its HBM for the
@@ -179,6 +203,7 @@ def resolve_tile(x_shape, spec: StencilSpec, *, bx: int, bt: int,
 def stencil_run_outofcore(x, spec: StencilSpec, n_steps: int, *,
                           bx: int, bt: int, variant: str = "revolving",
                           interpret: bool = True,
+                          backend: str | None = None,
                           tile: int | None = None,
                           hbm_budget: int | None = None,
                           source=None, aux=None, scalars=None,
@@ -197,6 +222,8 @@ def stencil_run_outofcore(x, spec: StencilSpec, n_steps: int, *,
     variant=variant)`` for every supported spec; the in-core engine on
     a forced-small budget is the differential oracle in tests.
     """
+    backend = engine._resolve_engine_backend(backend, interpret)
+    interpret = backend == "interpret"
     if x.ndim not in (spec.dims, spec.dims + 1):
         raise ValueError(f"grid rank {x.ndim} != spec.dims {spec.dims} "
                          f"(or {spec.dims + 1} with a leading batch axis)")
@@ -309,10 +336,10 @@ def stencil_run_outofcore(x, spec: StencilSpec, n_steps: int, *,
             # of different heights share one compilation).
             other_dims = cur.shape[:ga] + cur.shape[ga + 1:]
             dispatch = _dispatcher(
-                (spec, bx, bts, variant, interpret, aux_names, donate,
+                (spec, bx, bts, variant, backend, aux_names, donate,
                  has_src, end - start, other_dims, str(dtype),
                  None if scal is None else scal.shape),
-                spec, bx, bts, variant, interpret, aux_names, donate)
+                spec, bx, bts, variant, backend, aux_names, donate)
             out = dispatch(slab, src_slab, aux_slabs, scal_dev)
             in_flight.append((t0, t1, start, out))
             if len(in_flight) >= depth:

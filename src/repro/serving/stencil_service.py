@@ -37,10 +37,17 @@ Lifecycle (``docs/serving.md`` has the full walk-through):
      served result never differs from the unbatched one. ``check=True``
      re-verifies that per request, for smoke tests.
 
-``metrics`` tracks dispatches, served/padding problem counts and the
-measured device-busy fraction (time with work in flight / wall time) —
-the quantity batching exists to raise; ``benchmarks/serving.py`` turns
-it into a throughput suite.
+``metrics`` tracks dispatches, served/padding problem counts, failed
+requests and the measured device-busy fraction (time with work in
+flight / wall time) — the quantity batching exists to raise;
+``benchmarks/serving.py`` turns it into a throughput suite.
+
+**Error isolation**: a request whose dispatch raises — a mis-shaped
+aux grid that joined a bucket (the key hashes aux *names*), a value
+that trips an engine assert — fails ALONE. Its bucket re-dispatches
+per request, the poisoned request's completion carries the exception
+(``StencilCompletion.error``), every other request still gets its
+result, and ``metrics["failed"]`` counts the casualties.
 """
 from __future__ import annotations
 
@@ -86,9 +93,14 @@ class StencilRequest:
 @dataclasses.dataclass
 class StencilCompletion:
     uid: int
-    result: np.ndarray   # host-side: each bucket is materialized once
+    result: Optional[np.ndarray]  # host-side: each bucket materializes
+    # once. None iff this request failed (then ``error`` says why).
     bucket: int          # batch rows in the dispatch that served it
     padded: int          # how many of those rows were padding
+    # The exception this request's dispatch raised, or None on success.
+    # A failed request fails ALONE: its bucket-mates re-dispatch solo
+    # and still complete (see flush()).
+    error: Optional[Exception] = None
 
 
 class StencilService:
@@ -138,7 +150,7 @@ class StencilService:
         # (key, bucket) pairs that route out-of-core (for metrics).
         self._outofcore: set = set()
         self.metrics = {"dispatches": 0, "problems": 0, "pad_rows": 0,
-                        "outofcore_dispatches": 0,
+                        "outofcore_dispatches": 0, "failed": 0,
                         "busy_s": 0.0, "wall_s": 0.0}
 
     # ------------------------------------------------------------------
@@ -248,6 +260,55 @@ class StencilService:
         return fn
 
     # ------------------------------------------------------------------
+    def _solo_run(self, r: StencilRequest, bx, bt, variant):
+        """One request, un-batched, through the same ops entry points
+        the bucket dispatch uses (same blocking when known, so the
+        result is bitwise-identical to the batched row it replaces)."""
+        if r.program is not None:
+            return ops.stencil_program_run(
+                jnp.asarray(r.x), r.program, r.n_steps, bx=bx, bt=bt,
+                variant=variant, backend=self.backend, inputs=r.aux,
+                hbm_budget=self.hbm_budget)
+        return ops.stencil_run(
+            jnp.asarray(r.x), r.spec, r.n_steps, bx=bx, bt=bt,
+            variant=variant, backend=self.backend, aux=r.aux,
+            scalars=r.scalars, hbm_budget=self.hbm_budget)
+
+    def _serve_solo(self, key, chunk, bucket: int
+                    ) -> List[StencilCompletion]:
+        """Per-request fallback after a bucket-level failure.
+
+        The compilation key hashes aux *names*, not shapes — so one
+        request with a mis-shaped aux grid (or a value that trips an
+        engine assert) lands in a bucket of perfectly good work and
+        fails the whole batched dispatch. Re-dispatching each request
+        alone isolates the blast radius: the poisoned request completes
+        with its ``error`` attached, every innocent bucket-mate still
+        gets its result, and the accounting stays honest —
+        ``metrics["failed"]`` counts casualties, ``problems`` only
+        successes, ``dispatches`` the solo retries that actually ran.
+        """
+        out: List[StencilCompletion] = []
+        bx, bt, variant = self._resolved.get((key, bucket),
+                                             self._blocking)
+        for r in chunk:
+            try:
+                res = np.asarray(jax.block_until_ready(
+                    self._solo_run(r, bx, bt, variant)))
+            except Exception as e:   # noqa: BLE001 — client data is
+                # arbitrary; any per-request failure must stay local.
+                self.metrics["failed"] += 1
+                out.append(StencilCompletion(
+                    uid=r.uid, result=None, bucket=1, padded=0,
+                    error=e))
+                continue
+            self.metrics["dispatches"] += 1
+            self.metrics["problems"] += 1
+            out.append(StencilCompletion(uid=r.uid, result=res,
+                                         bucket=1, padded=0))
+        return out
+
+    # ------------------------------------------------------------------
     def flush(self) -> List[StencilCompletion]:
         t0 = time.perf_counter()
         # Group by compilation key, preserving arrival order within a
@@ -259,6 +320,7 @@ class StencilService:
             groups.setdefault(self._key(r), []).append(r)
         self._queue.clear()
 
+        done: List[StencilCompletion] = []
         in_flight = []       # (key, reqs, bucket, pad, result_future)
         t_busy0 = None
         for key, reqs in groups.items():
@@ -266,44 +328,57 @@ class StencilService:
                 chunk = reqs[i: i + self.max_batch]
                 bucket = bucket_size(len(chunk), self.max_batch)
                 pad = bucket - len(chunk)
-                # Stack on the *host* (one memcpy + one device upload):
-                # jnp.stack over many small device buffers costs more
-                # than the batched dispatch it feeds.
-                xb = np.stack(
-                    [np.asarray(r.x, np.dtype(key[2])) for r in chunk]
-                    + [np.zeros(key[1], np.dtype(key[2]))] * pad)
-                aux_b = None
-                if chunk[0].aux:
-                    aux_b = {
-                        nm: np.stack(
-                            [np.asarray(r.aux[nm], xb.dtype)
-                             for r in chunk]
-                            + [np.zeros(key[1], xb.dtype)] * pad)
-                        for nm in chunk[0].aux}
-                scal_b = None
-                if chunk[0].scalars is not None:
-                    scal_b = np.stack(
-                        [np.asarray(r.scalars, np.float32).reshape(
-                            r.n_steps, -1) for r in chunk]
-                        + [np.zeros(
-                            (chunk[0].n_steps, chunk[0].spec.n_scalars),
-                            np.float32)] * pad)
                 if t_busy0 is None:
                     t_busy0 = time.perf_counter()
-                out = self._dispatcher(key, bucket)(xb, aux_b, scal_b)
+                try:
+                    # Stack on the *host* (one memcpy + one device
+                    # upload): jnp.stack over many small device buffers
+                    # costs more than the batched dispatch it feeds.
+                    xb = np.stack(
+                        [np.asarray(r.x, np.dtype(key[2]))
+                         for r in chunk]
+                        + [np.zeros(key[1], np.dtype(key[2]))] * pad)
+                    aux_b = None
+                    if chunk[0].aux:
+                        aux_b = {
+                            nm: np.stack(
+                                [np.asarray(r.aux[nm], xb.dtype)
+                                 for r in chunk]
+                                + [np.zeros(key[1], xb.dtype)] * pad)
+                            for nm in chunk[0].aux}
+                    scal_b = None
+                    if chunk[0].scalars is not None:
+                        scal_b = np.stack(
+                            [np.asarray(r.scalars, np.float32).reshape(
+                                r.n_steps, -1) for r in chunk]
+                            + [np.zeros(
+                                (chunk[0].n_steps,
+                                 chunk[0].spec.n_scalars),
+                                np.float32)] * pad)
+                    out = self._dispatcher(key, bucket)(xb, aux_b,
+                                                        scal_b)
+                except Exception:   # noqa: BLE001 — one bad request
+                    # (mis-shaped aux, poisonous value) must not sink
+                    # its bucket-mates: re-dispatch each one alone.
+                    done.extend(self._serve_solo(key, chunk, bucket))
+                    continue
                 in_flight.append((key, chunk, bucket, pad, out))
                 self.metrics["dispatches"] += 1
                 if (key, bucket) in self._outofcore:
                     self.metrics["outofcore_dispatches"] += 1
                 self.metrics["pad_rows"] += pad
 
-        done: List[StencilCompletion] = []
         for key, chunk, bucket, pad, out in in_flight:
             # One device->host materialization per bucket; slicing the
             # device array per request would instead dispatch one lazy
             # gather per request — quietly re-creating the per-problem
             # dispatch storm the batching removed.
-            out = np.asarray(jax.block_until_ready(out))
+            try:
+                out = np.asarray(jax.block_until_ready(out))
+            except Exception:   # noqa: BLE001 — async dispatch: a
+                # compiled bucket's failure surfaces here, at readback.
+                done.extend(self._serve_solo(key, chunk, bucket))
+                continue
             for j, r in enumerate(chunk):
                 res = out[j]
                 if self.check:

@@ -5,7 +5,7 @@ fuse-group analysis, the multi-sweep engine dispatch
 (``engine.stencil_call_program``), the scheduler
 (``ops.stencil_program_run``) against the pure-jnp oracle and against
 composed NumPy goldens, dispatch accounting, the program-aware
-autotuner cache (v6 rejects v5 files), the serving bucket key, and the
+autotuner cache (v7 rejects v6 files), the serving bucket key, and the
 forced-multi-device sharded runner.
 
 Property tests (random 2-3 sweep programs) run under hypothesis when
@@ -418,7 +418,7 @@ if HAVE_HYPOTHESIS:
 
 
 # --------------------------------------------------------------------------
-# autotune: program plans and the v6 cache version gate
+# autotune: program plans and the v7 cache version gate
 # --------------------------------------------------------------------------
 
 def test_autotune_plans_a_program(tmp_path, monkeypatch):
@@ -434,11 +434,11 @@ def test_autotune_plans_a_program(tmp_path, monkeypatch):
     assert plan2.bt == 1
 
 
-def test_autotune_rejects_v5_cache(tmp_path, monkeypatch, caplog):
+def test_autotune_rejects_v6_cache(tmp_path, monkeypatch, caplog):
     from repro.kernels import autotune
     path = tmp_path / "cache.json"
     stale_key = "handmade|stale|winner"
-    path.write_text(json.dumps({"version": 5,
+    path.write_text(json.dumps({"version": 6,
                                 stale_key: {"bx": 128, "bt": 8,
                                             "variant": "revolving",
                                             "source": "measured"}}))
@@ -448,13 +448,13 @@ def test_autotune_rejects_v5_cache(tmp_path, monkeypatch, caplog):
         tuned = autotune.plan((48, 260), diffusion(2, 1),
                               backend="interpret", n_steps=4,
                               measure=True)
-    assert "version 5" in caplog.text and "version 6" in caplog.text
-    # every v5 winner is dropped from the live cache...
+    assert "version 6" in caplog.text and "version 7" in caplog.text
+    # every v6 winner is dropped from the live cache...
     assert stale_key not in autotune._load_cache()
-    # ...and the re-measured winner persists under a v6 stamp
+    # ...and the re-measured winner persists under a v7 stamp
     assert tuned.source == "measured"
     data = json.loads(path.read_text())
-    assert data["version"] == autotune._CACHE_VERSION == 6
+    assert data["version"] == autotune._CACHE_VERSION == 7
     assert stale_key not in data
 
 

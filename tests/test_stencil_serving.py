@@ -161,3 +161,111 @@ def test_service_autotuned_blocking_resolves_per_group():
     (key_bucket,) = list(svc._resolved)
     bx, bt, variant = svc._resolved[key_bucket]
     assert bx % 128 == 0 and bt >= 1 and variant is not None
+
+
+# --------------------------------------------------------------------------
+# Per-request error isolation: a poisoned request fails ALONE
+# --------------------------------------------------------------------------
+
+class _PoisonGrid:
+    """Quacks like a (16, 132) float32 grid until materialization —
+    the shape/dtype pass submit() and bucketing (the compilation key
+    hashes names and shapes, not values), then np.asarray raises, the
+    way a corrupt client buffer or a poisoned aux value would."""
+    ndim = 2
+    shape = (16, 132)
+    dtype = np.dtype(np.float32)
+
+    def __array__(self, dtype=None, copy=None):
+        raise RuntimeError("poisoned request payload")
+
+
+def _iso_workload(spec):
+    return [
+        StencilRequest(uid=0, x=_rand((16, 132), 0), spec=spec,
+                       n_steps=2),
+        StencilRequest(uid=1, x=_PoisonGrid(), spec=spec, n_steps=2),
+        StencilRequest(uid=2, x=_rand((16, 132), 2), spec=spec,
+                       n_steps=2),
+    ]
+
+
+def test_failed_request_does_not_poison_its_bucket():
+    spec = diffusion(2, 1)
+    svc = StencilService(max_batch=4, backend="interpret", bx=128,
+                         bt=1)
+    done = svc.run(_iso_workload(spec))
+    assert len(done) == 3            # every request completes
+    by_uid = {c.uid: c for c in done}
+    # the poisoned request fails, carrying its exception
+    assert by_uid[1].result is None
+    assert isinstance(by_uid[1].error, RuntimeError)
+    assert "poisoned" in str(by_uid[1].error)
+    # its bucket-mates still get results, equal to their solo runs
+    for uid in (0, 2):
+        assert by_uid[uid].error is None
+        want = ops.stencil_run(_rand((16, 132), uid), spec, 2,
+                               bx=128, bt=1, backend="interpret")
+        np.testing.assert_array_equal(by_uid[uid].result,
+                                      np.asarray(want))
+
+
+def test_failed_request_metrics_accounting():
+    spec = diffusion(2, 1)
+    svc = StencilService(max_batch=4, backend="interpret", bx=128,
+                         bt=1)
+    svc.run(_iso_workload(spec))
+    m = svc.metrics
+    assert m["failed"] == 1          # exactly the poisoned request
+    assert m["problems"] == 2        # only successes count as served
+    # the solo retries that actually ran are real dispatches (the
+    # bucket's own dispatch never completed, so: one per survivor)
+    assert m["dispatches"] == 2
+
+
+def test_error_isolation_with_healthy_second_bucket():
+    """A poisoned bucket must not take down OTHER buckets already
+    grouped in the same flush."""
+    spec = diffusion(2, 1)
+    other = hotspot2d()
+    svc = StencilService(max_batch=4, backend="interpret", bx=128,
+                         bt=1)
+    reqs = _iso_workload(spec) + [
+        StencilRequest(uid=3, x=_rand((12, 132), 3), spec=other,
+                       n_steps=2),
+    ]
+    done = svc.run(reqs)
+    by_uid = {c.uid: c for c in done}
+    assert len(done) == 4
+    assert by_uid[1].error is not None
+    want = ops.stencil_run(_rand((12, 132), 3), other, 2, bx=128,
+                           bt=1, backend="interpret")
+    np.testing.assert_array_equal(by_uid[3].result, np.asarray(want))
+    assert svc.metrics["failed"] == 1
+
+
+def test_all_healthy_flush_reports_no_failures():
+    spec = diffusion(2, 1)
+    svc = StencilService(max_batch=4, backend="interpret", bx=128,
+                         bt=1)
+    reqs = [StencilRequest(uid=i, x=_rand((16, 132), i), spec=spec,
+                           n_steps=2) for i in range(3)]
+    done = svc.run(reqs)
+    assert all(c.error is None for c in done)
+    assert svc.metrics["failed"] == 0
+    assert svc.metrics["problems"] == 3
+
+
+def test_service_still_serves_after_a_poisoned_flush():
+    """The service object survives: the flush after a failure serves
+    normally (no stuck queue, no corrupted dispatcher cache)."""
+    spec = diffusion(2, 1)
+    svc = StencilService(max_batch=4, backend="interpret", bx=128,
+                         bt=1)
+    svc.run(_iso_workload(spec))
+    done = svc.run([StencilRequest(uid=9, x=_rand((16, 132), 9),
+                                   spec=spec, n_steps=2)])
+    assert len(done) == 1 and done[0].error is None
+    want = ops.stencil_run(_rand((16, 132), 9), spec, 2, bx=128,
+                           bt=1, backend="interpret")
+    np.testing.assert_array_equal(done[0].result, np.asarray(want))

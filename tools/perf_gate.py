@@ -1,0 +1,144 @@
+"""CI perf-regression gate: fresh BENCH_*.json vs the committed
+trajectory.
+
+``benchmarks/trajectory.py`` folds each epoch's benchmark records into
+the append-only ``perf/trajectory.json``; this tool compares a *fresh*
+set of ``BENCH_*.json`` files against that trajectory's LAST entry and
+exits non-zero when any tracked metric regressed beyond its allowance:
+
+  * ``count`` metrics (engine dispatch counts) are deterministic:
+    any increase over the recorded value fails, exactly. Fewer
+    dispatches passes (that is an improvement to re-baseline).
+  * ``time`` metrics (lower is better) fail when
+    ``fresh > recorded * (1 + noise + margin)``;
+  * ``rate`` metrics (higher is better) fail when
+    ``fresh < recorded / (1 + noise + margin)``;
+
+where ``noise`` is the metric's recorded noise band (relative spread
+of the repeated samples behind the trajectory entry) and ``margin``
+absorbs machine-to-machine variance — CI hardware is not the hardware
+the trajectory was measured on, so the default margin is generous
+(1.0: a fresh time may be up to ~2x the recorded best before it
+fails). A real regression — an accidentally-disabled fusion path, a
+10x-slower fallback — blows through any sane margin; the gate exists
+to catch those, not 20% scheduler jitter.
+
+Metrics present in the trajectory but absent from the fresh records
+are *skipped with a notice* (CI regenerates only the smoke suites, not
+every epoch's full sweep); metrics in the fresh records but not in the
+trajectory are new and pass (the next trajectory append adopts them).
+
+Usage (what .github/workflows/ci.yml perf-gate runs)::
+
+    python -m benchmarks.serving  --smoke --json BENCH_serving.json
+    python -m benchmarks.solvers  --smoke --json BENCH_solvers.json
+    python tools/perf_gate.py --bench-dir . \
+        --trajectory perf/trajectory.json --margin 4.0
+
+Exit status: 0 = no regression, 1 = at least one metric regressed,
+2 = nothing could be compared (no overlap — almost certainly a wiring
+bug in the caller, distinct from a clean pass).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.trajectory import collect, load_trajectory  # noqa: E402
+
+
+def check(fresh: dict, entry: dict, margin: float) -> tuple[list, list,
+                                                            list]:
+    """Compare fresh metrics against one trajectory entry.
+
+    Returns (failures, passes, skipped) where each failure/pass is a
+    human-readable line and skipped lists trajectory metrics the fresh
+    records did not reproduce.
+    """
+    failures, passes, skipped = [], [], []
+    for key in sorted(entry["metrics"]):
+        rec = entry["metrics"][key]
+        got = fresh.get(key)
+        if got is None:
+            skipped.append(key)
+            continue
+        value, recorded = got["value"], rec["value"]
+        kind, noise = rec["kind"], rec.get("noise", 0.0)
+        if kind == "count":
+            ok = value <= recorded
+            detail = (f"{key}: {value:.0f} vs recorded {recorded:.0f} "
+                      f"[count, exact]")
+        elif kind == "time":
+            allowed = recorded * (1.0 + noise + margin)
+            ok = value <= allowed
+            detail = (f"{key}: {value:.6g} vs recorded {recorded:.6g} "
+                      f"(allowed <= {allowed:.6g}) [time, "
+                      f"noise={noise:.2f}, margin={margin:g}]")
+        else:   # rate
+            allowed = recorded / (1.0 + noise + margin)
+            ok = value >= allowed
+            detail = (f"{key}: {value:.6g} vs recorded {recorded:.6g} "
+                      f"(allowed >= {allowed:.6g}) [rate, "
+                      f"noise={noise:.2f}, margin={margin:g}]")
+        (passes if ok else failures).append(detail)
+    return failures, passes, skipped
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="fail when fresh BENCH_*.json regress vs the "
+                    "committed perf trajectory")
+    ap.add_argument("--bench-dir", default=".",
+                    help="directory holding fresh BENCH_*.json "
+                         "(default: %(default)s)")
+    ap.add_argument("--trajectory", default="perf/trajectory.json",
+                    help="committed trajectory (default: %(default)s)")
+    ap.add_argument("--margin", type=float, default=1.0,
+                    help="extra relative allowance on top of each "
+                         "timing metric's noise band, for cross-"
+                         "machine variance (default: %(default)s; "
+                         "counts are always exact)")
+    args = ap.parse_args(argv)
+
+    trajectory = load_trajectory(args.trajectory)
+    if not trajectory["entries"]:
+        print(f"perf_gate: {args.trajectory} has no entries — nothing "
+              f"to gate against", file=sys.stderr)
+        raise SystemExit(2)
+    entry = trajectory["entries"][-1]
+    fresh = collect(args.bench_dir)
+    if not fresh:
+        print(f"perf_gate: no BENCH_*.json under {args.bench_dir} — "
+              f"run the suites first", file=sys.stderr)
+        raise SystemExit(2)
+
+    failures, passes, skipped = check(fresh, entry, args.margin)
+    if not failures and not passes:
+        print("perf_gate: no metric overlap between fresh records and "
+              f"trajectory entry {entry['label']!r} — wiring bug?",
+              file=sys.stderr)
+        raise SystemExit(2)
+
+    print(f"perf_gate: vs trajectory entry {entry['label']!r} "
+          f"({len(passes)} ok, {len(failures)} regressed, "
+          f"{len(skipped)} not regenerated)")
+    for line in passes:
+        print(f"  ok    {line}")
+    for key in skipped:
+        print(f"  skip  {key} (not in fresh records)")
+    for line in failures:
+        print(f"  FAIL  {line}")
+    if failures:
+        print(f"perf_gate: {len(failures)} metric"
+              f"{'s' * (len(failures) != 1)} regressed beyond the "
+              f"noise band — if intentional, append a new trajectory "
+              f"entry (benchmarks/trajectory.py --label <pr>) and "
+              f"commit it", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()
