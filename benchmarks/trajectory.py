@@ -13,8 +13,12 @@ answerable from the repo itself:
     (typically one PR), holding every tracked metric;
   * each **metric** is ``{suite}/{row-name}/{field}`` with a kind —
     ``time`` (lower is better: ``us_per_call``), ``rate`` (higher is
-    better: ``gcells_per_s``, ``requests_per_s``, ``host_gb_per_s``)
-    or ``count`` (deterministic, lower is better: ``dispatches``);
+    better: ``gcells_per_s``, ``requests_per_s``, ``host_gb_per_s``),
+    ``count`` (deterministic, lower is better: ``dispatches``) or
+    ``fraction`` (lower is better, already in [0, 1]: the measured
+    exposed-transfer/-collective overlap fractions — their noise band
+    is *absolute*, since a relative band around a near-zero fraction
+    would gate nothing);
   * re-running with the same ``--label`` appends a **sample** to the
     open entry instead of a new entry — the per-metric spread of those
     repeated runs IS the noise band the gate allows timing metrics to
@@ -49,9 +53,12 @@ TRAJECTORY_VERSION = 1
 TIME_FIELDS = ("us_per_call", "us")
 RATE_FIELDS = ("gcells_per_s", "requests_per_s", "host_gb_per_s")
 COUNT_FIELDS = ("dispatches",)
+FRACTION_FIELDS = ("measured_exposed_transfer_fraction",
+                   "measured_exposed_collective_fraction")
 
 # A single sample can't measure its own spread; until a second run
 # lands, timing metrics carry this relative band (counts carry 0).
+# For fractions the same number is an *absolute* floor.
 DEFAULT_NOISE = 0.10
 
 
@@ -72,7 +79,8 @@ def extract_metrics(payload: dict) -> dict:
         for field, kind in (
                 [(f, "time") for f in TIME_FIELDS]
                 + [(f, "rate") for f in RATE_FIELDS]
-                + [(f, "count") for f in COUNT_FIELDS]):
+                + [(f, "count") for f in COUNT_FIELDS]
+                + [(f, "fraction") for f in FRACTION_FIELDS]):
             v = row.get(field)
             if v is None:
                 continue
@@ -129,11 +137,17 @@ def _suite_headlines(metrics: dict, bench_dir: str) -> dict:
 
 
 def noise_band(samples: list, kind: str) -> float:
-    """Relative half-spread of repeated samples: the band a future
-    measurement may wander inside without counting as a regression.
-    Counts are deterministic — any drift is a real change."""
+    """Spread of repeated samples: the band a future measurement may
+    wander inside without counting as a regression. Counts are
+    deterministic — any drift is a real change. Fractions carry an
+    *absolute* band (a relative band around ~0 would gate nothing);
+    everything else a relative one."""
     if kind == "count":
         return 0.0
+    if kind == "fraction":
+        if len(samples) < 2:
+            return DEFAULT_NOISE
+        return max(max(samples) - min(samples), DEFAULT_NOISE)
     vals = [s for s in samples if s]
     if len(vals) < 2:
         return DEFAULT_NOISE
@@ -175,10 +189,11 @@ def append(trajectory: dict, metrics: dict, headlines: dict,
         slot["samples"].append(m["value"])
         # The representative value: a count must be exact (samples
         # agree or the gate should trip), timing takes the best —
-        # machine noise only ever adds time.
+        # machine noise only ever adds time. A fraction is lower-is-
+        # better, so its best is the min.
         if m["kind"] == "count":
             slot["value"] = m["value"]
-        elif m["kind"] == "time":
+        elif m["kind"] in ("time", "fraction"):
             slot["value"] = min(slot["samples"])
         else:
             slot["value"] = max(slot["samples"])

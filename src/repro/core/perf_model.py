@@ -133,6 +133,17 @@ class RooflineTerms:
     # ``t_outofcore`` and report ``exposed_transfer_fraction``.
     t_host: float = 0.0
     host_bytes: float = 0.0
+    # The schedule these terms were priced under. ``overlap``: the halo
+    # runner's interior/edge schedule hides collectives under local
+    # work (overlap=False — ops.stencil_run(overlap=False) — runs
+    # exchange then compute back-to-back, so the collective is fully
+    # exposed). ``transfer_overlap``: the out-of-core runner's
+    # double-buffered loop hides host streaming under device compute
+    # (depth=1 serializes the phases, so the transfer is fully
+    # exposed). The exposed-fraction properties below account for the
+    # schedule actually chosen instead of assuming perfect overlap.
+    overlap: bool = True
+    transfer_overlap: bool = True
 
     @property
     def t_predicted(self) -> float:
@@ -162,29 +173,41 @@ class RooflineTerms:
 
     @property
     def t_outofcore(self) -> float:
-        """Modeled wall time of a double-buffered out-of-core run:
-        transfers overlap compute, so whichever side is slower sets the
-        pace — ``max(on-device roofline, host streaming)``."""
+        """Modeled wall time of an out-of-core run. Double-buffered
+        (``transfer_overlap=True``): transfers overlap compute, so
+        whichever side is slower sets the pace —
+        ``max(on-device roofline, host streaming)``. Serialized
+        (``depth=1``): the phases run back-to-back and simply add."""
+        if not self.transfer_overlap:
+            return self.t_predicted + self.t_host
         return max(self.t_predicted, self.t_host)
 
     @property
     def exposed_transfer_fraction(self) -> float:
         """Modeled fraction of run time spent in *exposed* (un-hidden)
-        host<->device streaming, assuming the double-buffered loop
-        overlaps transfers with on-device work perfectly: only the
-        excess of t_host over the on-device roofline shows. 0 for
-        in-core runs; -> 1 as the host link becomes the bottleneck."""
+        host<->device streaming, under the schedule actually chosen:
+        with the double-buffered overlap only the excess of t_host over
+        the on-device roofline shows; a serialized (``depth=1``) run
+        exposes the whole transfer. 0 for in-core runs; -> 1 as the
+        host link becomes the bottleneck."""
         t = self.t_outofcore
         if t == 0:
             return 0.0
+        if not self.transfer_overlap:
+            return self.t_host / t
         return max(0.0, self.t_host - self.t_predicted) / t
 
     @property
     def exposed_collective_fraction(self) -> float:
         """Modeled fraction of run time spent in *exposed* (un-hidden)
-        communication, assuming perfect overlap of collectives with the
-        local work (the halo runner's interior/edge schedule): only the
-        excess of t_collective over max(t_compute, t_memory) shows."""
+        communication, under the schedule actually chosen: with the
+        halo runner's interior/edge overlap only the excess of
+        t_collective over max(t_compute, t_memory) shows; an
+        ``overlap=False`` run (exchange, then compute, back-to-back)
+        exposes the whole collective."""
+        if not self.overlap:
+            wall = max(self.t_compute, self.t_memory) + self.t_collective
+            return 0.0 if wall == 0 else self.t_collective / wall
         t = self.t_predicted
         if t == 0:
             return 0.0
@@ -195,7 +218,7 @@ class RooflineTerms:
 def stencil_roofline(plan: BlockPlan, n_steps: int, tpu: TpuSpec = V5E,
                      chips: int = 1, read_amplification: float = 1.0,
                      halo_exchange: bool = False,
-                     batch: int = 1) -> RooflineTerms:
+                     batch: int = 1, overlap: bool = True) -> RooflineTerms:
     """Roofline terms for running ``n_steps`` of a stencil under ``plan``.
 
     ``halo_exchange``: when the grid is sharded over ``chips`` along its
@@ -212,6 +235,12 @@ def stencil_roofline(plan: BlockPlan, n_steps: int, tpu: TpuSpec = V5E,
     leading batch axis). The work terms scale by ``B``; the number of
     *launches* does not — that asymmetry is the modeled occupancy win
     (``RooflineTerms.device_busy_fraction``) batching buys small grids.
+
+    ``overlap``: whether the sharded runner's interior/edge schedule
+    (hide the exchange under interior compute) is in effect — rides on
+    the returned terms so ``exposed_collective_fraction`` models the
+    schedule actually chosen (``overlap=False`` exposes the whole
+    collective).
     """
     sweeps = plan.sweeps(n_steps)
     flops = batch * plan.flops_per_sweep() * sweeps
@@ -228,12 +257,14 @@ def stencil_roofline(plan: BlockPlan, n_steps: int, tpu: TpuSpec = V5E,
         t_memory=hbm / (chips * tpu.hbm_bw),
         t_collective=coll / tpu.ici_bw if coll else 0.0,
         flops=flops, hbm_bytes=hbm, collective_bytes=coll,
-        t_dispatch=sweeps * tpu.dispatch_overhead_s)
+        t_dispatch=sweeps * tpu.dispatch_overhead_s,
+        overlap=overlap)
 
 
 def outofcore_roofline(tile_plan: TilePlan, n_steps: int,
                        tpu: TpuSpec = V5E,
-                       read_amplification: float = 1.0) -> RooflineTerms:
+                       read_amplification: float = 1.0,
+                       transfer_overlap: bool = True) -> RooflineTerms:
     """Roofline terms for a host-streaming out-of-core run.
 
     On-device terms are the in-core ones (each slab runs the unchanged
@@ -247,6 +278,12 @@ def outofcore_roofline(tile_plan: TilePlan, n_steps: int,
     fraction. Raising ``bt`` cuts sweeps (fewer host passes) at the
     price of deeper ghosts; raising ``tile`` amortizes the ghost
     re-upload — the two knobs the budget-aware autotuner searches.
+
+    ``transfer_overlap``: whether the runner's double buffering
+    (``depth >= 2``) is in effect — rides on the returned terms so
+    ``t_outofcore``/``exposed_transfer_fraction`` model the schedule
+    actually chosen (``depth=1`` serializes upload/compute/readback
+    and exposes the whole transfer).
     """
     plan = BlockPlan(tile_plan.spec, tile_plan.grid_shape,
                      bx=tile_plan.bx, bt=tile_plan.bt,
@@ -272,7 +309,8 @@ def outofcore_roofline(tile_plan: TilePlan, n_steps: int,
                                flops=base.flops * amp,
                                hbm_bytes=base.hbm_bytes * amp,
                                t_host=host / tpu.host_bw,
-                               host_bytes=host, t_dispatch=t_disp)
+                               host_bytes=host, t_dispatch=t_disp,
+                               transfer_overlap=transfer_overlap)
 
 
 def predict_gcells_per_s(plan: BlockPlan, n_steps: int, tpu: TpuSpec = V5E,

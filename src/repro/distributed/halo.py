@@ -123,23 +123,40 @@ def _device_mesh(n_devices: int, devices=None) -> Mesh:
     return Mesh(np.array(devs[:n_devices]), (AXIS,))
 
 
-def exchange_halos(xs: jax.Array, h: int, n: int, axis_name: str = AXIS,
-                   ax: int = 0):
-    """ppermute the ``h``-deep boundary slices to both neighbors.
+def exchange_packed(send_top: jax.Array, send_bot: jax.Array, n: int,
+                    axis_name: str = AXIS):
+    """ppermute *already-packed* boundary strips to both neighbors.
 
-    Returns ``(from_above, from_below)``: the previous device's bottom
-    ``h`` slices and the next device's top ``h`` slices. Edge devices
-    receive zeros (ppermute's behavior for uncovered destinations) —
-    those rows sit outside the engine's validity interval, so the
-    boundary mode (zero / clamp) is what actually applies there.
-    ``ax``: the sharded axis within each array (1 for batched grids,
-    whose axis 0 is the batch riding along whole).
+    The collective half of ``exchange_halos``, split out so the strips
+    can come straight from the engine dispatch that computed them
+    (fused halo packing: ``_sweep(send_depth=...)`` carves the next
+    sweep's source strips from its own engine outputs, skipping the
+    slice off the re-assembled shard). ``send_top``/``send_bot`` are
+    this device's top/bottom strips; returns ``(from_above,
+    from_below)``: the previous device's bottom strip and the next
+    device's top strip. Edge devices receive zeros (ppermute's behavior
+    for uncovered destinations) — those rows sit outside the engine's
+    validity interval, so the boundary mode (zero / clamp) is what
+    actually applies there.
     """
     down = [(i, i + 1) for i in range(n - 1)]   # my bottom h -> next dev
     up = [(i, i - 1) for i in range(1, n)]      # my top h    -> prev dev
-    from_above = jax.lax.ppermute(_sl(xs, -h, None, ax), axis_name, down)
-    from_below = jax.lax.ppermute(_sl(xs, None, h, ax), axis_name, up)
+    from_above = jax.lax.ppermute(send_bot, axis_name, down)
+    from_below = jax.lax.ppermute(send_top, axis_name, up)
     return from_above, from_below
+
+
+def exchange_halos(xs: jax.Array, h: int, n: int, axis_name: str = AXIS,
+                   ax: int = 0):
+    """ppermute the ``h``-deep boundary slices of ``xs`` to both
+    neighbors — ``exchange_packed`` over strips sliced off the shard.
+
+    Returns ``(from_above, from_below)`` as above. ``ax``: the sharded
+    axis within each array (1 for batched grids, whose axis 0 is the
+    batch riding along whole).
+    """
+    return exchange_packed(_sl(xs, None, h, ax), _sl(xs, -h, None, ax),
+                           n, axis_name)
 
 
 def _engine_call(slab, specs, bx, bts, variant, interpret, extras, scals,
@@ -160,7 +177,8 @@ def _engine_call(slab, specs, bx, bts, variant, interpret, extras, scals,
 
 
 def _sweep(xs, specs, *, bx, bts, variant, interpret, idx, n, S, extent,
-           overlap, axis_name, extras, scals, ax=0):
+           overlap, axis_name, extras, scals, ax=0, halos=None,
+           send_depth=None):
     """One blocked sweep (``bts`` fused steps of the ``specs`` group)
     on this device's shard.
 
@@ -175,6 +193,18 @@ def _sweep(xs, specs, *, bx, bts, variant, interpret, idx, n, S, extent,
     grids, 1 for ``[B, *grid]`` batches (the validity interval the
     engine receives is about the *grid* leading axis either way, which
     is exactly axis ``ax``).
+
+    ``halos``: this sweep's ``(from_above, from_below)`` at depth
+    ``h = bts * sum(radius)``, already exchanged by the caller; when
+    None the sweep issues its own ``exchange_halos`` (the program
+    runner's mode). ``send_depth``: fused halo packing — when not
+    None, also return the ``send_depth``-deep top/bottom strips of the
+    *updated* shard, carved directly from the engine outputs that
+    produced the edges (no slice off the re-assembled shard), so the
+    caller can ``exchange_packed`` them for the next sweep. Requires
+    ``send_depth <= h`` (the schedule is non-increasing, so the next
+    sweep's depth always qualifies). Returns ``out`` when
+    ``send_depth`` is None, else ``(out, (send_top, send_bot))``.
     """
     h = bts * sum(sp.radius for sp in specs)
     row0 = idx * S                    # global coordinate of shard row 0
@@ -190,17 +220,25 @@ def _sweep(xs, specs, *, bx, bts, variant, interpret, idx, n, S, extent,
         return out
 
     if not (overlap and S >= 2 * h):
-        fa, fb = exchange_halos(xs, h, n, axis_name, ax)
+        fa, fb = (exchange_halos(xs, h, n, axis_name, ax)
+                  if halos is None else halos)
         slab = jnp.concatenate([fa, xs, fb], axis=ax)
         lo = jnp.clip(h - row0, 0, S + 2 * h)
         hi = jnp.clip(extent - row0 + h, 0, S + 2 * h)
         out = _engine_call(slab, specs, bx, bts, variant, interpret,
                            slabs(0, S + 2 * h), scals, lo, hi)
-        return _sl(out, h, h + S, ax)
+        if send_depth is None:
+            return _sl(out, h, h + S, ax)
+        # Slab output rows [h, h+S) are the owned shard; its top/bottom
+        # send_depth rows come straight off the engine output.
+        return _sl(out, h, h + S, ax), (
+            _sl(out, h, h + send_depth, ax),
+            _sl(out, h + S - send_depth, h + S, ax))
 
     # Overlapped schedule: kick off the halo ppermutes, compute the
     # interior (independent of them), then finish the two edge strips.
-    fa, fb = exchange_halos(xs, h, n, axis_name, ax)
+    fa, fb = (exchange_halos(xs, h, n, axis_name, ax)
+              if halos is None else halos)
     if S > 2 * h:      # interior rows [h, S-h) need no halo at all
         hi_own = jnp.clip(extent - row0, 0, S)
         interior = [_sl(_engine_call(
@@ -215,15 +253,25 @@ def _sweep(xs, specs, *, bx, bts, variant, interpret, idx, n, S, extent,
                             axis=ax)                      # rows [S-2h, S+h)
     lo_t = jnp.clip(h - row0, 0, 3 * h)
     hi_t = jnp.clip(extent - row0 + h, 0, 3 * h)
-    top = _sl(_engine_call(tslab, specs, bx, bts, variant, interpret,
-                           slabs(0, 3 * h), scals, lo_t, hi_t),
-              h, 2 * h, ax)
+    top_out = _engine_call(tslab, specs, bx, bts, variant, interpret,
+                           slabs(0, 3 * h), scals, lo_t, hi_t)
+    top = _sl(top_out, h, 2 * h, ax)
     lo_b = jnp.clip(2 * h - row0 - S, 0, 3 * h)
     hi_b = jnp.clip(extent - row0 - S + 2 * h, 0, 3 * h)
-    bot = _sl(_engine_call(bslab, specs, bx, bts, variant, interpret,
-                           slabs(S - h, S + 2 * h), scals, lo_b, hi_b),
-              h, 2 * h, ax)
-    return jnp.concatenate([top] + interior + [bot], axis=ax)
+    bot_out = _engine_call(bslab, specs, bx, bts, variant, interpret,
+                           slabs(S - h, S + 2 * h), scals, lo_b, hi_b)
+    bot = _sl(bot_out, h, 2 * h, ax)
+    out = jnp.concatenate([top] + interior + [bot], axis=ax)
+    if send_depth is None:
+        return out
+    # The top edge dispatch's output rows [h, 2h) are owned shard rows
+    # [0, h), so the next sweep's send_top is its rows [h, h+d); the
+    # bottom dispatch's rows [h, 2h) are shard rows [S-h, S), so
+    # send_bot is its rows [2h-d, 2h). Both ppermutes can therefore
+    # start the moment the edge strips finish — before the shard is
+    # even re-assembled — and hide under the next interior compute.
+    return out, (_sl(top_out, h, h + send_depth, ax),
+                 _sl(bot_out, 2 * h - send_depth, 2 * h, ax))
 
 
 def stencil_run_sharded(x: jax.Array, spec: StencilSpec, n_steps: int, *,
@@ -400,14 +448,26 @@ def _sharded_runner(spec, mesh, *, key, h_max, schedule, bx, variant,
             for name, es in zip(extra_names, shards):
                 ea, eb = exchange_halos(es, h_max, n, axis_name, ga)
                 extras.append((name, ea, eb, es))
+            # Fused halo packing: only the first exchange slices the
+            # input shard. Every later sweep receives strips carved by
+            # the previous sweep from its own engine outputs
+            # (send_depth), valid because the schedule's depths are
+            # non-increasing (the remainder sweep comes last).
+            hs = [bts * spec.radius for bts in schedule]
+            fa, fb = exchange_halos(xs, hs[0], n, axis_name, ga)
             off = 0
-            for bts in schedule:
-                xs = _sweep(xs, (spec,), bx=bx, bts=bts, variant=variant,
-                            interpret=interpret, idx=idx, n=n, S=S,
-                            extent=extent, overlap=overlap,
-                            axis_name=axis_name, extras=extras,
-                            scals=((_tsl(scal, off, off + bts),)
-                                   if scal is not None else None), ax=ga)
+            for t, bts in enumerate(schedule):
+                h_next = hs[t + 1] if t + 1 < len(schedule) else 0
+                xs, (st, sb) = _sweep(
+                    xs, (spec,), bx=bx, bts=bts, variant=variant,
+                    interpret=interpret, idx=idx, n=n, S=S,
+                    extent=extent, overlap=overlap,
+                    axis_name=axis_name, extras=extras,
+                    scals=((_tsl(scal, off, off + bts),)
+                           if scal is not None else None), ax=ga,
+                    halos=(fa, fb), send_depth=h_next)
+                if h_next:
+                    fa, fb = exchange_packed(st, sb, n, axis_name)
                 off += bts
             return xs
 
@@ -629,6 +689,11 @@ def _program_sharded_runner(program, mesh, *, key, group_meta, h_max,
                 ea, eb = exchange_halos(ins[nm], h_max, n, axis_name, 0)
                 ins_ex[nm] = (ea, eb, ins[nm])
             off = 0
+            # Each dispatch still exchanges at its own depth (halos=
+            # None): consecutive groups update *different* fields, so
+            # packed strips from group k's output are not the strips
+            # group k+1 needs. Threading packs across same-field
+            # dispatches of successive sweeps is future work.
             for bts in schedule:
                 for specs, fld, aux_names, scal_keys, g_r in group_meta:
                     h = bts * g_r

@@ -51,7 +51,12 @@ from repro.core.stencil import StencilSpec
 
 _LOG = logging.getLogger("repro.autotune")
 
-_CACHE_VERSION = 7   # v7: the device spec defaults per *backend*
+_CACHE_VERSION = 8   # v8: the out-of-core pipeline mode joins the key
+# (|pl{host|kernel}) — the persistent in-kernel DMA pipeline
+# (engine.stencil_call_persistent) amortizes dispatches over whole
+# chunks, so its winning (bx, bt, tile) need not match the host loop's
+# and the two modes must never share entries.
+# v7: the device spec defaults per *backend*
 # (``perf_model.device_spec_for``: pallas→V5E, interpret/reference→
 # CPU_HOST, gpu→GPU_GENERIC) instead of V5E everywhere, so the spec
 # name the key carries — and the ranking behind each winner — changed
@@ -192,7 +197,8 @@ def clear_cache() -> None:
 def _key(spec, shape, dtype: str, backend: str,
          vmem_budget: int, tpu_name: str, n_devices: int = 1,
          batch: int = 1, hbm_budget: int | None = None,
-         extra_streams: int = 0, head: str | None = None) -> str:
+         extra_streams: int = 0, head: str | None = None,
+         pipeline: str = "host") -> str:
     sh = "x".join(str(s) for s in shape)
     # IR fields: boundary mode and tap layout change the kernel's work
     # per cell; the aux-operand signature and per-step scalar count
@@ -209,7 +215,10 @@ def _key(spec, shape, dtype: str, backend: str,
     # aux signature rather than growing the schema another field.
     # ``head`` overrides the leading name field — StencilPrograms pass
     # their ``cache_token()`` (per-sweep name/field/spec fields), the
-    # v6 schema extension.
+    # v6 schema extension. ``pipeline`` is the out-of-core streaming
+    # mode the plan will run under (|pl{mode}, v8): the in-kernel DMA
+    # pipeline amortizes dispatches over whole chunks, so its winner
+    # must never answer for the host loop or vice versa.
     aux_sig = ",".join([op.role[0] for op in spec.aux]
                        + ["s"] * extra_streams) or "-"
     ir = (f"b{spec.boundary}|L{spec.layout}|ax{aux_sig}|"
@@ -217,7 +226,8 @@ def _key(spec, shape, dtype: str, backend: str,
     name = head if head is not None else spec.name
     return (f"{name}|d{spec.dims}|r{spec.radius}|{ir}|{sh}|{dtype}|"
             f"{backend}|vm{vmem_budget}|{tpu_name}|B{batch}|"
-            f"nd{n_devices}|hb{'-' if hbm_budget is None else hbm_budget}")
+            f"nd{n_devices}|hb{'-' if hbm_budget is None else hbm_budget}"
+            f"|pl{pipeline}")
 
 
 # ---------------------------------------------------------------------------
@@ -234,7 +244,7 @@ def _variants_for(spec: StencilSpec, backend: str) -> tuple[str, ...]:
 def _measure(x, spec, plans, variants, backend, timer,
              repeats: int = 2, n_devices: int = 1,
              hbm_budget: int | None = None, extra_streams: int = 0,
-             program=None):
+             program=None, pipeline: str = "host"):
     """Time each (plan, variant); return (winner, winner_variant,
     {(bx, bt): best seconds-per-step}). With ``n_devices > 1`` each
     candidate is one sweep of the sharded deep-halo runner (collective
@@ -277,7 +287,8 @@ def _measure(x, spec, plans, variants, backend, timer,
                 return jax.block_until_ready(ops.stencil_run(
                     x, spec, p.bt, bx=p.bx, bt=p.bt, backend=backend,
                     variant=v, source=src, aux=aux, scalars=scal,
-                    n_devices=n_devices, hbm_budget=hbm_budget))
+                    n_devices=n_devices, hbm_budget=hbm_budget,
+                    pipeline=pipeline))
             try:
                 run()  # warm-up / compile
             except Exception:   # noqa: BLE001 - an illegal candidate
@@ -300,7 +311,7 @@ def plan(shape, spec, *, dtype="float32",
          measure: bool | None = None, use_cache: bool = True,
          vmem_budget: int | None = None, tpu: TpuSpec | None = None,
          n_devices: int = 1, hbm_budget: int | None = None,
-         extra_streams: int = 0,
+         extra_streams: int = 0, pipeline: str = "host",
          timer: Callable[[], float] = time.perf_counter) -> TunedPlan:
     """Resolve the best (bx, bt, variant) for one stencil problem.
 
@@ -392,9 +403,13 @@ def plan(shape, spec, *, dtype="float32",
     # plan(hbm_budget=tpu.hbm_bytes) are the same problem and must hit
     # the same entry — and an entry's meaning must not silently shift
     # if a TpuSpec's default HBM is ever revised.
+    if pipeline not in ("host", "kernel"):
+        raise ValueError(f"pipeline must be 'host' or 'kernel', got "
+                         f"{pipeline!r}")
     key = _key(spec, grid, dtype, backend, budget, tpu.name, n_devices,
                batch or 1, hbm, extra_streams,
-               head=None if program is None else program.cache_token())
+               head=None if program is None else program.cache_token(),
+               pipeline=pipeline)
 
     def _mk(bx, bt, variant, source, timings=None, tile=None):
         bp = BlockPlan(spec, grid, bx=bx, bt=bt, itemsize=itemsize)
@@ -488,7 +503,8 @@ def plan(shape, spec, *, dtype="float32",
         winner, w_variant, timings = _measure(
             x, spec, shortlist, variants, backend, timer,
             n_devices=n_devices, hbm_budget=hbm,
-            extra_streams=extra_streams, program=program)
+            extra_streams=extra_streams, program=program,
+            pipeline=pipeline)
         if winner is not None:
             tuned = _mk(winner.bx, winner.bt, w_variant, "measured",
                         timings, tile=_tile_of(winner))

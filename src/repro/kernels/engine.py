@@ -71,13 +71,14 @@ docs/stencil_ir.md).
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 
 from repro import compat
 from repro.compat import pl, pltpu
-from repro.core.blocking import BlockPlan
+from repro.core.blocking import _SUBLANE, BlockPlan, round_up
 from repro.core.stencil import StencilSpec
 
 VARIANTS_2D = ("revolving", "multioperand")
@@ -601,6 +602,372 @@ def _run_3d(x, specs, plan: BlockPlan, bx, bt, variant, backend, sources,
         interpret=interpret,
     )(*((lim, xp, xp, xp, sp, sp, sp) if has_src else (lim, xp, xp, xp)))
     return out[..., :true_d, :true_h, :true_w]
+
+
+# ---------------------------------------------------------------------------
+# Persistent out-of-core kernel: the in-kernel DMA pipeline.
+#
+# The host-loop pipeline (outofcore/runner.py) overlaps transfers at the
+# Python level — ``jax.device_put`` per tile, ``depth`` dispatches in
+# flight. This path moves the streaming one level down, the way the FPGA
+# designs chain PEs through shift registers (thesis §5.3, arXiv
+# 2002.05983): ONE ``pallas_call`` per chunk keeps the chunk slab in HBM
+# (``memory_space=ANY``) and DMAs each leading-axis tile's slab HBM→VMEM
+# *inside* the kernel, double-buffered, so tile ``i+1``'s load runs
+# under tile ``i``'s fused-step compute with no Python round-trip.
+#
+# Bitwise contract: the in-VMEM slab compute below re-applies the exact
+# per-cell expression sequence of the in-core kernels — the same
+# ``boundary_fill`` / ``fused_steps`` / plugin applies on the same tap
+# values — and slab geometry follows the host-loop runner's clipped-slab
+# cone argument (a fixed ``tile + 2*ghost`` DMA window at a clamped
+# offset only ever *widens* a slab with real chunk rows, which the crop's
+# dependency cone never distinguishes from the host loop's clipped
+# slab). ``tests/test_pipelining.py`` pins the equality across
+# radius × dims × bt × boundary.
+#
+# Capability gating mirrors ``variants_for``: the Triton lowering has no
+# ``make_async_copy``/ANY-space refs, so ``gpu`` always falls back to
+# the host loop; interpret mode is probed once per process (jax's
+# interpreter has grown DMA support — where present this path runs for
+# real on CPU CI, otherwise it degrades to the host loop with a recorded
+# reason).
+# ---------------------------------------------------------------------------
+
+_KERNEL_PIPELINE_PROBE: dict = {}
+
+
+def _probe_kernel_dma() -> tuple:
+    """Try a minimal ANY→VMEM→ANY async-copy kernel under interpret."""
+    try:
+        def kern(x_hbm, o_hbm, buf, sem_in, sem_out):
+            cin = pltpu.make_async_copy(x_hbm.at[pl.ds(0, 4)], buf,
+                                        sem_in)
+            cin.start()
+            cin.wait()
+            cout = pltpu.make_async_copy(buf, o_hbm.at[pl.ds(0, 4)],
+                                         sem_out)
+            cout.start()
+            cout.wait()
+
+        x = jnp.arange(4 * 128, dtype=jnp.float32).reshape(4, 128)
+        out = pl.pallas_call(
+            kern,
+            grid=(1,),
+            in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],
+            out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
+            out_shape=jax.ShapeDtypeStruct((4, 128), jnp.float32),
+            scratch_shapes=[pltpu.VMEM((4, 128), jnp.float32),
+                            pltpu.SemaphoreType.DMA,
+                            pltpu.SemaphoreType.DMA],
+            compiler_params=compat.compiler_params_for("interpret", 1),
+            interpret=True,
+        )(x)
+        if not bool(jnp.array_equal(out, x)):
+            return False, "interpret-mode DMA probe returned wrong values"
+        return True, ""
+    except Exception as e:                      # noqa: BLE001 - gate, not crash
+        return False, (f"interpret-mode DMA probe failed: "
+                       f"{type(e).__name__}: {e}")
+
+
+def kernel_pipeline_available(backend: str) -> tuple:
+    """(available, reason) for the in-kernel DMA pipeline on ``backend``.
+
+    ``variants_for``-style capability gate: ``gpu`` is never available
+    (Triton offers no manual DMA / ANY-space refs), ``pallas`` (real
+    TPU) always is, and ``interpret`` is probed once per process.
+    ``REPRO_DISABLE_KERNEL_PIPELINE=1`` force-disables it everywhere
+    (kill switch for triage; the host loop is always correct).
+    """
+    if os.environ.get("REPRO_DISABLE_KERNEL_PIPELINE"):
+        return False, "disabled via REPRO_DISABLE_KERNEL_PIPELINE"
+    if backend == "gpu":
+        return False, ("the Triton lowering has no make_async_copy / "
+                       "ANY-memory-space refs — host-loop pipeline only "
+                       "(docs/portability.md)")
+    if backend == "pallas":
+        return True, ""
+    got = _KERNEL_PIPELINE_PROBE.get("interpret")
+    if got is None:
+        got = _probe_kernel_dma()
+        _KERNEL_PIPELINE_PROBE["interpret"] = got
+    return got
+
+
+def kernel_pipeline_supported(spec: StencilSpec, *, backend: str,
+                              batched: bool = False,
+                              has_source: bool = False,
+                              has_aux: bool = False,
+                              has_scalars: bool = False) -> tuple:
+    """(supported, reason) for running THIS problem through the
+    persistent kernel. Geometry is always representable (the DMA window
+    clamps into the chunk), so the gates are backend capability plus the
+    operand forms the in-kernel compute does not stream yet."""
+    ok, why = kernel_pipeline_available(backend)
+    if not ok:
+        return False, why
+    if spec.dims not in (2, 3):
+        return False, f"spec.dims must be 2 or 3, got {spec.dims}"
+    if batched:
+        return False, ("batched grids ride the host-loop pipeline (the "
+                       "whole batch travels on every slab)")
+    if has_source or has_aux or has_scalars:
+        return False, ("aux/source/scalars operands stream per-slab on "
+                       "the host-loop pipeline only")
+    return True, ""
+
+
+def _slab_compute_2d(buf, row_lo, row_hi, *, spec, bx, bt, true_w,
+                     apply_fn):
+    """One fused block over a resident (rows, nt*bx) 2D slab.
+
+    Structured to trace exactly like the interpret lowering of the
+    multioperand kernel's grid — rows padded to the sublane tile, a
+    ``fori_loop`` over x tiles with a *traced* tile index,
+    ``dynamic_slice`` block reads (interpret mode scans the grid as one
+    loop), and *traced* row limits (the in-core kernel reads them from
+    the loop-carried ``lim`` operand) — so XLA makes the same fusion
+    (hence fma-contraction) decisions and the values stay bitwise equal
+    to the in-core engine, not just 1-ulp close.
+    """
+    rows_in, wp = buf.shape
+    hp = round_up(rows_in, _SUBLANE[buf.dtype.itemsize])
+    buf = jnp.pad(buf, ((0, hp - rows_in), (0, 0)))
+    nt = wp // bx
+    halo = bt * spec.radius
+
+    def tbody(j, out):
+        starts = (jnp.maximum(j - 1, 0) * bx, j * bx,
+                  jnp.minimum(j + 1, nt - 1) * bx)
+        cat = jnp.concatenate(
+            [jax.lax.dynamic_slice(buf, (0, s), (hp, bx))
+             for s in starts], axis=1)
+        win = cat[:, bx - halo: 2 * bx + halo]
+
+        def fill(w):
+            return boundary_fill(w, spec.boundary, j, bx, halo, true_w,
+                                 row_lo, row_hi)
+
+        win = fused_steps(win, (spec,), bt, (apply_fn,), [fill])
+        return jax.lax.dynamic_update_slice(
+            out, win[:, halo: halo + bx], (0, j * bx))
+
+    out = jax.lax.fori_loop(0, nt, tbody, jnp.zeros((hp, wp), buf.dtype))
+    return out[:rows_in]
+
+
+def _slab_compute_3d(buf, d_lo, d_hi, *, spec, bx, bt, true_w, apply_fn):
+    """One fused block over a resident (d, rows, nt*bx) 3D slab: the
+    z-streaming plane pipeline of ``_kernel_3d_stream``, run as one
+    ``fori_loop`` over the flattened (x tile, z step) grid with the
+    rolling stage windows in the carry — the same per-plane ops the
+    interpret lowering discharges the in-core kernel to (rows padded to
+    the sublane tile, traced tile/z indices and z limits, elementwise
+    ``.at`` roll writes), which keeps the values bitwise equal to the
+    in-core engine."""
+    d, rows_in, wp = buf.shape
+    hp = round_up(rows_in, _SUBLANE[buf.dtype.itemsize])
+    buf = jnp.pad(buf, ((0, 0), (0, hp - rows_in), (0, 0)))
+    nt = wp // bx
+    r = spec.radius
+    fill_d = bt * r
+    clamp = spec.boundary == "clamp"
+    kmax = d + fill_d
+
+    def body(idx, carry):
+        win, out = carry
+        i = idx // kmax
+        k = idx - i * kmax
+        # Fresh pipeline per x tile: the in-core kernel re-zeros its
+        # rolling scratch at k == 0 (pl.when discharges to a select).
+        win = jnp.where(k == 0, jnp.zeros_like(win), win)
+        kc = jnp.minimum(k, d - 1)
+        starts = (jnp.maximum(i - 1, 0) * bx, i * bx,
+                  jnp.minimum(i + 1, nt - 1) * bx)
+        cat = jnp.concatenate(
+            [jax.lax.dynamic_slice(buf, (kc, 0, s), (1, hp, bx))[0]
+             for s in starts], axis=1)
+        plane = cat[:, bx - fill_d: 2 * bx + fill_d]
+        # In-plane bounds are static (y/x are never streamed), exactly
+        # as in _kernel_3d_stream; only the z interval is traced.
+        xymask = window_mask(i, bx, fill_d, hp, true_w, 0, rows_in)
+        zero = jnp.zeros_like(plane)
+        zin = (k >= d_lo) & (k < d_hi)
+
+        def fill_xy(p):
+            return boundary_fill(p, spec.boundary, i, bx, fill_d,
+                                 true_w, 0, rows_in)
+
+        if clamp:
+            plane = fill_xy(plane)
+        else:
+            plane = jnp.where(xymask & zin, plane, zero)
+        for s in range(bt):
+            for j2 in range(2 * r):
+                win = win.at[s, j2].set(win[s, j2 + 1])
+            win = win.at[s, 2 * r].set(plane)
+            z_out = k - (s + 1) * r
+            stage_win = win[s]
+            if clamp:
+                stage_win = _z_clamped_window(stage_win, z_out, d_lo,
+                                              d_hi, r)
+            updated = apply_fn(stage_win, spec, None, None)
+            if clamp:
+                plane = fill_xy(updated)
+            else:
+                plane = jnp.where(
+                    xymask & (z_out >= d_lo) & (z_out < d_hi),
+                    updated, zero)
+        out = jax.lax.dynamic_update_slice(
+            out, plane[None, :, fill_d: fill_d + bx],
+            (jnp.maximum(k - fill_d, 0), 0, i * bx))
+        return win, out
+
+    win0 = jnp.zeros((bt, 2 * r + 1, hp, bx + 2 * fill_d), buf.dtype)
+    out0 = jnp.zeros((d, hp, wp), buf.dtype)
+    _, out = jax.lax.fori_loop(0, nt * kmax, body, (win0, out0))
+    return out[:, :rows_in]
+
+
+def _kernel_persistent(lim_ref, x_hbm, o_hbm, in_buf, out_buf, in_sems,
+                       out_sem, *, compute, tile, g, lead, owned,
+                       chunk_len, dma_len, out_dma, n_inner):
+    """Grid step ``i`` computes tile ``i`` of the chunk; the DMA for
+    tile ``i+1``'s slab is started *before* waiting on tile ``i``'s, so
+    it lands under tile ``i``'s fused-step compute. Slot parity is kept
+    static (two ``pl.when`` arms) so reads/waits never index a buffer
+    with a traced slot."""
+    i = pl.program_id(0)
+
+    def in_off(t):
+        # Fixed-size DMA window (pl.ds needs a static size) at a
+        # clamped offset: edge tiles widen into real chunk rows, which
+        # the crop's dependency cone cannot distinguish from the host
+        # loop's clipped slab.
+        return jnp.clip(lead + t * tile - g, 0, chunk_len - dma_len)
+
+    def copy_in(t, slot):
+        return pltpu.make_async_copy(
+            x_hbm.at[pl.ds(in_off(t), dma_len)], in_buf.at[slot],
+            in_sems.at[slot])
+
+    @pl.when(i == 0)
+    def _start_first():
+        copy_in(0, 0).start()
+
+    @pl.when((i + 1 < n_inner) & ((i + 1) % 2 == 0))
+    def _prefetch_even():
+        copy_in(i + 1, 0).start()
+
+    @pl.when((i + 1 < n_inner) & ((i + 1) % 2 == 1))
+    def _prefetch_odd():
+        copy_in(i + 1, 1).start()
+
+    @pl.when(i % 2 == 0)
+    def _wait_even():
+        copy_in(i, 0).wait()
+
+    @pl.when(i % 2 == 1)
+    def _wait_odd():
+        copy_in(i, 1).wait()
+
+    # The inactive slot may be mid-DMA; its values are select-discarded.
+    buf = jnp.where(i % 2 == 0, in_buf[0], in_buf[1])
+    res = compute(buf, lim_ref[0, 0], lim_ref[0, 1])
+    # Fixed-size out-DMA with the same clamp trick: a remainder tile
+    # re-writes rows the previous tile already wrote — bitwise the same
+    # values (both copies are >= ghost from any artificial slab edge).
+    ot = jnp.clip(i * tile, 0, owned - out_dma)
+    out_buf[...] = jax.lax.dynamic_slice_in_dim(
+        res, (lead + ot) - in_off(i), out_dma, 0)
+    cp = pltpu.make_async_copy(out_buf, o_hbm.at[pl.ds(ot, out_dma)],
+                               out_sem)
+    cp.start()
+    cp.wait()
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("spec", "bx", "bt", "tile", "lead",
+                                    "owned", "backend", "apply_fn"))
+def stencil_call_persistent(chunk: jax.Array, spec: StencilSpec, *,
+                            bx: int, bt: int, tile: int, lead: int,
+                            owned: int, backend: str = "interpret",
+                            apply_fn=None) -> jax.Array:
+    """``bt`` fused steps over a device-resident chunk slab, streamed
+    tile-by-tile through VMEM by the persistent in-kernel DMA pipeline.
+
+    ``chunk`` is the chunk's clipped slab (leading-axis rows
+    ``[c0 - ghost, c1 + ghost)`` clipped to the grid, like one big
+    host-loop slab); ``lead`` is the number of ghost rows before the
+    first owned row (0 when the chunk starts at the true grid edge),
+    ``owned`` the number of owned rows, and ``tile`` the in-kernel tile
+    extent. Returns the ``(owned, ...)`` computed rows. Gate with
+    :func:`kernel_pipeline_supported` first — this entry validates but
+    does not fall back.
+    """
+    if backend not in ("interpret", "pallas"):
+        raise ValueError(
+            f"stencil_call_persistent supports backends ('interpret', "
+            f"'pallas'), got {backend!r} — gate with "
+            f"kernel_pipeline_supported and fall back to the host loop")
+    dims = spec.dims
+    if chunk.ndim != dims:
+        raise ValueError(f"chunk rank {chunk.ndim} != spec.dims {dims} "
+                         f"(the persistent kernel is unbatched)")
+    g = bt * spec.radius
+    if g > bx:
+        raise ValueError(f"fused halo {g} (bt={bt} x radius "
+                         f"{spec.radius}) exceeds the tile width bx={bx}")
+    chunk_len = chunk.shape[0]
+    if not 1 <= tile <= chunk_len:
+        raise ValueError(f"tile must be in [1, {chunk_len}], got {tile}")
+    if not (0 <= lead and 1 <= owned and lead + owned <= chunk_len):
+        raise ValueError(f"invalid chunk geometry: lead={lead} "
+                         f"owned={owned} chunk_len={chunk_len}")
+    interpret = backend == "interpret"
+    dma_len = min(tile + 2 * g, chunk_len)
+    out_dma = min(tile, owned)
+    n_inner = -(-owned // tile)
+    true_w = chunk.shape[-1]
+    nt = -(-true_w // bx)
+    wp = nt * bx
+    pad = ((0, 0),) * (dims - 1) + ((0, wp - true_w),)
+    xp = jnp.pad(chunk, pad)
+    if apply_fn is None:
+        if dims == 2:
+            from repro.kernels.stencil2d import _apply_2d as apply_fn
+        else:
+            from repro.kernels.stencil3d import _apply_3d as apply_fn
+    slab_compute = _slab_compute_2d if dims == 2 else _slab_compute_3d
+    compute = functools.partial(slab_compute, spec=spec, bx=bx, bt=bt,
+                                true_w=true_w, apply_fn=apply_fn)
+    kern = functools.partial(
+        _kernel_persistent, compute=compute, tile=tile, g=g, lead=lead,
+        owned=owned, chunk_len=chunk_len, dma_len=dma_len,
+        out_dma=out_dma, n_inner=n_inner)
+    # Every DMA'd slab is dma_len real (clipped) leading-axis rows; the
+    # limits ride in a loop-carried operand so they reach the slab
+    # compute *traced*, exactly as the in-core kernels read them.
+    lim = _limits(None, None, dma_len)
+    out = pl.pallas_call(
+        kern,
+        grid=(n_inner,),
+        in_specs=[pl.BlockSpec((1, 2), lambda i: (0, 0)),
+                  pl.BlockSpec(memory_space=pltpu.ANY)],
+        out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
+        out_shape=jax.ShapeDtypeStruct((owned,) + xp.shape[1:],
+                                       xp.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((2, dma_len) + xp.shape[1:], xp.dtype),
+            pltpu.VMEM((out_dma,) + xp.shape[1:], xp.dtype),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA,
+        ],
+        compiler_params=compat.compiler_params_for(backend, 1),
+        interpret=interpret,
+    )(lim, xp)
+    return out[..., :true_w]
 
 
 @functools.partial(jax.jit,

@@ -186,7 +186,8 @@ def _tslice(scalars, a: int, b: int):
 
 def resolve_blocking(x, spec, bx=None, bt=None, variant=None,
                      backend="interpret", n_steps=None, n_devices=1,
-                     hbm_budget=None, extra_streams=0):
+                     hbm_budget=None, extra_streams=0,
+                     pipeline="host"):
     """Fill any None among (bx, bt, variant) from the autotuner.
 
     The **public resolve-once entry point**: apps and benchmarks that
@@ -210,7 +211,7 @@ def resolve_blocking(x, spec, bx=None, bt=None, variant=None,
     from repro.kernels import autotune
     tuned = autotune.plan(x.shape, spec, dtype=x.dtype, backend=backend,
                           n_devices=n_devices, hbm_budget=hbm_budget,
-                          extra_streams=extra_streams,
+                          extra_streams=extra_streams, pipeline=pipeline,
                           **({} if n_steps is None
                              else {"n_steps": n_steps}))
     return (bx if bx is not None else tuned.bx,
@@ -275,7 +276,8 @@ def stencil_run(x: jax.Array, spec: StencilSpec, n_steps: int,
                 scalars: jax.Array | None = None,
                 n_devices: int | None = None, devices=None,
                 overlap: bool = True,
-                hbm_budget: int | None = None) -> jax.Array:
+                hbm_budget: int | None = None,
+                pipeline: str = "host") -> jax.Array:
     """``n_steps`` total time steps as ceil(n/bt) blocked sweeps.
 
     The trailing partial sweep runs with the remainder temporal degree so
@@ -300,7 +302,10 @@ def stencil_run(x: jax.Array, spec: StencilSpec, n_steps: int,
     explicit ``hbm_budget`` to force the route for testing. Combining
     with ``n_devices > 1`` is deferred and raises loudly; the
     ``reference`` backend ignores the budget (the oracle already runs
-    on the host).
+    on the host). ``pipeline`` selects the out-of-core streaming mode
+    (``"host"`` Python-loop double buffering, or ``"kernel"`` for the
+    persistent in-kernel DMA pipeline with automatic host fallback —
+    see docs/pipelining.md); it is ignored on in-core runs.
     """
     backend = _resolve(backend)
     nd = 1 if n_devices is None else n_devices
@@ -308,7 +313,7 @@ def stencil_run(x: jax.Array, spec: StencilSpec, n_steps: int,
     bx, bt, variant = resolve_blocking(
         x, spec, bx, bt, variant, backend, n_steps=n_steps,
         n_devices=nd, hbm_budget=hbm_budget,
-        extra_streams=int(source is not None))
+        extra_streams=int(source is not None), pipeline=pipeline)
     bt = min(bt, n_steps) if n_steps else bt
     if backend != "reference":
         from repro.outofcore import route_decision
@@ -328,7 +333,8 @@ def stencil_run(x: jax.Array, spec: StencilSpec, n_steps: int,
             return stencil_run_outofcore(
                 x, spec, n_steps, bx=bx, bt=bt, variant=variant,
                 backend=backend, hbm_budget=budget,
-                source=source, aux=aux, scalars=scalars)
+                source=source, aux=aux, scalars=scalars,
+                pipeline=pipeline)
     if scalars is not None:
         import jax.numpy as jnp
         scalars = jnp.asarray(scalars, jnp.float32)

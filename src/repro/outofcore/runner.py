@@ -70,6 +70,7 @@ rather than guessing at a host-side partition of the device mesh (see
 """
 from __future__ import annotations
 
+import time
 from collections import OrderedDict, deque
 from typing import Optional, Tuple
 
@@ -207,7 +208,8 @@ def stencil_run_outofcore(x, spec: StencilSpec, n_steps: int, *,
                           tile: int | None = None,
                           hbm_budget: int | None = None,
                           source=None, aux=None, scalars=None,
-                          depth: int = 2) -> np.ndarray:
+                          depth: int = 2, pipeline: str = "host",
+                          metrics: dict | None = None) -> np.ndarray:
     """``n_steps`` stencil steps with the grid resident on the *host*.
 
     The grid (and every operand) lives in host memory; the device only
@@ -218,9 +220,31 @@ def stencil_run_outofcore(x, spec: StencilSpec, n_steps: int, *,
     working set fits). Returns a **host** (numpy) array — the result
     may not fit on the device either.
 
+    ``pipeline`` selects where the tile streaming happens (see
+    docs/pipelining.md):
+
+    * ``"host"`` (default) — the Python loop above: one engine dispatch
+      per tile, ``jax.device_put`` double buffering at ``depth``.
+    * ``"kernel"`` — tiles are grouped into device-sized *chunks* and
+      each chunk runs as ONE persistent ``pallas_call``
+      (``engine.stencil_call_persistent``) that DMAs tile slabs
+      HBM→VMEM inside the kernel, double-buffered, so tile ``i+1``'s
+      load overlaps tile ``i``'s fused-step compute without a Python
+      round-trip. Falls back to ``"host"`` (with the reason recorded
+      in ``metrics``) when ``engine.kernel_pipeline_supported`` says
+      the backend or operand form cannot take it.
+
+    ``metrics``, when a dict is passed, is filled in place with a
+    per-run breakdown: the pipeline actually used (+ requested form and
+    fallback reason), tile/chunk geometry, dispatch counts, ``wall_s``,
+    and — at ``depth <= 1``, where phases are serialized so the split
+    is attributable — ``upload_s`` / ``compute_s`` / ``readback_s``
+    (``None`` at higher depths: overlap makes per-phase walls lie).
+
     Bitwise-equal to ``ops.stencil_run(x, spec, n_steps, bx=bx, bt=bt,
-    variant=variant)`` for every supported spec; the in-core engine on
-    a forced-small budget is the differential oracle in tests.
+    variant=variant)`` for every supported spec **in either pipeline
+    mode**; the in-core engine on a forced-small budget is the
+    differential oracle in tests.
     """
     backend = engine._resolve_engine_backend(backend, interpret)
     interpret = backend == "interpret"
@@ -289,6 +313,28 @@ def stencil_run_outofcore(x, spec: StencilSpec, n_steps: int, *,
     nxt = np.empty_like(cur)
     n_tiles = -(-extent // tile)
 
+    if pipeline not in ("host", "kernel"):
+        raise ValueError(f"pipeline must be 'host' or 'kernel', got "
+                         f"{pipeline!r}")
+    requested = pipeline
+    fallback_reason = ""
+    if pipeline == "kernel":
+        ok, why = engine.kernel_pipeline_supported(
+            spec, backend=backend, batched=batched,
+            has_source=has_src, has_aux=bool(aux_names),
+            has_scalars=scalars is not None)
+        if not ok:
+            pipeline, fallback_reason = "host", why
+
+    timing = metrics is not None
+    # Per-phase walls are only attributable when phases are serialized;
+    # at depth > 1 upload/compute/readback deliberately overlap, so
+    # only the aggregate wall is reported there.
+    phased = timing and depth <= 1
+    acc = {"upload_s": 0.0, "compute_s": 0.0, "readback_s": 0.0,
+           "n_dispatches": 0, "n_chunks": 0}
+    wall0 = time.perf_counter()
+
     off = 0
     for bts in schedule:
         g = spec.halo(bts)
@@ -299,12 +345,61 @@ def stencil_run_outofcore(x, spec: StencilSpec, n_steps: int, *,
 
         def drain_one():
             t0, t1, start, out = in_flight.popleft()
+            rb0 = time.perf_counter()
             host = np.asarray(out)      # blocks on this tile only
+            acc["readback_s"] += time.perf_counter() - rb0
             src = [slice(None)] * host.ndim
             src[ga] = slice(t0 - start, t1 - start)   # owned slices
             dst = [slice(None)] * nxt.ndim
             dst[ga] = slice(t0, t1)
             nxt[tuple(dst)] = host[tuple(src)]
+
+        if pipeline == "kernel":
+            # Tiles group into device-sized chunks; each chunk is ONE
+            # persistent pallas_call streaming its tiles through VMEM.
+            # Sizing: a chunk in flight holds its clipped input slab
+            # (~K*tile + 2g slices) plus its owned output (K*tile), and
+            # ``depth`` chunks are in flight at once.
+            per_slice = (int(np.prod(grid_shape[1:], dtype=np.int64))
+                         * dtype.itemsize)
+            if hbm_budget is not None:
+                slices = hbm_budget // (max(depth, 1) * per_slice)
+                K = max(1, int((slices - 2 * g) // (2 * tile)))
+            else:
+                K = n_tiles
+            K = min(K, n_tiles)
+            n_chunks = -(-n_tiles // K)
+            acc["n_chunks"] = n_chunks
+            acc["tiles_per_chunk"] = K
+            for ci in range(n_chunks):
+                c0 = ci * K * tile
+                c1 = min(c0 + K * tile, extent)
+                start = max(c0 - g, 0)
+                end = min(c1 + g, extent)
+                up0 = time.perf_counter()
+                chunk = jax.device_put(_slab(cur, start, end, ga))
+                if phased:
+                    jax.block_until_ready(chunk)
+                acc["upload_s"] += time.perf_counter() - up0
+                cp0 = time.perf_counter()
+                out = engine.stencil_call_persistent(
+                    chunk, spec, bx=bx, bt=bts,
+                    tile=min(tile, end - start), lead=c0 - start,
+                    owned=c1 - c0, backend=backend)
+                if phased:
+                    jax.block_until_ready(out)
+                acc["compute_s"] += time.perf_counter() - cp0
+                acc["n_dispatches"] += 1
+                # The persistent call returns exactly the owned slices,
+                # so the drain's crop is the identity (start == t0).
+                in_flight.append((c0, c1, c0, out))
+                if len(in_flight) >= depth:
+                    drain_one()
+            while in_flight:
+                drain_one()
+            cur, nxt = nxt, cur
+            off += bts
+            continue
 
         for ti in range(n_tiles):
             t0 = ti * tile
@@ -325,11 +420,15 @@ def stencil_run_outofcore(x, spec: StencilSpec, n_steps: int, *,
             # taps through different XLA ops — measured 1-ulp drift.)
             start = max(t0 - g, 0)
             end = min(t1 + g, extent)
+            up0 = time.perf_counter()
             slab = jax.device_put(_slab(cur, start, end, ga))
             src_slab = (jax.device_put(_slab(src_host, start, end, ga))
                         if has_src else None)
             aux_slabs = [jax.device_put(_slab(a, start, end, ga))
                          for a in aux_host]
+            if phased:
+                jax.block_until_ready((slab, src_slab, aux_slabs))
+            acc["upload_s"] += time.perf_counter() - up0
             # Key = everything that determines the compiled program:
             # slab length + the non-leading dims (the grid's total
             # leading extent deliberately excluded — same-slab grids
@@ -340,7 +439,12 @@ def stencil_run_outofcore(x, spec: StencilSpec, n_steps: int, *,
                  has_src, end - start, other_dims, str(dtype),
                  None if scal is None else scal.shape),
                 spec, bx, bts, variant, backend, aux_names, donate)
+            cp0 = time.perf_counter()
             out = dispatch(slab, src_slab, aux_slabs, scal_dev)
+            if phased:
+                jax.block_until_ready(out)
+            acc["compute_s"] += time.perf_counter() - cp0
+            acc["n_dispatches"] += 1
             in_flight.append((t0, t1, start, out))
             if len(in_flight) >= depth:
                 drain_one()
@@ -348,4 +452,19 @@ def stencil_run_outofcore(x, spec: StencilSpec, n_steps: int, *,
             drain_one()
         cur, nxt = nxt, cur
         off += bts
+
+    if timing:
+        metrics.update(
+            pipeline_requested=requested, pipeline=pipeline,
+            fallback_reason=fallback_reason, tile=int(tile),
+            depth=int(depth), n_tiles=int(n_tiles),
+            n_sweeps=len(schedule),
+            n_dispatches=acc["n_dispatches"],
+            wall_s=time.perf_counter() - wall0,
+            upload_s=acc["upload_s"] if phased else None,
+            compute_s=acc["compute_s"] if phased else None,
+            readback_s=acc["readback_s"] if phased else None)
+        if pipeline == "kernel":
+            metrics["n_chunks"] = acc["n_chunks"]
+            metrics["tiles_per_chunk"] = acc["tiles_per_chunk"]
     return cur

@@ -1,5 +1,5 @@
 """Multi-backend execution: the differential acceptance matrix, the
-GPU backend's validation gates, the v7 per-backend autotune cache, the
+GPU backend's validation gates, the v8 per-backend autotune cache, the
 corrupt-cache hardening, the unified out-of-core x multi-device error,
 and the perf trajectory / regression gate.
 
@@ -195,7 +195,7 @@ def test_compiler_params_for_selects_per_backend():
 
 
 # --------------------------------------------------------------------------
-# v7 autotune cache: per-backend device specs join the key
+# v8 autotune cache: per-backend device specs + pipeline mode join the key
 # --------------------------------------------------------------------------
 
 def test_device_spec_registry():
@@ -210,8 +210,8 @@ def test_device_spec_registry():
     assert pm.CPU_HOST.vmem_bytes == pm.V5E.vmem_bytes
 
 
-def test_cache_version_is_7():
-    assert autotune._CACHE_VERSION == 7
+def test_cache_version_is_8():
+    assert autotune._CACHE_VERSION == 8
 
 
 def test_backend_joins_cache_key_via_device_spec():
@@ -225,6 +225,19 @@ def test_backend_joins_cache_key_via_device_spec():
                           pm.GPU_GENERIC.name)
     assert len({k_int, k_tpu, k_gpu}) == 3
     assert "cpu-host" in k_int and "gpu-a100-class" in k_gpu
+
+
+def test_pipeline_mode_joins_cache_key():
+    """v8: host-loop vs in-kernel DMA winners must not share a slot —
+    the persistent kernel has different optimal (bx, bt, tile)."""
+    spec = diffusion(2, 1)
+    k_host = autotune._key(spec, (64, 256), "float32", "interpret",
+                           pm.CPU_HOST.vmem_bytes, pm.CPU_HOST.name)
+    k_kern = autotune._key(spec, (64, 256), "float32", "interpret",
+                           pm.CPU_HOST.vmem_bytes, pm.CPU_HOST.name,
+                           pipeline="kernel")
+    assert k_host != k_kern
+    assert k_host.endswith("|plhost") and k_kern.endswith("|plkernel")
 
 
 def test_plan_defaults_to_backend_device_spec(tmp_path, monkeypatch):
@@ -434,6 +447,45 @@ def test_trajectory_append_only_and_noise_band(tmp_path):
         "samples"] == [100.0, 120.0]
 
 
+def test_trajectory_fraction_kind_and_gate_rule():
+    """Measured overlap fractions: absolute noise band, min as the
+    representative (lower is better), absolute gate allowance."""
+    import sys
+    sys.path.insert(0, "tools")
+    try:
+        import perf_gate
+    finally:
+        sys.path.pop(0)
+    from benchmarks import trajectory as tj
+
+    payload = {"generated_by": "benchmarks.outofcore", "rows": [
+        {"name": "outofcore_tile8",
+         "measured_exposed_transfer_fraction": 0.2,
+         "measured_exposed_transfer_fraction_serial": 0.5}]}
+    metrics = tj.extract_metrics(payload)
+    key = "outofcore/outofcore_tile8/measured_exposed_transfer_fraction"
+    assert metrics[key] == {"value": 0.2, "kind": "fraction"}
+    # the _serial twin is context, not a gated metric
+    assert len(metrics) == 1
+
+    t = {"version": tj.TRAJECTORY_VERSION, "entries": []}
+    tj.append(t, metrics, {}, "pr8")
+    tj.append(t, {key: {"value": 0.25, "kind": "fraction"}}, {}, "pr8")
+    slot = t["entries"][0]["metrics"][key]
+    assert slot["value"] == 0.2            # fraction keeps the min
+    # absolute band: spread 0.05 is under the 0.1 floor
+    assert slot["noise"] == pytest.approx(0.1)
+
+    entry = t["entries"][-1]
+    ok_fresh = {key: {"value": 0.35, "kind": "fraction"}}
+    bad_fresh = {key: {"value": 0.75, "kind": "fraction"}}
+    # allowed = 0.2 + 0.1 (noise) + 0.1 * 1.0 (margin) = 0.4
+    failures, passes, _ = perf_gate.check(ok_fresh, entry, margin=1.0)
+    assert passes and not failures
+    failures, _, _ = perf_gate.check(bad_fresh, entry, margin=1.0)
+    assert len(failures) == 1 and "fraction" in failures[0]
+
+
 def test_perf_gate_passes_then_fails_on_degraded_fixture(tmp_path):
     """The acceptance demo: the gate passes on the records the
     trajectory was built from, and fails on a synthetically degraded
@@ -499,7 +551,7 @@ def test_committed_trajectory_is_valid_and_gateable():
     last = t["entries"][-1]
     assert last["metrics"]
     for key, m in last["metrics"].items():
-        assert m["kind"] in ("time", "rate", "count"), key
+        assert m["kind"] in ("time", "rate", "count", "fraction"), key
         assert "value" in m and "noise" in m and m["samples"], key
     # headline summaries exist for the GCell/s-reporting suites
     assert any("best_gcells_per_s" in h

@@ -5,7 +5,7 @@ fuse-group analysis, the multi-sweep engine dispatch
 (``engine.stencil_call_program``), the scheduler
 (``ops.stencil_program_run``) against the pure-jnp oracle and against
 composed NumPy goldens, dispatch accounting, the program-aware
-autotuner cache (v7 rejects v6 files), the serving bucket key, and the
+autotuner cache (v8 rejects older files), the serving bucket key, and the
 forced-multi-device sharded runner.
 
 Property tests (random 2-3 sweep programs) run under hypothesis when
@@ -418,7 +418,7 @@ if HAVE_HYPOTHESIS:
 
 
 # --------------------------------------------------------------------------
-# autotune: program plans and the v7 cache version gate
+# autotune: program plans and the v8 cache version gate
 # --------------------------------------------------------------------------
 
 def test_autotune_plans_a_program(tmp_path, monkeypatch):
@@ -448,13 +448,13 @@ def test_autotune_rejects_v6_cache(tmp_path, monkeypatch, caplog):
         tuned = autotune.plan((48, 260), diffusion(2, 1),
                               backend="interpret", n_steps=4,
                               measure=True)
-    assert "version 6" in caplog.text and "version 7" in caplog.text
+    assert "version 6" in caplog.text and "version 8" in caplog.text
     # every v6 winner is dropped from the live cache...
     assert stale_key not in autotune._load_cache()
-    # ...and the re-measured winner persists under a v7 stamp
+    # ...and the re-measured winner persists under a v8 stamp
     assert tuned.source == "measured"
     data = json.loads(path.read_text())
-    assert data["version"] == autotune._CACHE_VERSION == 7
+    assert data["version"] == autotune._CACHE_VERSION == 8
     assert stale_key not in data
 
 

@@ -438,7 +438,8 @@ def test_cache_key_carries_ir_fields():
     assert len(keys) == 4        # boundary / layout / aux+scalars split
     k = autotune._key(base, (16, 256), "float32", "reference", vm, "v5e")
     assert "|nd1|" in k          # device suffix still present
-    assert k.endswith("|hb-")    # HBM-budget suffix terminal (v5)
+    assert "|hb-|" in k          # HBM-budget suffix present (v5)
+    assert k.endswith("|plhost")  # pipeline-mode suffix terminal (v8)
 
 
 def test_blockplan_counts_aux_traffic():

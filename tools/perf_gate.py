@@ -13,6 +13,11 @@ exits non-zero when any tracked metric regressed beyond its allowance:
     ``fresh > recorded * (1 + noise + margin)``;
   * ``rate`` metrics (higher is better) fail when
     ``fresh < recorded / (1 + noise + margin)``;
+  * ``fraction`` metrics (measured exposed-overlap fractions, lower is
+    better, already in [0, 1]) fail when
+    ``fresh > recorded + noise + 0.1 * margin`` — both allowances are
+    *absolute*, since a relative band around a near-zero fraction
+    would let overlap silently stop working;
 
 where ``noise`` is the metric's recorded noise band (relative spread
 of the repeated samples behind the trajectory entry) and ``margin``
@@ -76,6 +81,12 @@ def check(fresh: dict, entry: dict, margin: float) -> tuple[list, list,
             ok = value <= allowed
             detail = (f"{key}: {value:.6g} vs recorded {recorded:.6g} "
                       f"(allowed <= {allowed:.6g}) [time, "
+                      f"noise={noise:.2f}, margin={margin:g}]")
+        elif kind == "fraction":
+            allowed = recorded + noise + 0.1 * margin
+            ok = value <= allowed
+            detail = (f"{key}: {value:.6g} vs recorded {recorded:.6g} "
+                      f"(allowed <= {allowed:.6g}) [fraction, "
                       f"noise={noise:.2f}, margin={margin:g}]")
         else:   # rate
             allowed = recorded / (1.0 + noise + margin)
