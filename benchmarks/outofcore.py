@@ -22,7 +22,13 @@ shape moves it:
     ``tools/perf_gate.py`` — see ``docs/pipelining.md``);
   * **in-kernel pipeline** — one tile re-runs with
     ``pipeline="kernel"`` (the persistent kernel that DMAs its own
-    tiles), asserted bitwise-equal and reported as its own row.
+    tiles), asserted bitwise-equal and reported as its own row;
+  * **sharded scaling** — on hosts exposing >= 2 devices (CI's
+    forced-4-device job), the composed out-of-core x multi-device
+    runner adds ``outofcore_sharded_nd{N}`` rows (per-device slab
+    streaming, tile-granular halo exchange), each asserted
+    bitwise-equal to the same in-core oracle and reporting the
+    halo-exchange volume from the runner's metrics.
 
 ``--smoke`` is the CI gate: a tiny grid under a forced ~1 MiB HBM
 budget (so tiling genuinely engages on the host backend), with every
@@ -220,6 +226,51 @@ def run(smoke: bool = False) -> list[dict]:
         "roofline": None,
     })
 
+    # Sharded scaling rows: the composed out-of-core x multi-device
+    # runner (per-device slabs, tile-granular halo exchange) at every
+    # device count the host exposes, each asserted bitwise-equal to
+    # the same in-core oracle. On a 1-device host these rows are
+    # absent; CI's forced-4-device job makes them appear.
+    for nd in (2, 4):
+        if jax.device_count() < nd:
+            continue
+        smet: dict = {}
+        run_s = lambda m=None, n=nd: stencil_run_outofcore(  # noqa: E731
+            x, spec, n_steps, bx=bx, bt=bt, interpret=interpret,
+            tile=tile_k, n_devices=n, metrics=m)
+        got_s = run_s(smet)
+        np.testing.assert_array_equal(
+            got_s, want,
+            err_msg=f"sharded out-of-core (n_devices={nd}) diverged "
+                    f"from in-core")
+        t_s = _time(lambda: run_s())
+        tp = TilePlan(spec, shape, bx=bx, bt=bt, tile=tile_k,
+                      itemsize=4)
+        terms = pm.outofcore_roofline(tp, n_steps, n_devices=nd)
+        rows.append({
+            "name": f"outofcore_sharded_nd{nd}",
+            "us": t_s * 1e6,
+            "derived": (f"{cell_updates / t_s / 1e9:.3f} GCell/s "
+                        f"n_devices={smet.get('n_devices')} "
+                        f"slabs={smet.get('slab_extents')} "
+                        f"halo_rows={smet.get('halo_rows_exchanged')} "
+                        f"bitwise==incore"),
+            "gcells_per_s": cell_updates / t_s / 1e9,
+            "config": {"bx": bx, "bt": bt, "tile": tile_k,
+                       "n_devices": nd,
+                       "slab_extents": smet.get("slab_extents"),
+                       "halo_rows_exchanged":
+                           smet.get("halo_rows_exchanged"),
+                       "halo_bytes_exchanged":
+                           smet.get("halo_bytes_exchanged")},
+            "roofline": {
+                "t_outofcore_us": terms.t_outofcore * 1e6,
+                "t_collective_us": terms.t_collective * 1e6,
+                "exposed_transfer_fraction":
+                    terms.exposed_transfer_fraction,
+            },
+        })
+
     if smoke:
         # Auto-routing gate: the same problem through the public entry
         # point under the forced budget must take the out-of-core path
@@ -228,6 +279,18 @@ def run(smoke: bool = False) -> list[dict]:
                                  backend=backend, hbm_budget=budget)
         assert isinstance(routed, np.ndarray), type(routed)
         np.testing.assert_array_equal(routed, want)
+        if jax.device_count() >= 4:
+            # Sharded gate (forced-4-device CI): the public entry with
+            # a budget under the ghost-charged per-device shard must
+            # take the COMPOSED route and stay bitwise-equal.
+            from repro.core.blocking import shard_resident_bytes
+            shard_b = shard_resident_bytes(spec, shape, 4, n_devices=4,
+                                           bt=bt)
+            routed_s = ops.stencil_run(x, spec, n_steps, bx=bx, bt=bt,
+                                       backend=backend, n_devices=4,
+                                       hbm_budget=shard_b - 1)
+            assert isinstance(routed_s, np.ndarray), type(routed_s)
+            np.testing.assert_array_equal(routed_s, want)
     return rows
 
 

@@ -209,6 +209,34 @@ def incore_resident_bytes(spec: StencilSpec, grid_shape: Tuple[int, ...],
     return cells * itemsize * (2 + len(spec.aux) + extra_streams)
 
 
+def shard_resident_bytes(spec: StencilSpec, grid_shape: Tuple[int, ...],
+                         itemsize: int = 4, *, n_devices: int = 1,
+                         bt: int = 1, batch: int = 1,
+                         extra_streams: int = 0) -> int:
+    """Per-device HBM working set of an in-core *sharded* run.
+
+    ``incore_resident_bytes`` split over the deep-halo partition rule
+    (``shard_extent``) — but a shard is not 1/n of the grid: every
+    device also holds the ``r*bt``-deep ghost slices its slab carries
+    per side, for every resident stream. Near the routing threshold
+    that ghost charge is the difference between an in-core sharded run
+    that fits and one that OOMs, so the out-of-core routing predicate
+    (``outofcore.route_decision``) must use this, not the bare
+    division. Capped at the whole grid: a clipped first/last slab (or
+    a ghost deeper than the grid) never holds more than everything.
+    """
+    resident = incore_resident_bytes(spec, grid_shape, itemsize, batch,
+                                     extra_streams)
+    if n_devices <= 1:
+        return resident
+    extent = grid_shape[0]
+    # Exact by construction: resident = extent * (bytes per leading
+    # slice across all streams).
+    per_slice = resident // extent
+    slab = shard_extent(extent, n_devices) + 2 * spec.halo(bt)
+    return per_slice * min(slab, extent)
+
+
 @dataclasses.dataclass(frozen=True)
 class TilePlan:
     """Out-of-core decomposition: leading-axis tiles + deep ghosts.

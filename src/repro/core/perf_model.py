@@ -264,8 +264,20 @@ def stencil_roofline(plan: BlockPlan, n_steps: int, tpu: TpuSpec = V5E,
 def outofcore_roofline(tile_plan: TilePlan, n_steps: int,
                        tpu: TpuSpec = V5E,
                        read_amplification: float = 1.0,
-                       transfer_overlap: bool = True) -> RooflineTerms:
+                       transfer_overlap: bool = True,
+                       n_devices: int = 1) -> RooflineTerms:
     """Roofline terms for a host-streaming out-of-core run.
+
+    ``n_devices > 1`` models the composed runner (each device streams
+    its own leading-axis slab's tiles concurrently): the device-side
+    and host-streaming *times* divide by the device count — the byte
+    and flop totals stay aggregate — the per-tile dispatch term does
+    NOT (launches issue from one host thread), and the tile-granular
+    halo exchange adds a collective term: ``2*ghost`` slices per
+    interior seam per sweep, charged at ``tpu.ici_bw`` like the
+    in-core sharded model, composing with ``t_host`` through
+    ``t_outofcore`` (``t_collective`` raises the predicted device-side
+    envelope the host link must hide under).
 
     On-device terms are the in-core ones (each slab runs the unchanged
     single-device engine), plus the host<->device streaming term: every
@@ -303,14 +315,24 @@ def outofcore_roofline(tile_plan: TilePlan, n_steps: int,
     # Per-tile launches, not per-sweep: the dispatch term scales with
     # the tile count (another reason small tiles lose).
     t_disp = sweeps * tile_plan.n_tiles * tpu.dispatch_overhead_s
-    return dataclasses.replace(base,
-                               t_compute=base.t_compute * amp,
-                               t_memory=base.t_memory * amp,
-                               flops=base.flops * amp,
-                               hbm_bytes=base.hbm_bytes * amp,
-                               t_host=host / tpu.host_bw,
-                               host_bytes=host, t_dispatch=t_disp,
-                               transfer_overlap=transfer_overlap)
+    n = max(1, min(n_devices, tile_plan.leading))
+    coll = 0
+    if n > 1:
+        coll = (sweeps * 2 * tile_plan.ghost * (n - 1)
+                * tile_plan._per_slice * tile_plan.itemsize)
+    return dataclasses.replace(
+        base,
+        t_compute=base.t_compute * amp / n,
+        t_memory=base.t_memory * amp / n,
+        flops=base.flops * amp,
+        hbm_bytes=base.hbm_bytes * amp,
+        t_host=host / tpu.host_bw / n,
+        host_bytes=host,
+        t_collective=(coll / tpu.ici_bw if coll
+                      else base.t_collective),
+        collective_bytes=coll if coll else base.collective_bytes,
+        t_dispatch=t_disp,
+        transfer_overlap=transfer_overlap)
 
 
 def predict_gcells_per_s(plan: BlockPlan, n_steps: int, tpu: TpuSpec = V5E,

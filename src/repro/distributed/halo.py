@@ -71,6 +71,8 @@ the parity of each path against a loop of single-problem runs.
 """
 from __future__ import annotations
 
+import warnings
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -157,6 +159,50 @@ def exchange_halos(xs: jax.Array, h: int, n: int, axis_name: str = AXIS,
     """
     return exchange_packed(_sl(xs, None, h, ax), _sl(xs, -h, None, ax),
                            n, axis_name)
+
+
+def gather_slab(slabs, bounds, start: int, end: int, *, ax: int = 0,
+                owner: int | None = None):
+    """Assemble global leading-axis rows ``[start, end)`` from
+    per-device **host-resident** slab buffers — the tile-granular
+    exchange entry point of the composed out-of-core × multi-device
+    runner (``outofcore.stencil_run_outofcore(n_devices > 1)``).
+
+    This is ``exchange_packed`` replayed one memory level up: where
+    the in-core sharded runner ppermutes ``r*bt``-deep strips between
+    device HBMs once per sweep, here each *tile* dispatch pulls
+    exactly the rows its clipped slab needs from whichever host
+    buffers own them — its own shard's rows plus up to ``r*bt``
+    foreign rows per side (more when a ghost is deeper than a
+    neighbor's whole slab: the walk spans as many owners as the range
+    crosses, so tiny shards under deep fused blocks stay exact).
+
+    ``slabs[d]`` holds the rows ``bounds[d] = (lo, hi)`` of the global
+    grid along array axis ``ax`` (``ax=1`` for batched grids).
+    Returns ``(rows, foreign)``: the contiguous assembly — a zero-copy
+    view when a single buffer covers the range — and the number of
+    rows pulled from buffers other than ``bounds[owner]`` (0 when
+    ``owner`` is None), the runner's halo-traffic accounting.
+    """
+    if not (0 <= start < end):
+        raise ValueError(f"need 0 <= start < end, got [{start}, {end})")
+    pieces = []
+    foreign = covered = 0
+    for d, (lo, hi) in enumerate(bounds):
+        s, e = max(start, lo), min(end, hi)
+        if s >= e:
+            continue
+        pieces.append(_sl(slabs[d], s - lo, e - lo, ax))
+        covered += e - s
+        if owner is not None and d != owner:
+            foreign += e - s
+    if covered != end - start:
+        raise ValueError(
+            f"rows [{start}, {end}) not fully covered by slab bounds "
+            f"{list(bounds)} ({covered} of {end - start} rows found)")
+    if len(pieces) == 1:
+        return pieces[0], foreign
+    return np.concatenate(pieces, axis=ax), foreign
 
 
 def _engine_call(slab, specs, bx, bts, variant, interpret, extras, scals,
@@ -516,9 +562,10 @@ def stencil_program_run_sharded(fields: dict, program, n_steps: int, *,
     over a batch-sharded batch).
 
     Returns the fields dict. Unbatched grids shard the leading grid
-    axis; a ``[B, *grid]`` batch requires ``B % n_devices == 0`` and
-    shards whole problems (grid-sharding a batched multi-field program
-    is not implemented — pad the batch or drop to one device).
+    axis; a ``[B, *grid]`` batch shards whole problems when ``B %
+    n_devices == 0`` and otherwise falls back — with a warning — to
+    grid sharding of the grid's leading axis (array axis 1, the whole
+    batch riding on every device; per-problem scalars replicate).
     """
     from repro.core.stencil import StencilProgram
     from repro.kernels.ops import _tslice as _tsl
@@ -566,16 +613,24 @@ def stencil_program_run_sharded(fields: dict, program, n_steps: int, *,
     group_meta = tuple(group_meta)
     max_gr = max(m[4] for m in group_meta)
 
-    if batched:
-        if primary.shape[0] % n:
-            raise NotImplementedError(
-                f"batched sharded program runs need B % n_devices == 0 "
-                f"(got B={primary.shape[0]}, n_devices={n}); pad the "
-                f"batch or run on one device")
+    ga = 0
+    if batched and primary.shape[0] % n == 0:
         strategy, extent, S = "batch", primary.shape[0], primary.shape[0]
     else:
+        if batched:
+            # Grid sharding is legal for any B (the whole batch rides
+            # on every device, array axis 1 is split) — it just trades
+            # zero halo traffic for some, so say so instead of erroring.
+            warnings.warn(
+                f"batched sharded program run with B="
+                f"{primary.shape[0]} not divisible by n_devices={n}: "
+                f"falling back from batch-axis to grid sharding (array "
+                f"axis 1; same results, halo traffic instead of none). "
+                f"Pad the batch to a multiple of {n} to restore "
+                f"batch-axis sharding.", stacklevel=2)
         strategy = "grid"
-        extent = primary.shape[0]
+        ga = 1 if batched else 0
+        extent = primary.shape[ga]
         S = shard_extent(extent, n)
         if max_gr > S:
             raise ValueError(
@@ -603,9 +658,12 @@ def stencil_program_run_sharded(fields: dict, program, n_steps: int, *,
     per_scal = []
     for k in scal_names:
         a = jnp.asarray(scalars[k], jnp.float32)
-        if strategy == "batch" and a.ndim == 3:
+        if a.ndim == 3:
+            # Per-problem values: shard with their problems under
+            # batch-axis sharding, replicate whole under grid sharding
+            # (every device holds the full batch there).
             a = a.reshape(primary.shape[0], n_steps, -1)
-            per_scal.append(True)
+            per_scal.append(strategy == "batch")
         else:
             a = a.reshape(n_steps, -1)
             per_scal.append(False)
@@ -613,7 +671,7 @@ def stencil_program_run_sharded(fields: dict, program, n_steps: int, *,
 
     if strategy == "grid" and S * n != extent:
         pad = [(0, 0)] * primary.ndim
-        pad[0] = (0, S * n - extent)
+        pad[ga] = (0, S * n - extent)
         padf = lambda a: jnp.pad(a, pad)
     else:
         padf = lambda a: a
@@ -625,7 +683,7 @@ def stencil_program_run_sharded(fields: dict, program, n_steps: int, *,
     mesh = _device_mesh(n, devices)
     key = ("program", program, tuple(a.shape for a in args),
            str(dt), bx, schedule, variant, interpret, n, S, extent,
-           overlap, axis_name, fuse, strategy, tuple(per_scal),
+           overlap, axis_name, fuse, strategy, ga, tuple(per_scal),
            tuple(int(d.id) for d in np.asarray(mesh.devices).flat))
     runner = _program_sharded_runner(
         program, mesh, key=key, group_meta=group_meta, h_max=h_max,
@@ -633,17 +691,18 @@ def stencil_program_run_sharded(fields: dict, program, n_steps: int, *,
         n=n, S=S, extent=extent, overlap=overlap, axis_name=axis_name,
         field_names=field_names, input_names=input_names,
         scal_names=scal_names, per_scal=tuple(per_scal),
-        strategy=strategy)
+        strategy=strategy, ga=ga)
     outs = runner(*args)
     if strategy == "grid" and S * n != extent:
-        outs = tuple(_sl(o, None, extent, 0) for o in outs)
+        outs = tuple(_sl(o, None, extent, ga) for o in outs)
     return dict(zip(field_names, outs))
 
 
 def _program_sharded_runner(program, mesh, *, key, group_meta, h_max,
                             schedule, bx, variant, interpret, n, S,
                             extent, overlap, axis_name, field_names,
-                            input_names, scal_names, per_scal, strategy):
+                            input_names, scal_names, per_scal, strategy,
+                            ga=0):
     fn = _RUNNERS.get(key)
     if fn is not None:
         return fn
@@ -686,7 +745,7 @@ def _program_sharded_runner(program, mesh, *, key, group_meta, h_max,
             scal_d = dict(zip(scal_names, arrs[nf + ni:]))
             ins_ex = {}
             for nm in input_names:     # step-constant: exchange once
-                ea, eb = exchange_halos(ins[nm], h_max, n, axis_name, 0)
+                ea, eb = exchange_halos(ins[nm], h_max, n, axis_name, ga)
                 ins_ex[nm] = (ea, eb, ins[nm])
             off = 0
             # Each dispatch still exchanges at its own depth (halos=
@@ -701,7 +760,7 @@ def _program_sharded_runner(program, mesh, *, key, group_meta, h_max,
                     for nm in aux_names:
                         if nm in fs:   # evolving: exchange fresh value
                             ea, eb = exchange_halos(fs[nm], h, n,
-                                                    axis_name, 0)
+                                                    axis_name, ga)
                             extras.append((nm, ea, eb, fs[nm]))
                         else:
                             extras.append((nm,) + ins_ex[nm])
@@ -711,13 +770,17 @@ def _program_sharded_runner(program, mesh, *, key, group_meta, h_max,
                         extent=extent, overlap=overlap,
                         axis_name=axis_name, extras=extras,
                         scals=group_scals(scal_d, scal_keys, off, bts),
-                        ax=0)
+                        ax=ga)
                 off += bts
             return tuple(fs[f] for f in field_names)
 
-        in_specs = (P(axis_name),) * (nf + ni)
+        # The sharded axis is the grid's leading axis: array axis ga
+        # (a batched grid-sharded fallback keeps its whole batch on
+        # every device).
+        shard_p = P(*([None] * ga + [axis_name]))
+        in_specs = (shard_p,) * (nf + ni)
         in_specs += (P(),) * len(scal_names)
-        out_specs = (P(axis_name),) * nf
+        out_specs = (shard_p,) * nf
 
     fn = jax.jit(compat.shard_map(
         body, mesh=mesh, in_specs=in_specs,

@@ -43,15 +43,21 @@ from typing import Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.blocking import (BlockPlan, TilePlan,
-                                 incore_resident_bytes, plan_tiles)
+from repro.core.blocking import (BlockPlan, TilePlan, plan_tiles,
+                                 shard_resident_bytes)
 from repro.core.perf_model import (TpuSpec, V5E, device_spec_for,
                                    outofcore_roofline, select_config)
 from repro.core.stencil import StencilSpec
 
 _LOG = logging.getLogger("repro.autotune")
 
-_CACHE_VERSION = 8   # v8: the out-of-core pipeline mode joins the key
+_CACHE_VERSION = 9   # v9: out-of-core × multi-device plans exist —
+# an over-budget grid with n_devices > 1 now PLANS (per-device slab
+# tiles, ghost-charged shard residency in the routing predicate)
+# instead of raising, so the (nd, hb) key combination maps to a
+# different ranking: v8 entries for sharded shapes were ranked under
+# the bare-division threshold and must drop rather than be misread.
+# v8: the out-of-core pipeline mode joins the key
 # (|pl{host|kernel}) — the persistent in-kernel DMA pipeline
 # (engine.stencil_call_persistent) amortizes dispatches over whole
 # chunks, so its winning (bx, bt, tile) need not match the host loop's
@@ -384,21 +390,15 @@ def plan(shape, spec, *, dtype="float32",
     budget = vmem_budget if vmem_budget is not None else tpu.vmem_bytes
     itemsize = jnp.dtype(dtype).itemsize
     hbm = hbm_budget if hbm_budget is not None else tpu.hbm_bytes
-    resident = incore_resident_bytes(spec, grid, itemsize, batch or 1,
-                                     extra_streams)
-    # Per-device: a sharded run holds ~1/nd of the working set per
-    # device (same rule as outofcore.route_decision and the
-    # select_config guard), so only a per-shard overflow is out-of-core.
-    outofcore = -(-resident // max(n_devices, 1)) > hbm
-    if outofcore and n_devices > 1:
-        # Measuring would dispatch stencil_run, which raises this same
-        # error per candidate — every one would silently leave the
-        # race and an unusable "winner" would come back. Fail first,
-        # with the one shared message (outofcore.sharded_outofcore_
-        # error) the execution paths raise, so the remedy reads the
-        # same wherever the combination is hit.
-        from repro.outofcore import sharded_outofcore_error
-        raise sharded_outofcore_error(shape, n_devices, hbm)
+    # Ghost-charged per-device shard residency — the same rule as
+    # outofcore.route_decision (at bt=1; the routing decision must
+    # pre-date the bt choice being planned here): only a per-shard
+    # overflow goes out-of-core. With n_devices > 1 that plans the
+    # COMPOSED path — per-device slab streaming with tile-granular
+    # halo exchange — instead of raising.
+    outofcore = shard_resident_bytes(
+        spec, grid, itemsize, n_devices=max(n_devices, 1),
+        batch=batch or 1, extra_streams=extra_streams) > hbm
     # Keyed on the *effective* budget: plan(hbm_budget=None) and
     # plan(hbm_budget=tpu.hbm_bytes) are the same problem and must hit
     # the same entry — and an entry's meaning must not silently shift
@@ -447,10 +447,15 @@ def plan(shape, spec, *, dtype="float32",
         # is bypassed (2**62) because the whole point here is that the
         # grid does NOT fit.
         ranked = []
+        # n_devices=1 into select_config: the composed runner streams
+        # per-device slab tiles from HOST buffers, so there is no
+        # halo-fits-shard constraint to prune by (and no in-core mesh
+        # whose collective term select_config's own ranking would
+        # price — the re-rank below charges it properly).
         for p in select_config(spec, grid, n_steps, tpu=tpu,
                                top_k=1 << 30,
                                vmem_budget=vmem_budget,
-                               n_devices=eff_nd, batch=eff_batch,
+                               n_devices=1, batch=batch or 1,
                                hbm_budget=2 ** 62, itemsize=itemsize):
             if multi_group and p.bt != 1:
                 continue
@@ -461,11 +466,13 @@ def plan(shape, spec, *, dtype="float32",
                                 extra_streams=extra_streams)
             except ValueError:
                 continue          # this bt's ghosts can't fit: drop it
-            # outofcore ⇒ the resident set exceeds hbm, so plan_tiles
+            # outofcore ⇒ the resident set exceeds hbm (a ghost-charged
+            # shard is never bigger than the whole grid), so plan_tiles
             # (same expression, same budget) can never report an
             # in-core fit here.
             assert tp is not None
-            terms = outofcore_roofline(tp, n_steps, tpu=tpu)
+            terms = outofcore_roofline(tp, n_steps, tpu=tpu,
+                                       n_devices=n_devices)
             ranked.append((terms.t_outofcore + terms.t_dispatch, p, tp))
         if not ranked:
             raise ValueError(

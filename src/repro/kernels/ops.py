@@ -299,10 +299,13 @@ def stencil_run(x: jax.Array, spec: StencilSpec, n_steps: int,
     ``r*bt``-deep ghosts stream through the device, bitwise-equal to
     the in-core path for any tile size. The result is then a *host*
     (numpy) array — it may not fit on the device either. Pass a small
-    explicit ``hbm_budget`` to force the route for testing. Combining
-    with ``n_devices > 1`` is deferred and raises loudly; the
-    ``reference`` backend ignores the budget (the oracle already runs
-    on the host). ``pipeline`` selects the out-of-core streaming mode
+    explicit ``hbm_budget`` to force the route for testing. With
+    ``n_devices > 1`` the routing predicate is per *ghost-charged
+    shard*; when even a shard overflows, each device streams its own
+    slab's tiles with tile-granular halo exchange (grid size bounded
+    only by host RAM — see docs/outofcore.md). The ``reference``
+    backend ignores the budget (the oracle already runs on the
+    host). ``pipeline`` selects the out-of-core streaming mode
     (``"host"`` Python-loop double buffering, or ``"kernel"`` for the
     persistent in-kernel DMA pipeline with automatic host fallback —
     see docs/pipelining.md); it is ignored on in-core runs.
@@ -323,18 +326,19 @@ def stencil_run(x: jax.Array, spec: StencilSpec, n_steps: int,
         # but fits nd shards keeps its in-core deep-halo path.
         routed, budget = route_decision(
             spec, grid, x.dtype.itemsize, hbm_budget, batch=B or 1,
-            extra_streams=int(source is not None), n_devices=nd)
+            extra_streams=int(source is not None), n_devices=nd, bt=bt)
         if routed:
-            if nd > 1:
-                from repro.outofcore import sharded_outofcore_error
-                raise sharded_outofcore_error(x.shape, nd, budget)
+            # nd > 1 composes: each device streams its own slab's
+            # tiles, halos exchanged at tile granularity
+            # (outofcore._stream_sharded) — no in-core mesh is built,
+            # so the gpu shard_map gate below does not apply.
             from repro.outofcore import stencil_run_outofcore
             _count_dispatch(-(-n_steps // bt))
             return stencil_run_outofcore(
                 x, spec, n_steps, bx=bx, bt=bt, variant=variant,
                 backend=backend, hbm_budget=budget,
                 source=source, aux=aux, scalars=scalars,
-                pipeline=pipeline)
+                pipeline=pipeline, n_devices=nd, devices=devices)
     if scalars is not None:
         import jax.numpy as jnp
         scalars = jnp.asarray(scalars, jnp.float32)
@@ -508,12 +512,11 @@ def stencil_program_run(x_or_fields, program, n_steps: int, *,
         program.plan_proxy(), grid, primary.dtype.itemsize, hbm_budget,
         batch=B or 1, n_devices=nd)
     if routed:
-        if nd > 1:
-            from repro.outofcore import sharded_outofcore_error
-            raise sharded_outofcore_error(primary.shape, nd, budget)
         # Host-streaming fallback: one out-of-core blocked sweep per
         # sweep per program step; evolving fields ride as aux operands
-        # and live as host numpy arrays between sweeps.
+        # and live as host numpy arrays between sweeps. nd > 1
+        # composes per sweep: every sweep streams each device's slab
+        # tiles with tile-granular halo exchange.
         from repro.outofcore import stencil_run_outofcore
         fields = {n: np.asarray(a) for n, a in fields.items()}
         for t in range(n_steps):
@@ -528,7 +531,8 @@ def stencil_program_run(x_or_fields, program, n_steps: int, *,
                 fields[s.field] = stencil_run_outofcore(
                     fields[s.field], s.spec, 1, bx=bx, bt=1,
                     variant=variant, backend=backend,
-                    hbm_budget=budget, aux=aux or None, scalars=scal)
+                    hbm_budget=budget, aux=aux or None, scalars=scal,
+                    n_devices=nd, devices=devices)
         return fields[program.fields[0]] if bare else fields
 
     if nd > 1:

@@ -2,12 +2,13 @@
 
 The host-streaming analog of the thesis's "no input-size restriction"
 claim — host memory plays the FPGA's external DRAM, device HBM plays
-its block RAM. See ``runner.py`` and ``docs/outofcore.md``.
+its block RAM; ``n_devices > 1`` composes with the deep-halo device
+partition (per-device slab streaming, tile-granular halo exchange).
+See ``runner.py`` and ``docs/outofcore.md``.
 """
 from repro.core.blocking import TilePlan, plan_tiles
 from repro.outofcore.runner import (exceeds_budget, route_decision,
-                                    sharded_outofcore_error,
                                     stencil_run_outofcore)
 
 __all__ = ["TilePlan", "plan_tiles", "exceeds_budget", "route_decision",
-           "sharded_outofcore_error", "stencil_run_outofcore"]
+           "stencil_run_outofcore"]

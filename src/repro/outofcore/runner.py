@@ -63,10 +63,24 @@ the same ghost depth; per-step ``scalars`` slice per sweep (shared
 *grid]`` batch tiles the *grid's* leading axis (array axis 1) with the
 whole batch riding on every slab.
 
-Combining out-of-core tiling with ``n_devices > 1`` sharding is
-deferred: ``kernels/ops.py`` raises a loud ``NotImplementedError``
-rather than guessing at a host-side partition of the device mesh (see
-``docs/outofcore.md`` for the planned composition).
+``n_devices > 1`` composes this runner with the deep-halo partition
+of ``distributed/halo.py``: each device owns a contiguous slab of the
+leading axis (``shard_extent`` — the same partition rule the in-core
+sharded runner uses) held in a per-device **host** buffer, and streams
+that slab's tiles through the identical clipped-slab machinery above,
+interleaved round-robin so all devices compute concurrently with
+``depth`` tiles in flight per device. Halos are exchanged at **tile
+granularity**: each tile's clipped slab is assembled by
+``distributed.halo.gather_slab`` from whichever neighbors' host
+buffers own its ``r*bt``-deep ghost rows (the host-resident analog of
+the sharded runner's packed ppermute — and since ghosts come from
+host buffers, not a neighbor's device shard, there is still no
+``ghost <= shard`` constraint). Every slab is clipped, never padded,
+so each dispatch is the *same jit graph* the single-device path
+compiles — which is why the composed path inherits the bitwise
+contract unchanged (``tests/test_outofcore_sharded.py`` pins it under
+a forced 4-device host platform). Grid size is then bounded only by
+aggregate host RAM; see ``docs/outofcore.md``.
 """
 from __future__ import annotations
 
@@ -79,7 +93,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.blocking import (TilePlan, incore_resident_bytes,
-                                 plan_tiles)
+                                 plan_tiles, shard_extent,
+                                 shard_resident_bytes)
 from repro.core.stencil import StencilSpec
 from repro.kernels import engine
 from repro.kernels.ops import _tslice
@@ -88,62 +103,47 @@ from repro.kernels.ops import _tslice
 def route_decision(spec: StencilSpec, grid_shape, itemsize: int,
                    hbm_budget: Optional[int], batch: int = 1,
                    extra_streams: int = 0,
-                   n_devices: int = 1) -> Tuple[bool, int]:
-    """(route out-of-core?, effective budget) — the ONE predicate both
-    ``ops.stencil_run`` and the serving dispatcher consult. Keeping it
-    here (rather than each caller re-deriving the default budget +
-    threshold) means the two can never disagree — a jitted in-core
-    dispatcher whose traced ``stencil_run`` decides "out-of-core"
-    would crash converting a tracer to numpy.
+                   n_devices: int = 1, bt: int = 1) -> Tuple[bool, int]:
+    """(route out-of-core?, effective budget) — the ONE predicate
+    ``ops.stencil_run``, ``ops.stencil_program_run``, ``autotune.plan``
+    and the serving dispatcher all consult. Keeping it here (rather
+    than each caller re-deriving the default budget + threshold) means
+    they can never disagree — a jitted in-core dispatcher whose traced
+    ``stencil_run`` decides "out-of-core" would crash converting a
+    tracer to numpy.
 
     ``n_devices``: the budget is *per device*, and a sharded run holds
-    only ~1/n of the working set per device (the deep-halo runner's
-    whole point — halos add a few percent, dwarfed by the split), so
-    the comparison divides the resident bytes by the device count:
-    a 20 GB grid sharded 4 ways keeps its in-core deep-halo path on
-    16 GiB devices, exactly as ``perf_model.select_config`` prices it.
+    ~1/n of the working set per device, so the comparison is against
+    ``blocking.shard_resident_bytes``: one shard's owned slices *plus
+    the ``r*bt``-deep ghost slices it carries per side* — the ghost
+    charge is what keeps the threshold honest near the boundary, where
+    the bare division underestimates per-device residency by
+    ``2*r*bt/S`` and would keep an in-core sharded path that OOMs. A
+    20 GB grid sharded 4 ways still keeps its in-core deep-halo path
+    on 16 GiB devices (ghosts are a few percent); only when even a
+    ghost-charged shard overflows does the run stream out-of-core —
+    now composed with the mesh rather than refused
+    (``stencil_run_outofcore(n_devices > 1)``).
     """
     if hbm_budget is None:
         from repro.core.perf_model import V5E
         hbm_budget = V5E.hbm_bytes
-    resident = incore_resident_bytes(spec, tuple(grid_shape), itemsize,
-                                     batch, extra_streams)
-    per_device = -(-resident // max(n_devices, 1))
+    per_device = shard_resident_bytes(
+        spec, tuple(grid_shape), itemsize, n_devices=max(n_devices, 1),
+        bt=bt, batch=batch, extra_streams=extra_streams)
     return per_device > hbm_budget, hbm_budget
-
-
-def sharded_outofcore_error(shape, n_devices: int,
-                            hbm_budget: int) -> NotImplementedError:
-    """The ONE deferral error for out-of-core × ``n_devices > 1``.
-
-    ``autotune.plan``, ``ops.stencil_run`` and ``ops.stencil_program_run``
-    all hit this wall; building the exception here keeps their messages
-    identical (they used to drift word by word) and guarantees every
-    path names the same remedy: the ROADMAP's "Out-of-core ×
-    multi-device" item — each device streaming its own slab's tiles
-    with halo exchanges at tile granularity. Callers ``raise`` the
-    returned exception (returning rather than raising keeps tracebacks
-    pointing at the caller that hit the wall, not at this builder).
-    """
-    return NotImplementedError(
-        f"out-of-core tiling (per-device working set of {tuple(shape)} "
-        f"over {n_devices} devices exceeds hbm_budget={hbm_budget}) "
-        f"cannot yet be combined with sharding: run out-of-core on one "
-        f"device, or raise the budget / device count so each shard "
-        f"fits. The planned composition — each device streaming its "
-        f"own slab's tiles, exchanging r*bt-deep halos at tile "
-        f"granularity — is ROADMAP.md's 'Out-of-core x multi-device' "
-        f"item (see also docs/outofcore.md)")
 
 
 def exceeds_budget(spec: StencilSpec, grid_shape, itemsize: int,
                    hbm_budget: int, batch: int = 1,
-                   extra_streams: int = 0) -> bool:
-    """Whether a single-device in-core run of this problem would
-    overflow the HBM budget — a thin wrapper over ``route_decision``
-    so there is exactly one definition of the threshold."""
+                   extra_streams: int = 0, n_devices: int = 1,
+                   bt: int = 1) -> bool:
+    """Whether an in-core run of this problem (sharded when
+    ``n_devices > 1``, ghost-charged per shard) would overflow the HBM
+    budget — a thin wrapper over ``route_decision`` so there is
+    exactly one definition of the threshold."""
     return route_decision(spec, grid_shape, itemsize, hbm_budget,
-                          batch, extra_streams)[0]
+                          batch, extra_streams, n_devices, bt)[0]
 
 
 # Jitted slab dispatchers, LRU-bounded: one compilation serves every
@@ -209,6 +209,7 @@ def stencil_run_outofcore(x, spec: StencilSpec, n_steps: int, *,
                           hbm_budget: int | None = None,
                           source=None, aux=None, scalars=None,
                           depth: int = 2, pipeline: str = "host",
+                          n_devices: int = 1, devices=None,
                           metrics: dict | None = None) -> np.ndarray:
     """``n_steps`` stencil steps with the grid resident on the *host*.
 
@@ -234,12 +235,26 @@ def stencil_run_outofcore(x, spec: StencilSpec, n_steps: int, *,
       in ``metrics``) when ``engine.kernel_pipeline_supported`` says
       the backend or operand form cannot take it.
 
+    ``n_devices > 1`` composes this runner with the deep-halo
+    partition (module docstring): each device owns a contiguous
+    ``shard_extent`` slab of the leading axis in its own host buffer
+    and streams that slab's tiles — round-robin across devices, so
+    they compute concurrently with ``depth`` tiles in flight each —
+    with every tile slab assembled at tile granularity by
+    ``distributed.halo.gather_slab`` (neighbor host buffers supply the
+    ``r*bt``-deep ghost rows). Same bitwise contract, either pipeline
+    mode; ``devices`` pins the device list (default ``jax.devices()``).
+
     ``metrics``, when a dict is passed, is filled in place with a
     per-run breakdown: the pipeline actually used (+ requested form and
     fallback reason), tile/chunk geometry, dispatch counts, ``wall_s``,
     and — at ``depth <= 1``, where phases are serialized so the split
     is attributable — ``upload_s`` / ``compute_s`` / ``readback_s``
     (``None`` at higher depths: overlap makes per-phase walls lie).
+    Always carries ``n_devices`` / ``slab_extents`` /
+    ``halo_rows_exchanged`` / ``halo_bytes_exchanged`` (the live
+    device count, per-device owned extents, and tile-granular
+    halo-exchange volume — zeros and ``[extent]`` on one device).
 
     Bitwise-equal to ``ops.stencil_run(x, spec, n_steps, bx=bx, bt=bt,
     variant=variant)`` for every supported spec **in either pipeline
@@ -334,6 +349,19 @@ def stencil_run_outofcore(x, spec: StencilSpec, n_steps: int, *,
     acc = {"upload_s": 0.0, "compute_s": 0.0, "readback_s": 0.0,
            "n_dispatches": 0, "n_chunks": 0}
     wall0 = time.perf_counter()
+
+    if n_devices > 1:
+        return _stream_sharded(
+            cur=cur, spec=spec, schedule=schedule, scalars=scalars,
+            bx=bx, variant=variant, backend=backend, tile=tile,
+            hbm_budget=hbm_budget, src_host=src_host,
+            aux_host=aux_host, aux_names=aux_names, has_src=has_src,
+            depth=depth, pipeline=pipeline, requested=requested,
+            fallback_reason=fallback_reason, n_devices=n_devices,
+            devices=devices, ga=ga, extent=extent,
+            grid_shape=grid_shape, dtype=dtype, donate=donate,
+            timing=timing, phased=phased, acc=acc, wall0=wall0,
+            metrics=metrics)
 
     off = 0
     for bts in schedule:
@@ -463,8 +491,201 @@ def stencil_run_outofcore(x, spec: StencilSpec, n_steps: int, *,
             wall_s=time.perf_counter() - wall0,
             upload_s=acc["upload_s"] if phased else None,
             compute_s=acc["compute_s"] if phased else None,
-            readback_s=acc["readback_s"] if phased else None)
+            readback_s=acc["readback_s"] if phased else None,
+            n_devices=1, slab_extents=[int(extent)],
+            halo_rows_exchanged=0, halo_bytes_exchanged=0)
         if pipeline == "kernel":
             metrics["n_chunks"] = acc["n_chunks"]
             metrics["tiles_per_chunk"] = acc["tiles_per_chunk"]
     return cur
+
+
+def _stream_sharded(*, cur, spec, schedule, scalars, bx, variant,
+                    backend, tile, hbm_budget, src_host, aux_host,
+                    aux_names, has_src, depth, pipeline, requested,
+                    fallback_reason, n_devices, devices, ga, extent,
+                    grid_shape, dtype, donate, timing, phased, acc,
+                    wall0, metrics):
+    """The composed sweep loop: per-device slab streaming with
+    tile-granular halo exchange (``stencil_run_outofcore`` with
+    ``n_devices > 1`` — validation, planning and operand prep happen
+    there; this is only the tile traffic).
+
+    Topology: device ``d`` owns global leading-axis rows ``[d*S,
+    min((d+1)*S, extent))`` (``S = shard_extent`` — the in-core
+    sharded runner's partition rule) in its own **host** buffer pair
+    (``cur``/``nxt`` ping-pong, exactly like the solo loop's full-grid
+    pair). Every tile dispatch is the solo loop verbatim — clipped
+    slab, same ``_dispatcher`` LRU, same engine jit graph, hence the
+    same bitwise contract — except the slab rows come from
+    ``halo.gather_slab`` over all owners (the tile-granular exchange;
+    interior tiles touch only their own buffer) and ``device_put``
+    pins the slab to the owning device, which is what makes the shared
+    jitted dispatcher execute there (jax placement-driven dispatch).
+    Tiles interleave round-robin across devices so all devices compute
+    concurrently, draining when ``depth`` tiles per live device are in
+    flight. Step-constant ``source``/aux operands slice from the full
+    host arrays — numerically identical to pre-exchanged halos, as in
+    the in-core sharded runner.
+    """
+    from repro.distributed.halo import _device_mesh, gather_slab
+    mesh_devs = np.asarray(_device_mesh(n_devices, devices).devices)
+    devs = [d for d in mesh_devs.flat]
+    S = shard_extent(extent, n_devices)
+    bounds = []
+    for d in range(n_devices):
+        lo, hi = d * S, min((d + 1) * S, extent)
+        if lo >= hi:
+            break               # short grid: trailing devices own nothing
+        bounds.append((lo, hi))
+    n_live = len(bounds)
+    devs = devs[:n_live]
+    cur_slabs = [np.array(_slab(cur, lo, hi, ga)) for lo, hi in bounds]
+    nxt_slabs = [np.empty_like(s) for s in cur_slabs]
+    tiles_d = [-(-(hi - lo) // tile) for lo, hi in bounds]
+    halo_rows = 0
+    # Bytes of one global leading slice across the primary grid only
+    # (batch included): the unit of halo-exchange accounting.
+    per_slice_b = (cur.size // extent) * dtype.itemsize
+
+    off = 0
+    for bts in schedule:
+        g = spec.halo(bts)
+        scal = (_tslice(scalars, off, off + bts)
+                if scalars is not None else None)
+        scal_devs = (None if scal is None else
+                     [jax.device_put(jnp.asarray(scal), dv)
+                      for dv in devs])
+        in_flight: deque = deque()
+
+        def drain_one():
+            d, t0, t1, start, out = in_flight.popleft()
+            rb0 = time.perf_counter()
+            host = np.asarray(out)      # blocks on this tile only
+            acc["readback_s"] += time.perf_counter() - rb0
+            lo = bounds[d][0]
+            src = [slice(None)] * host.ndim
+            src[ga] = slice(t0 - start, t1 - start)   # owned slices
+            dst = [slice(None)] * host.ndim
+            dst[ga] = slice(t0 - lo, t1 - lo)         # slab-local rows
+            nxt_slabs[d][tuple(dst)] = host[tuple(src)]
+
+        if pipeline == "kernel":
+            # Per-device chunks of K tiles, each ONE persistent
+            # pallas_call on its owner — sizing as in the solo loop.
+            per_slice = (int(np.prod(grid_shape[1:], dtype=np.int64))
+                         * dtype.itemsize)
+            if hbm_budget is not None:
+                slices = hbm_budget // (max(depth, 1) * per_slice)
+                K = max(1, int((slices - 2 * g) // (2 * tile)))
+            else:
+                K = max(tiles_d)
+            K = min(K, max(tiles_d))
+            chunks_d = [-(-t // K) for t in tiles_d]
+            acc["n_chunks"] = sum(chunks_d)
+            acc["tiles_per_chunk"] = K
+            for ci in range(max(chunks_d)):
+                for d in range(n_live):
+                    if ci >= chunks_d[d]:
+                        continue
+                    lo, hi = bounds[d]
+                    c0 = lo + ci * K * tile
+                    c1 = min(c0 + K * tile, hi)
+                    start = max(c0 - g, 0)
+                    end = min(c1 + g, extent)
+                    rows, foreign = gather_slab(cur_slabs, bounds,
+                                                start, end, ax=ga,
+                                                owner=d)
+                    halo_rows += foreign
+                    up0 = time.perf_counter()
+                    chunk = jax.device_put(rows, devs[d])
+                    if phased:
+                        jax.block_until_ready(chunk)
+                    acc["upload_s"] += time.perf_counter() - up0
+                    cp0 = time.perf_counter()
+                    out = engine.stencil_call_persistent(
+                        chunk, spec, bx=bx, bt=bts,
+                        tile=min(tile, end - start), lead=c0 - start,
+                        owned=c1 - c0, backend=backend)
+                    if phased:
+                        jax.block_until_ready(out)
+                    acc["compute_s"] += time.perf_counter() - cp0
+                    acc["n_dispatches"] += 1
+                    # Persistent calls return exactly the owned rows,
+                    # so the drain's crop is the identity (start == c0).
+                    in_flight.append((d, c0, c1, c0, out))
+                    if len(in_flight) >= depth * n_live:
+                        drain_one()
+            while in_flight:
+                drain_one()
+        else:
+            for ti in range(max(tiles_d)):
+                for d in range(n_live):
+                    if ti >= tiles_d[d]:
+                        continue
+                    lo, hi = bounds[d]
+                    t0 = lo + ti * tile
+                    t1 = min(t0 + tile, hi)
+                    start = max(t0 - g, 0)
+                    end = min(t1 + g, extent)
+                    rows, foreign = gather_slab(cur_slabs, bounds,
+                                                start, end, ax=ga,
+                                                owner=d)
+                    halo_rows += foreign
+                    up0 = time.perf_counter()
+                    slab = jax.device_put(rows, devs[d])
+                    src_slab = (jax.device_put(
+                        _slab(src_host, start, end, ga), devs[d])
+                        if has_src else None)
+                    aux_slabs = [jax.device_put(
+                        _slab(a, start, end, ga), devs[d])
+                        for a in aux_host]
+                    if phased:
+                        jax.block_until_ready((slab, src_slab,
+                                               aux_slabs))
+                    acc["upload_s"] += time.perf_counter() - up0
+                    other_dims = cur.shape[:ga] + cur.shape[ga + 1:]
+                    dispatch = _dispatcher(
+                        (spec, bx, bts, variant, backend, aux_names,
+                         donate, has_src, end - start, other_dims,
+                         str(dtype),
+                         None if scal is None else scal.shape),
+                        spec, bx, bts, variant, backend, aux_names,
+                        donate)
+                    cp0 = time.perf_counter()
+                    out = dispatch(slab, src_slab, aux_slabs,
+                                   None if scal_devs is None
+                                   else scal_devs[d])
+                    if phased:
+                        jax.block_until_ready(out)
+                    acc["compute_s"] += time.perf_counter() - cp0
+                    acc["n_dispatches"] += 1
+                    in_flight.append((d, t0, t1, start, out))
+                    if len(in_flight) >= depth * n_live:
+                        drain_one()
+            while in_flight:
+                drain_one()
+        cur_slabs, nxt_slabs = nxt_slabs, cur_slabs
+        off += bts
+
+    result = (cur_slabs[0] if n_live == 1
+              else np.concatenate(cur_slabs, axis=ga))
+    if timing:
+        metrics.update(
+            pipeline_requested=requested, pipeline=pipeline,
+            fallback_reason=fallback_reason, tile=int(tile),
+            depth=int(depth), n_tiles=int(sum(tiles_d)),
+            n_sweeps=len(schedule),
+            n_dispatches=acc["n_dispatches"],
+            wall_s=time.perf_counter() - wall0,
+            upload_s=acc["upload_s"] if phased else None,
+            compute_s=acc["compute_s"] if phased else None,
+            readback_s=acc["readback_s"] if phased else None,
+            n_devices=n_live,
+            slab_extents=[int(hi - lo) for lo, hi in bounds],
+            halo_rows_exchanged=int(halo_rows),
+            halo_bytes_exchanged=int(halo_rows) * per_slice_b)
+        if pipeline == "kernel":
+            metrics["n_chunks"] = acc["n_chunks"]
+            metrics["tiles_per_chunk"] = acc["tiles_per_chunk"]
+    return result

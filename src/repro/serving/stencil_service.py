@@ -121,12 +121,19 @@ class StencilService:
     in-core engine — so ``check=True`` passes unchanged and clients
     cannot tell the difference beyond latency.
     ``metrics["outofcore_dispatches"]`` counts such buckets.
+
+    With ``n_devices > 1`` an oversized bucket additionally **shards**:
+    each device streams its slab of the leading axis through the same
+    out-of-core runner (tile-granular halo exchange between slabs), so
+    the serveable grid is bounded by aggregate host RAM rather than a
+    single device's HBM — still bitwise-equal to the solo in-core run.
     """
 
     def __init__(self, *, max_batch: int = 8, backend: str = "auto",
                  bx: Optional[int] = None, bt: Optional[int] = None,
                  variant: Optional[str] = None, check: bool = False,
-                 hbm_budget: Optional[int] = None):
+                 hbm_budget: Optional[int] = None,
+                 n_devices: Optional[int] = None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         self.max_batch = max_batch
@@ -139,6 +146,11 @@ class StencilService:
         # runner instead of being rejected — huge simulation requests
         # succeed, just at host-streaming bandwidth (docs/outofcore.md).
         self.hbm_budget = hbm_budget
+        # Devices available to one bucket (None/1: solo). Oversized
+        # buckets shard: each device owns a slab of the leading axis
+        # and streams its tiles through the out-of-core runner, so the
+        # serveable grid is bounded by host RAM, not one device's HBM.
+        self.n_devices = n_devices
         self._queue: List[StencilRequest] = []
         # (key, bucket) -> jitted dispatcher; the bucket is part of the
         # cache key because B is a static shape (see docs/serving.md).
@@ -219,7 +231,8 @@ class StencilService:
             from repro.kernels import autotune
             tuned = autotune.plan((bucket,) + shape, work, dtype=dtype,
                                   backend=self.backend, n_steps=n_steps,
-                                  hbm_budget=self.hbm_budget)
+                                  hbm_budget=self.hbm_budget,
+                                  n_devices=self.n_devices or 1)
             bx = bx if bx is not None else tuned.bx
             bt = bt if bt is not None else tuned.bt
             variant = variant if variant is not None else tuned.variant
@@ -229,11 +242,13 @@ class StencilService:
                 return ops.stencil_program_run(
                     xb, program, n_steps, bx=bx, bt=bt,
                     backend=self.backend, variant=variant,
-                    inputs=aux_b or None, hbm_budget=self.hbm_budget)
+                    inputs=aux_b or None, hbm_budget=self.hbm_budget,
+                    n_devices=self.n_devices or 1)
             return ops.stencil_run(xb, work, n_steps, bx=bx, bt=bt,
                                    backend=self.backend, variant=variant,
                                    aux=aux_b or None, scalars=scal_b,
-                                   hbm_budget=self.hbm_budget)
+                                   hbm_budget=self.hbm_budget,
+                                   n_devices=self.n_devices or 1)
 
         # The SAME predicate ops.stencil_run consults (a divergent copy
         # here could jit an "in-core" dispatcher whose traced run then
@@ -241,7 +256,8 @@ class StencilService:
         from repro.outofcore import route_decision
         routed, _ = route_decision(
             work if program is None else program.plan_proxy(), shape,
-            np.dtype(dtype).itemsize, self.hbm_budget, batch=bucket)
+            np.dtype(dtype).itemsize, self.hbm_budget, batch=bucket,
+            n_devices=self.n_devices or 1)
         if self.backend != "reference" and routed:
             # Oversized bucket: ops.stencil_run auto-routes it through
             # the out-of-core runner. The call stays un-jitted (its
@@ -268,11 +284,13 @@ class StencilService:
             return ops.stencil_program_run(
                 jnp.asarray(r.x), r.program, r.n_steps, bx=bx, bt=bt,
                 variant=variant, backend=self.backend, inputs=r.aux,
-                hbm_budget=self.hbm_budget)
+                hbm_budget=self.hbm_budget,
+                n_devices=self.n_devices or 1)
         return ops.stencil_run(
             jnp.asarray(r.x), r.spec, r.n_steps, bx=bx, bt=bt,
             variant=variant, backend=self.backend, aux=r.aux,
-            scalars=r.scalars, hbm_budget=self.hbm_budget)
+            scalars=r.scalars, hbm_budget=self.hbm_budget,
+            n_devices=self.n_devices or 1)
 
     def _serve_solo(self, key, chunk, bucket: int
                     ) -> List[StencilCompletion]:

@@ -221,27 +221,73 @@ def test_runner_validates_like_the_engine():
                               interpret=True)
 
 
-def test_outofcore_with_sharding_raises_loudly():
-    """Combined out-of-core + n_devices is deferred: when even a
-    per-device shard overflows the budget, the error must fire before
-    any mesh is built (so it is the same on 1 or 4 visible devices)
-    and name both the condition and the remedy."""
+def test_outofcore_with_sharding_composes(monkeypatch):
+    """Combined out-of-core + n_devices COMPOSES: when even a
+    per-device shard overflows the budget, ops.stencil_run routes
+    through the composed streaming runner (per-device slabs,
+    tile-granular halo exchange) instead of raising. Single visible
+    device here — the routing decision and the handoff are what is
+    pinned (the forced-4-device bitwise matrix lives in
+    tests/test_outofcore_sharded.py)."""
+    import repro.outofcore as ooc
     from repro.kernels import autotune
+    from repro.outofcore import runner
     spec = diffusion(2, 1)
     x = _rand((64, 140))
     ws = incore_resident_bytes(spec, x.shape)
     budget = ws // 8            # < ws/4: overflows even a 4-way shard
-    with pytest.raises(NotImplementedError,
-                       match="out-of-core.*devices"):
-        ops.stencil_run(x, spec, 2, bx=128, bt=1, backend="interpret",
-                        n_devices=4, hbm_budget=budget)
-    # The tuner fails just as loudly up front — otherwise every
-    # measured candidate would hit this error inside _measure's
-    # blanket except, silently leave the race, and hand back an
-    # unusable "winner" before the real run finally raised.
-    with pytest.raises(NotImplementedError, match="devices"):
-        autotune.plan(x.shape, spec, backend="interpret",
-                      n_devices=4, hbm_budget=budget)
+    seen = {}
+    real = runner.stencil_run_outofcore
+
+    def spy(xx, sp, n_steps, **kw):
+        seen.update(n_steps=n_steps, **kw)
+        kw["n_devices"] = 1     # run solo: only 1 device visible here
+        return real(xx, sp, n_steps, **kw)
+
+    # ops imports the runner lazily from the package at call time.
+    monkeypatch.setattr(ooc, "stencil_run_outofcore", spy)
+    want = np.asarray(ops.stencil_run(x, spec, 2, bx=128, bt=1,
+                                      backend="interpret"))
+    got = ops.stencil_run(x, spec, 2, bx=128, bt=1,
+                          backend="interpret", n_devices=4,
+                          hbm_budget=budget)
+    assert seen["n_devices"] == 4       # composed path was asked for
+    assert seen["hbm_budget"] == budget
+    np.testing.assert_array_equal(np.asarray(got), want)
+    # The tuner plans (instead of raising) for the same combination —
+    # otherwise every measured candidate would die inside _measure's
+    # blanket except and hand back an unusable "winner".
+    tuned = autotune.plan(x.shape, spec, backend="interpret",
+                          n_devices=4, hbm_budget=budget,
+                          use_cache=False)
+    assert tuned.bx >= 128 and tuned.bt >= 1
+
+
+def test_route_decision_charges_ghost_bytes_per_shard():
+    """Satellite bugfix: the per-shard residency must include the
+    r*bt-deep ghost slices a slab actually holds. A budget between the
+    ghost-free and ghost-charged per-device bytes used to stay in-core
+    (understating true residency by up to 2*r*bt/S) — it must route
+    out-of-core now."""
+    from repro.core.blocking import shard_resident_bytes
+    from repro.outofcore import route_decision
+    spec = diffusion(2, 1)
+    grid = (64, 140)
+    ws = incore_resident_bytes(spec, grid)
+    per_slice = ws // 64
+    # n_devices=4: S=16 owned slices; ghost-charged slab is S + 2*r*bt.
+    for bt, g in ((1, 1), (2, 2), (4, 4)):
+        free_b = per_slice * 16                    # ghost-free shard
+        charged = shard_resident_bytes(spec, grid, 4, n_devices=4,
+                                       bt=bt)
+        assert charged == per_slice * (16 + 2 * g)
+        boundary = (free_b + charged) // 2         # strictly between
+        routed_lo, _ = route_decision(spec, grid, 4, boundary,
+                                      n_devices=4, bt=bt)
+        assert routed_lo, (bt, boundary)           # the fixed predicate
+        routed_hi, _ = route_decision(spec, grid, 4, charged,
+                                      n_devices=4, bt=bt)
+        assert not routed_hi                       # exact fit stays in-core
 
 
 def test_sharded_run_keeps_incore_path_when_shards_fit(monkeypatch):
